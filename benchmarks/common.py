@@ -1,0 +1,59 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import (AcePolicy, LatsPolicy, NoSlowdown, OrchestratorPolicy,
+                        Runtime, Traverser, build_orchestrators,
+                        build_testbed, heye_traverser)
+
+
+@dataclass
+class Row:
+    name: str
+    value: float
+    unit: str = ""
+    extra: dict = field(default_factory=dict)
+
+
+class Table:
+    """A paper table/figure reproduction: rows of (metric, value)."""
+
+    def __init__(self, figure: str, title: str) -> None:
+        self.figure = figure
+        self.title = title
+        self.rows: list[Row] = []
+        self.t0 = time.time()
+
+    def add(self, name: str, value: float, unit: str = "", **extra) -> None:
+        self.rows.append(Row(name, float(value), unit, extra))
+
+    def print_csv(self) -> None:
+        dt = time.time() - self.t0
+        print(f"# {self.figure}: {self.title}  [{dt:.1f}s]")
+        for r in self.rows:
+            extras = "".join(f",{k}={v}" for k, v in r.extra.items())
+            print(f"{self.figure},{r.name},{r.value:.6g},{r.unit}{extras}")
+
+    def get(self, name: str) -> float:
+        return next(r.value for r in self.rows if r.name == name)
+
+
+def make_policy(name: str, tb):
+    """Fresh policy over a fresh ledger for testbed ``tb``."""
+    if name == "heye":
+        root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+        return OrchestratorPolicy(root)
+    blind = Traverser(tb.graph, slowdown=NoSlowdown(tb.graph))
+    if name == "ace":
+        return AcePolicy(tb.graph, blind)
+    if name == "lats":
+        return LatsPolicy(tb.graph, blind)
+    raise ValueError(name)
+
+
+def mean_latency(stats, cfg) -> float:
+    return float(np.mean([stats.timeline.latency(t) for t in cfg]))

@@ -1,0 +1,48 @@
+"""Fig. 2 reproduction: shared-resource contention factors on an Orin-AGX
+class SoC — the calibration anchors of the slowdown model.  Core-level PUs
+are exposed so the L2 (same cluster) vs L3 (cross cluster) split is visible,
+exactly as the paper measures it."""
+from __future__ import annotations
+
+from repro.core import DecoupledSlowdown, HWGraph, Node, NodeKind, heye_params
+from repro.core.topology import build_edge_device, make_task
+
+from .common import Table
+
+# paper's measured relative speeds (Fig. 2)
+PAPER = {"cpu_l2": 0.91, "cpu_l3": 0.87, "gpu_mt": 0.66,
+         "gpu_dla_dram": 0.68, "cpu_gpu_llc": 0.89}
+
+
+def run() -> Table:
+    t = Table("fig2", "contention factors on Orin AGX (model vs paper)")
+    g = HWGraph()
+    g.add_node(Node("fleet", NodeKind.GROUP, attrs={"orc_level": "root"}))
+    build_edge_device(g, "orin", "orin_agx", parent="fleet", core_level=True)
+    sd = DecoupledSlowdown(g, heye_params())
+
+    def rel_speed(kind_a, pu_a, kind_b, pu_b):
+        f = sd.factor(make_task(kind_a), f"orin.{pu_a}",
+                      [(make_task(kind_b), f"orin.{pu_b}")])
+        return 1.0 / f
+
+    cases = {
+        # two MM threads on cores of ONE cluster -> contend at the private L2
+        "cpu_l2": rel_speed("mm", "cpu0_core0", "mm", "cpu0_core1"),
+        # cores of different clusters -> meet at the L3
+        "cpu_l3": rel_speed("mm", "cpu0_core0", "mm", "cpu1_core0"),
+        # two DNNs multi-tenant on the GPU
+        "gpu_mt": rel_speed("dnn", "gpu", "dnn", "gpu"),
+        # GPU + DLA share DRAM-class memory
+        "gpu_dla_dram": rel_speed("dnn", "dla", "dnn", "gpu"),
+        # CPU + GPU share the 4 MB LLC
+        "cpu_gpu_llc": rel_speed("mm", "cpu0", "mm", "gpu"),
+    }
+    for name, speed in cases.items():
+        t.add(name, speed, "rel_speed", paper=PAPER[name],
+              err_pct=round(abs(speed - PAPER[name]) / PAPER[name] * 100, 2))
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,96 @@
+"""Fig. 12 reproduction: dynamic adaptability.
+
+(a/b) dynamic network bandwidth: throttle one edge's uplink from 10 Gb/s to
+      1 Gb/s; H-EYE re-balances placements and keeps the frame QoS without
+      reducing resolution (CloudVR's strategy, shown for contrast, shrinks
+      the frame — modeled as task size reduction — as soon as comm no
+      longer fits);
+(c)   a new edge joining a running system is re-planned in milliseconds.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Runtime, build_testbed, vr_workload
+from repro.core.workloads import vr_frame_qos_failure
+from repro.core.topology import EDGE_FPS
+
+from .common import Table, make_policy
+
+Gb = 1e9 / 8
+EDGES = {"orin_agx": 1, "xavier_agx": 1, "orin_nano": 1, "xavier_nx": 2}
+SERVERS = {"server1": 1, "server2": 1, "server3": 1}
+
+
+def run() -> Table:
+    t = Table("fig12", "dynamic bandwidth + new edge joining")
+
+    # ---- (a/b) bandwidth throttling on orin_agx ---------------------------
+    for bw_gbps in (10.0, 7.5, 5.0, 2.5, 1.0):
+        tb = build_testbed(edge_counts=EDGES, server_counts=SERVERS)
+        target = tb.edges[0]                      # orin_agx
+        tb.graph.set_bandwidth(f"link_{target}", bw_gbps * Gb)
+        cfg = vr_workload(tb, n_frames=10)
+        stats = Runtime(tb.graph, seed=0).run(cfg, make_policy("heye", tb))
+        fail = vr_frame_qos_failure(cfg, stats.timeline)
+        # resolution kept at 100%: H-EYE re-balances instead of shrinking
+        t.add(f"heye_qos_fail_{bw_gbps}gbps", fail * 100, "%", resolution=100)
+        # how much of the pipeline stayed on servers (re-balancing visible)
+        remote = np.mean([tb.graph.device_of(stats.mapping[x.uid]).name
+                          in tb.servers for x in cfg if x.origin == target])
+        t.add(f"heye_remote_frac_{bw_gbps}gbps", float(remote) * 100, "%")
+
+        # CloudVR-like: placement fixed (render/encode on server); when the
+        # round trip no longer fits the render share, shrink the frame until
+        # it does (resolution = task size scaling)
+        tb2 = build_testbed(edge_counts=EDGES, server_counts=SERVERS)
+        tb2.graph.set_bandwidth(f"link_{tb2.edges[0]}", bw_gbps * Gb)
+        comm = tb2.graph.transfer_time(tb2.edges[0], tb2.servers[1], 250e3)
+        period = 1.0 / EDGE_FPS["orin_agx"]
+        budget = 0.33 * period                   # render+encode pipeline slice
+        base = 6.5e-3 + 2.2e-3
+        resolution = 100.0
+        while (base * (resolution / 100)
+               + comm * (resolution / 100)) > budget and resolution > 25:
+            resolution -= 12.5                   # step down like CloudVR tiers
+        t.add(f"cloudvr_resolution_{bw_gbps}gbps", resolution, "%")
+
+    # ---- (c) new edge joins an active system -----------------------------
+    for scale, (ec, sc) in enumerate((
+            ({"orin_agx": 1, "orin_nano": 1}, {"server1": 1, "server2": 1}),
+            ({"orin_agx": 2, "orin_nano": 2},
+             {"server1": 1, "server2": 1, "server3": 1}),
+            ({"orin_agx": 3, "orin_nano": 3},
+             {"server1": 2, "server2": 2})), 1):
+        tb = build_testbed(edge_counts=ec, server_counts=sc)
+        cfg = vr_workload(tb, n_frames=6)
+        pol = make_policy("heye", tb)
+        stats = Runtime(tb.graph, seed=0).run(cfg, pol)
+        before = vr_frame_qos_failure(cfg, stats.timeline)
+
+        # a xavier_nx joins: extend the SAME graph + orc tree dynamically
+        from repro.core.topology import build_edge_device
+        from repro.core import build_orchestrators, heye_traverser
+        t0 = time.time()
+        build_edge_device(tb.graph, "newcomer", "xavier_nx",
+                          parent="edge_cluster")
+        tb.graph.add_edge("newcomer", "router", bandwidth=1e9,
+                          latency=0.3e-3, name="link_newcomer")
+        tb.edges.append("newcomer")
+        tb.edge_kind["newcomer"] = "xavier_nx"
+        root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+        replan_ms = (time.time() - t0) * 1e3
+        cfg2 = vr_workload(tb, n_frames=6)
+        from repro.core import OrchestratorPolicy
+        stats2 = Runtime(tb.graph, seed=0).run(cfg2, OrchestratorPolicy(root))
+        after = vr_frame_qos_failure(cfg2, stats2.timeline)
+        t.add(f"join_scale{scale}_qos_before", before * 100, "%")
+        t.add(f"join_scale{scale}_qos_after", after * 100, "%")
+        t.add(f"join_scale{scale}_replan", replan_ms, "ms")
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,55 @@
+"""Fig. 14 reproduction: orchestrator scheduling overhead as the system
+scales — overhead ratio (schedule time / task execution time) stays in the
+low single-digit percents, dominated by communication (remote hops), not
+local computation."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Runtime, build_testbed, mining_workload, vr_workload
+
+from .common import Table, make_policy
+
+
+def run() -> Table:
+    t = Table("fig14", "orchestrator scheduling overhead")
+
+    # mining at three scales
+    for mult in (1, 2, 4):
+        ec = {"orin_agx": mult, "xavier_agx": mult,
+              "orin_nano": mult, "xavier_nx": mult}
+        sc = {"server1": mult, "server2": mult}
+        tb = build_testbed(edge_counts=ec, server_counts=sc)
+        # enough sensors that edges saturate and readings escalate to servers
+        cfg = mining_workload(tb, n_sensors=24 * mult, n_readings=3)
+        stats = Runtime(tb.graph, seed=0).run(cfg, make_policy("heye", tb))
+        ratio = stats.mean_overhead_ratio(cfg)
+        t.add(f"mining_x{mult}_overhead", ratio * 100, "%", paper="<2")
+        # communication share of the overhead (paper: >90% is communication)
+        from repro.core import OrcConfig
+        lqc = OrcConfig().local_query_cost
+        comm_oh, total_oh = 0.0, 0.0
+        for uid, oh in stats.overhead.items():
+            q = stats.queries.get(uid, 0)
+            local = q * lqc
+            total_oh += oh
+            comm_oh += max(0.0, oh - local)
+        if total_oh > 0:
+            t.add(f"mining_x{mult}_comm_share", comm_oh / total_oh * 100, "%",
+                  paper=">90")
+
+    # VR at two scales
+    for mult in (1, 2):
+        ec = {"orin_agx": mult, "xavier_agx": mult, "orin_nano": mult,
+              "xavier_nx": 2 * mult}
+        sc = {"server1": mult, "server2": mult, "server3": mult}
+        tb = build_testbed(edge_counts=ec, server_counts=sc)
+        cfg = vr_workload(tb, n_frames=6)
+        stats = Runtime(tb.graph, seed=0).run(cfg, make_policy("heye", tb))
+        t.add(f"vr_x{mult}_overhead", stats.mean_overhead_ratio(cfg) * 100,
+              "%", paper="~4")
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,56 @@
+"""Roofline report over the dry-run artifact (§Roofline deliverable).
+
+Reads results/dryrun.json (written by repro.launch.dryrun) and prints the
+per-(arch x shape x mesh) three-term roofline table: compute / memory /
+collective seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and
+the roofline fraction.  No compilation happens here — run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Table
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun.json")
+
+
+def run() -> Table:
+    t = Table("roofline", "three-term roofline per (arch x shape x mesh)")
+    if not os.path.exists(RESULTS):
+        t.add("missing_results", -1, f"run dryrun first ({RESULTS})")
+        return t
+    with open(RESULTS) as f:
+        recs = json.load(f)
+    n_ok = n_skip = n_fail = 0
+    for key, rec in sorted(recs.items()):
+        name = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+        if rec.get("variant", "baseline") != "baseline":
+            continue
+        if rec["status"] == "skipped":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_fail += 1
+            t.add(f"{name}_FAILED", -1, rec.get("error", "?"))
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        t.add(name, r["roofline_fraction"], "frac",
+              Tc_ms=round(r["t_compute_s"] * 1e3, 2),
+              Tm_ms=round(r["t_memory_s"] * 1e3, 2),
+              Tl_ms=round(r["t_collective_s"] * 1e3, 2),
+              bound=r["bottleneck"],
+              useful=round(r["useful_flops_ratio"], 3),
+              peak_gb=round(rec["memory"]["peak_gb"], 1),
+              fits=rec["memory"]["fits_hbm"])
+    t.add("cells_ok", n_ok, "cells")
+    t.add("cells_skipped", n_skip, "cells (long_500k on quadratic archs)")
+    t.add("cells_failed", n_fail, "cells")
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,63 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all figures
+    PYTHONPATH=src python -m benchmarks.run fig11      # one figure
+
+Prints ``figure,metric,value,unit[,extras]`` CSV per module plus a summary
+of the headline claims vs the paper.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = ("contention", "validation", "vr_perf", "dynamic", "scaling",
+           "overhead", "strategies", "roofline")
+FIG_OF = {"contention": "fig2", "validation": "fig10", "vr_perf": "fig11",
+          "dynamic": "fig12", "scaling": "fig13", "overhead": "fig14",
+          "strategies": "fig15", "roofline": "roofline"}
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    wanted = set(args) if args else None
+    tables = {}
+    t0 = time.time()
+    for mod_name in MODULES:
+        fig = FIG_OF[mod_name]
+        if wanted and fig not in wanted and mod_name not in wanted:
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        table = mod.run()
+        table.print_csv()
+        tables[fig] = table
+        print()
+
+    # headline summary vs the paper's claims
+    if not wanted:
+        print("# headline claims vs paper")
+        try:
+            print(f"headline,fig2_max_calibration_err,"
+                  f"{max(r.extra['err_pct'] for r in tables['fig2'].rows)},%")
+            print(f"headline,prediction_err_heye,"
+                  f"{tables['fig10'].get('mean_err_heye'):.2f},% (paper 3.2)")
+            print(f"headline,prediction_err_blind,"
+                  f"{tables['fig10'].get('mean_err_ace'):.2f},% (paper 27.4)")
+            print(f"headline,latency_improvement_max,"
+                  f"{tables['fig11'].get('improvement_max'):.1f},% "
+                  f"(paper up-to-47)")
+            print(f"headline,frame_qos_heye,"
+                  f"{tables['fig11'].get('frame_qos_failure_heye'):.1f},%")
+            print(f"headline,sched_overhead_mining,"
+                  f"{tables['fig14'].get('mining_x1_overhead'):.2f},% "
+                  f"(paper <2)")
+            print(f"headline,sched_overhead_vr,"
+                  f"{tables['fig14'].get('vr_x1_overhead'):.2f},% (paper ~4)")
+        except StopIteration:
+            pass
+    print(f"# total {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

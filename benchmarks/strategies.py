@@ -1,0 +1,142 @@
+"""Fig. 15 reproduction: alternative assignment strategies.
+
+* default        — edge ORC -> parent hierarchy (Alg. 1)
+* direct-server  — edges query the server cluster ORC directly, skipping
+                   sibling edges (helps VR, hurts mining)
+* sticky         — re-use the previously assigned PU for the same (origin,
+                   kind) while its constraint still holds
+* grouped        — all simultaneously-ready tasks of one origin assigned in
+                   one batch (one overhead charge; de-grouped on failure)
+
+Plus overhead vs load (generation rate scaled 0.75x / 1x / 1.25x).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (OrcConfig, Runtime, build_orchestrators,
+                        build_testbed, heye_traverser, mining_workload,
+                        vr_workload)
+from repro.core.orchestrator import MapResult
+from repro.core.simulator import OrchestratorPolicy
+from repro.core.workloads import vr_frame_qos_failure
+
+from .common import Table, mean_latency
+
+
+class DirectServerPolicy(OrchestratorPolicy):
+    """Bypass edge siblings: constraint-check own device, then go straight
+    to the server cluster's ORC."""
+
+    def __init__(self, root, tb):
+        super().__init__(root)
+        self.server_orc = next(o for o in root.iter_tree()
+                               if o.group == "server_cluster")
+
+    def __call__(self, task, now):
+        orc = self.root.find_device_orc(task.origin)
+        res = orc._traverse_children(task, now)
+        if res is None:
+            res = self.server_orc._traverse_children(task, now)
+            if res is not None:
+                res.hops += 1
+                res.overhead += orc._hop_cost(self.server_orc)
+        if res is None:
+            res = orc.map_task(task, now)      # fall back to full search
+            return res
+        orc.ledger.add(task, res.pu, res.prediction, now)
+        task.assigned_pu = res.pu
+        return res
+
+
+class StickyPolicy(OrchestratorPolicy):
+    """Re-communicate with the PU used for the previous task of this kind."""
+
+    def __init__(self, root):
+        super().__init__(root)
+        self.last: dict[tuple, str] = {}
+
+    def __call__(self, task, now):
+        key = (task.origin, task.kind)
+        orc = self.root.find_device_orc(task.origin)
+        if key in self.last:
+            pu = self.last[key]
+            ok, pred = orc._check_constraints(task, pu, now)
+            if ok:
+                orc.ledger.add(task, pu, pred, now)
+                task.assigned_pu = pu
+                return MapResult(pu=pu, prediction=pred, queries=1,
+                                 overhead=orc.config.local_query_cost)
+        res = orc.map_task(task, now)
+        if res is not None:
+            self.last[key] = res.pu
+        return res
+
+
+class GroupedPolicy(OrchestratorPolicy):
+    """Tasks released at the same instant from one origin share one
+    scheduling round trip (overhead charged once; paper: grouping helps
+    mining, hurts VR when de-grouping kicks in)."""
+
+    def __init__(self, root):
+        super().__init__(root)
+        self._batch: dict[tuple, int] = {}
+
+    def __call__(self, task, now):
+        orc = self.root.find_device_orc(task.origin)
+        res = orc.map_task(task, now)
+        if res is None:
+            return None
+        key = (task.origin, round(now, 9))
+        first = key not in self._batch
+        self._batch[key] = self._batch.get(key, 0) + 1
+        if not first and res.hops > 0:
+            # subsequent members of the batch ride the same message
+            res.overhead = res.queries * orc.config.local_query_cost
+        return res
+
+
+def _policies(tb):
+    def fresh_root():
+        return build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    return {
+        "default": OrchestratorPolicy(fresh_root()),
+        "direct_server": DirectServerPolicy(fresh_root(), tb),
+        "sticky": StickyPolicy(fresh_root()),
+        "grouped": GroupedPolicy(fresh_root()),
+    }
+
+
+def run() -> Table:
+    t = Table("fig15", "assignment strategies + overhead vs load")
+    EC = {"orin_agx": 1, "xavier_agx": 1, "orin_nano": 1, "xavier_nx": 2}
+    SC = {"server1": 1, "server2": 1, "server3": 1}
+
+    # ---- strategy comparison, VR + mining ---------------------------------
+    for app in ("vr", "mining"):
+        for name in ("default", "direct_server", "sticky", "grouped"):
+            tb = build_testbed(edge_counts=EC, server_counts=SC)
+            pol = _policies(tb)[name]
+            if app == "vr":
+                cfg = vr_workload(tb, n_frames=8)
+            else:
+                cfg = mining_workload(tb, n_sensors=12, n_readings=3)
+            stats = Runtime(tb.graph, seed=0).run(cfg, pol)
+            t.add(f"{app}_{name}_latency", mean_latency(stats, cfg) * 1e3,
+                  "ms")
+            t.add(f"{app}_{name}_overhead",
+                  stats.mean_overhead_ratio(cfg) * 100, "%")
+
+    # ---- overhead vs load (generation rate) -------------------------------
+    for label, hz in (("20hz", 20.0), ("10hz", 10.0), ("5hz", 5.0)):
+        tb = build_testbed(edge_counts=EC, server_counts=SC)
+        cfg = mining_workload(tb, n_sensors=12, n_readings=3, hz=hz)
+        pol = _policies(tb)["default"]
+        stats = Runtime(tb.graph, seed=0).run(cfg, pol)
+        t.add(f"mining_load_{label}_overhead",
+              stats.mean_overhead_ratio(cfg) * 100, "%")
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,96 @@
+"""Fig. 10 reproduction: prediction accuracy of H-EYE vs a contention-blind
+ACE-like model against ground truth.
+
+(a) max sensors under the 100 ms threshold on Orin Nano + server-1, with
+    per-design prediction error;
+(b) max deployable sensors as nodes scale (E1..E3 + servers 1,2),
+    predicted vs actual.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (NoSlowdown, Runtime, Traverser, build_orchestrators,
+                        build_testbed, heye_traverser, mining_workload,
+                        OrchestratorPolicy)
+
+from .common import Table
+
+
+def _latency_under(tb, n_sensors: int, traverser, seed=0) -> float:
+    """Mean reading latency for n_sensors scheduled by the H-EYE orchestrator
+    but *predicted* by ``traverser`` (prediction experiment, §5.2)."""
+    cfg = mining_workload(tb, n_sensors=n_sensors, n_readings=3)
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    pol = OrchestratorPolicy(root)
+    rt = Runtime(tb.graph, seed=seed)
+    stats = rt.run(cfg, pol)
+    # prediction of the same frozen mapping by `traverser`
+    pred_tl = traverser.traverse(cfg, stats.mapping)
+    truth_tl = stats.timeline
+    errs = [abs(pred_tl.latency(t) - truth_tl.latency(t)) / truth_tl.latency(t)
+            for t in cfg if truth_tl.latency(t) > 0]
+    return float(np.mean(errs))
+
+
+def run() -> Table:
+    t = Table("fig10", "model validation: H-EYE vs contention-blind (ACE)")
+
+    # (a) Orin Nano + server-1, increasing sensors
+    tb = build_testbed(edge_counts={"orin_nano": 1},
+                       server_counts={"server1": 1})
+    heye = heye_traverser(tb.graph)
+    blind = Traverser(tb.graph, slowdown=NoSlowdown(tb.graph))
+    errs_h, errs_a = [], []
+    for n in (10, 20, 30, 40):
+        e_h = _latency_under(tb, n, heye, seed=n)
+        e_a = _latency_under(tb, n, blind, seed=n)
+        errs_h.append(e_h)
+        errs_a.append(e_a)
+        t.add(f"err_heye_{n}sensors", e_h * 100, "%")
+        t.add(f"err_ace_{n}sensors", e_a * 100, "%")
+    t.add("mean_err_heye", float(np.mean(errs_h)) * 100, "%", paper=3.2)
+    t.add("mean_err_ace", float(np.mean(errs_a)) * 100, "%", paper=27.4)
+
+    # (b) capacity estimation as the system scales: how many sensors fit
+    # under 100 ms?  (predicted by each model vs ground truth)
+    def max_sensors(tb, predict_traverser, truth: bool, seed=1) -> int:
+        best = 0
+        for n in range(10, 121, 10):
+            cfg = mining_workload(tb, n_sensors=n, n_readings=2)
+            root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+            stats = Runtime(tb.graph, seed=seed).run(
+                cfg, OrchestratorPolicy(root))
+            tl = (stats.timeline if truth
+                  else predict_traverser.traverse(cfg, stats.mapping))
+            ok = all(tl.latency(x) <= 0.100 for x in cfg)
+            if ok:
+                best = n
+            else:
+                break
+        return best
+
+    scales = [({"orin_agx": 1}, {"server1": 1}),
+              ({"orin_agx": 1, "xavier_agx": 1}, {"server1": 1, "server2": 1}),
+              ({"orin_agx": 1, "xavier_agx": 1, "orin_nano": 1},
+               {"server1": 1, "server2": 1})]
+    accs = []
+    for i, (ec, sc) in enumerate(scales, 1):
+        tbs = build_testbed(edge_counts=ec, server_counts=sc)
+        heye_s = heye_traverser(tbs.graph)
+        blind_s = Traverser(tbs.graph, slowdown=NoSlowdown(tbs.graph))
+        actual = max_sensors(tbs, None, truth=True)
+        pred_h = max_sensors(tbs, heye_s, truth=False)
+        pred_a = max_sensors(tbs, blind_s, truth=False)
+        acc = 1 - abs(pred_h - actual) / max(actual, 1)
+        accs.append(acc)
+        t.add(f"max_sensors_actual_scale{i}", actual, "sensors")
+        t.add(f"max_sensors_heye_scale{i}", pred_h, "sensors")
+        t.add(f"max_sensors_ace_scale{i}", pred_a, "sensors")
+    t.add("heye_capacity_accuracy", float(np.mean(accs)) * 100, "%",
+          paper=98.0)
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,116 @@
+"""Fig. 11 reproduction on the VR application:
+
+(a) per-device pipeline (frame) latency under H-EYE vs ACE/LaTS —
+    improvement % and bottleneck identification;
+(b) minimum number of shared servers that holds the target FPS;
+(c) QoS failure per frame across edge:server ratios.
+
+QoS is frame-level, per the paper's metric ("how many frames are processed
+later than the latency requirement").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Runtime, build_testbed, vr_workload
+from repro.core.topology import EDGE_FPS
+from repro.core.workloads import vr_frame_latencies, vr_frame_qos_failure
+
+from .common import Table, make_policy
+
+FIVE_EDGES = {"orin_agx": 1, "xavier_agx": 1, "orin_nano": 1, "xavier_nx": 2}
+
+
+def _run_vr(edge_counts, server_counts, policy_name, n_frames=12, seed=0,
+            fps_scale=1.0):
+    tb = build_testbed(edge_counts=edge_counts, server_counts=server_counts)
+    fps = {e: EDGE_FPS[tb.edge_kind[e]] * fps_scale for e in tb.edges}
+    cfg = vr_workload(tb, n_frames=n_frames, fps_override=fps)
+    pol = make_policy(policy_name, tb)
+    stats = Runtime(tb.graph, seed=seed).run(cfg, pol)
+    return tb, cfg, stats
+
+
+def _per_edge_means(cfg, stats):
+    lats = vr_frame_latencies(cfg, stats.timeline)
+    per = {}
+    for (edge, _), v in lats.items():
+        per.setdefault(edge, []).append(v)
+    return {e: float(np.mean(v)) for e, v in per.items()}
+
+
+def run() -> Table:
+    t = Table("fig11", "VR: latency vs baselines, min servers, QoS scaling")
+
+    # ---- (a) five edges, three servers: H-EYE vs ACE vs LaTS -------------
+    frame_lat, qos = {}, {}
+    for pol in ("heye", "ace", "lats"):
+        tb, cfg, stats = _run_vr(FIVE_EDGES, {"server1": 1, "server2": 1,
+                                              "server3": 1}, pol)
+        frame_lat[pol] = _per_edge_means(cfg, stats)
+        qos[pol] = vr_frame_qos_failure(cfg, stats.timeline)
+        t.add(f"mean_frame_latency_{pol}",
+              float(np.mean(list(frame_lat[pol].values()))) * 1e3, "ms")
+        t.add(f"frame_qos_failure_{pol}", qos[pol] * 100, "%")
+    improvements = []
+    for e in frame_lat["heye"]:
+        imp = (frame_lat["ace"][e] - frame_lat["heye"][e]) \
+            / frame_lat["ace"][e] * 100
+        improvements.append(imp)
+        t.add(f"improvement_vs_ace_{e}", imp, "%")
+    t.add("improvement_max", max(improvements), "%", paper=47.0)
+    t.add("improvement_min", min(improvements), "%", paper=11.0)
+
+    # bottleneck identification: which side contributes the contention +
+    # queueing inflation of each pipeline (the side whose extra capacity
+    # would shorten frames — the paper deduces "adding an extra server
+    # could enhance performance" from the same analysis).  The exact 3/2
+    # split of the paper depends on their unlabeled Fig. 9 measurements;
+    # with our digitized values the shared servers are the contention
+    # locus for every pipeline.
+    tb, cfg, stats = _run_vr(FIVE_EDGES, {"server1": 1, "server2": 1,
+                                          "server3": 1}, "heye")
+    tl = stats.timeline
+    server_btl = 0
+    for e in tb.edges:
+        infl = {"edge": 0.0, "server": 0.0}
+        for task in cfg:
+            if task.origin != e:
+                continue
+            inflation = ((tl.finish[task.uid] - tl.start[task.uid])
+                         - tl.standalone[task.uid]
+                         + tl.queue_wait.get(task.uid, 0.0))
+            dev = tb.graph.device_of(stats.mapping[task.uid]).name
+            infl["server" if dev in tb.servers else "edge"] += max(0., inflation)
+        side = "server" if infl["server"] > infl["edge"] else "edge"
+        server_btl += side == "server"
+        t.add(f"bottleneck_{e}", 1.0 if side == "server" else 0.0,
+              "is_server")
+    t.add("n_server_bottlenecks", server_btl, "devices", paper=3)
+
+    # ---- (b) minimum servers holding target FPS --------------------------
+    min_servers = None
+    for n_srv, sc in ((2, {"server1": 1, "server2": 1}),
+                      (3, {"server1": 1, "server2": 1, "server3": 1}),
+                      (4, {"server1": 2, "server2": 1, "server3": 1})):
+        tb, cfg, stats = _run_vr(FIVE_EDGES, sc, "heye")
+        fail = vr_frame_qos_failure(cfg, stats.timeline)
+        t.add(f"frame_qos_failure_{n_srv}servers", fail * 100, "%")
+        if fail <= 0.05 and min_servers is None:
+            min_servers = n_srv
+    t.add("min_servers_for_fps", min_servers or -1, "servers", paper=3)
+
+    # ---- (c) QoS failure vs edge:server ratio -----------------------------
+    for n_edges, n_srv in ((2, 1), (4, 1), (4, 2), (8, 2), (8, 4)):
+        ec = {"orin_agx": n_edges // 2, "orin_nano": n_edges - n_edges // 2}
+        sc = {"server1": (n_srv + 1) // 2, "server2": n_srv // 2}
+        sc = {k: v for k, v in sc.items() if v}
+        tb, cfg, stats = _run_vr(ec, sc, "heye", n_frames=8)
+        t.add(f"frame_qos_fail_{n_edges}e_{n_srv}s",
+              vr_frame_qos_failure(cfg, stats.timeline) * 100, "%",
+              ratio=round(n_edges / n_srv, 1))
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

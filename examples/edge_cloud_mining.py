@@ -1,0 +1,51 @@
+"""The paper's mining application end to end (§4.2): smart drill-bit
+sensors stream force data at 10 Hz; SVM/KNN/MLP must classify the rock type
+within 100 ms; H-EYE keeps the deadline as sensors scale, where
+contention-blind baselines silently oversubscribe.
+
+    PYTHONPATH=src python examples/edge_cloud_mining.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (AcePolicy, NoSlowdown, OrchestratorPolicy, Runtime,
+                        Traverser, build_orchestrators, build_testbed,
+                        heye_traverser, mining_workload)
+
+tb = build_testbed(edge_counts={"orin_agx": 1, "orin_nano": 1},
+                   server_counts={"server1": 1})
+print("system:", tb.graph.summary())
+print("edges:", tb.edges, "| servers:", tb.servers)
+
+for n_sensors in (10, 20, 30, 40):
+    row = {}
+    for policy_name in ("heye", "ace"):
+        tbx = build_testbed(edge_counts={"orin_agx": 1, "orin_nano": 1},
+                            server_counts={"server1": 1})
+        cfg = mining_workload(tbx, n_sensors=n_sensors, n_readings=3)
+        if policy_name == "heye":
+            pol = OrchestratorPolicy(
+                build_orchestrators(tbx.graph, heye_traverser(tbx.graph)))
+        else:
+            pol = AcePolicy(tbx.graph, Traverser(
+                tbx.graph, slowdown=NoSlowdown(tbx.graph)))
+        stats = Runtime(tbx.graph, seed=0).run(cfg, pol)
+        # completion = slowest of the 3 ML tasks per reading
+        per_reading: dict = {}
+        for t in cfg:
+            k = (t.attrs["sensor"], round(t.release_time, 6))
+            per_reading[k] = max(per_reading.get(k, 0.0),
+                                 stats.timeline.latency(t))
+        comp = np.mean(list(per_reading.values()))
+        misses = np.mean([v > 0.100 for v in per_reading.values()])
+        row[policy_name] = (comp * 1e3, misses * 100)
+    print(f"{n_sensors:3d} sensors | H-EYE {row['heye'][0]:6.1f} ms "
+          f"({row['heye'][1]:4.1f}% late) | contention-blind "
+          f"{row['ace'][0]:6.1f} ms ({row['ace'][1]:4.1f}% late)")
+
+print("\nH-EYE keeps readings under the 100 ms deadline by accounting for "
+      "shared-resource slowdown;\nthe blind baseline oversubscribes the "
+      "fast PUs and misses deadlines as sensors scale.")

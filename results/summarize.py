@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json."""
+import json
+import sys
+
+r = json.load(open("results/dryrun.json"))
+
+print("### Baseline roofline table (single-pod 16x16 unless noted)\n")
+print("| arch | shape | mesh | plan | peak GB | fits | Tc s | Tm s | Tl s | bound | useful | frac |")
+print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+for mesh in ("single", "multi"):
+    for arch in sorted({v["arch"] for v in r.values()}):
+        for shape in order:
+            key = f"{arch}|{shape}|{mesh}|baseline"
+            if key not in r:
+                continue
+            v = r[key]
+            if v["status"] == "skipped":
+                print(f"| {arch} | {shape} | {mesh} | — | — | — | — | — | — | "
+                      f"skip: quadratic attn | — | — |")
+                continue
+            if v["status"] != "ok":
+                print(f"| {arch} | {shape} | {mesh} | FAILED {v['error'][:40]} |")
+                continue
+            p = v["plan"]
+            rf = v["roofline"]
+            plan = (f"{p['policy']}/mb{p['microbatches']}"
+                    f"{'/r' if p['remat']=='block' else ''}"
+                    f"{'/bf16' if p['param_dtype']!='float32' else ''}"
+                    f"{'/c-' + p['cache_mode'] if v['shape'] != 'train_4k' else ''}")
+            print(f"| {arch} | {shape} | {mesh} | {plan} "
+                  f"| {v['memory']['peak_gb']:.1f} "
+                  f"| {'Y' if v['memory']['fits_hbm'] else 'N'} "
+                  f"| {rf['t_compute_s']:.3f} | {rf['t_memory_s']:.3f} "
+                  f"| {rf['t_collective_s']:.3f} | {rf['bottleneck'][:4]} "
+                  f"| {rf['useful_flops_ratio']:.2f} "
+                  f"| {rf['roofline_fraction']:.3f} |")
+
+print("\n### Variants (hillclimb)\n")
+for key, v in sorted(r.items()):
+    if v.get("variant", "baseline") == "baseline" or v["status"] != "ok":
+        continue
+    rf = v["roofline"]
+    base = r.get(f"{v['arch']}|{v['shape']}|{v['mesh']}|baseline", {})
+    brf = base.get("roofline", {})
+    print(f"- `{key}`: Tc={rf['t_compute_s']:.3f}s Tm={rf['t_memory_s']:.3f}s "
+          f"Tl={rf['t_collective_s']:.3f}s peak={v['memory']['peak_gb']:.1f}GB "
+          f"(baseline Tm={brf.get('t_memory_s', 0):.3f}s "
+          f"Tl={brf.get('t_collective_s', 0):.3f}s "
+          f"peak={base.get('memory', {}).get('peak_gb', 0):.1f}GB)")

@@ -1,0 +1,2 @@
+from .base import ModelConfig, all_configs, get_config, register
+from .shapes import SHAPES, Shape, cells, input_specs

@@ -1,0 +1,76 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention and only
+runs for recurrentgemma-9b / rwkv6-1.6b (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, all_configs
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention layers in pattern -> quadratic at 500k; "
+                       "skipped per assignment (run only for SSM/hybrid)")
+    return True, ""
+
+
+def cells(include_skipped: bool = False) -> list[tuple[str, str, bool, str]]:
+    """All (arch, shape, runs, reason) cells in assignment order."""
+    out = []
+    for arch, cfg in all_configs().items():
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            if ok or include_skipped:
+                out.append((arch, shape.name, ok, why))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: Shape,
+                dtype: jnp.dtype = jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every *data* input of the step function
+    (weak-type-correct, shardable, no device allocation).  Caches / params are
+    produced by ``jax.eval_shape`` over the model's init functions."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.mode == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.mode == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one new token against a cache of S
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        specs["positions"] = jax.ShapeDtypeStruct((B,), i32)
+    # modality frontend stubs provide precomputed embeddings
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.src_seq, cfg.d_model),
+                                               dtype)
+    elif cfg.frontend == "vision" and shape.mode != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model),
+                                                dtype)
+    return specs

@@ -1,0 +1,377 @@
+"""Hierarchical, de-centralized Orchestrator (paper §3.5, Alg. 1).
+
+ORCs form a tree mirroring the upper layers of the HW-GRAPH: a root ORC,
+one ORC per virtual cluster (edge cluster / server cluster / pod), and one
+ORC per device.  Each ORC knows only its parent and children (resource
+segregation); a device ORC has full knowledge of the PUs inside its device.
+
+``map_task`` implements Alg. 1:
+
+  TraverseChildren: check own leaf PUs (constraint check via the Traverser,
+  including *existing* tasks' constraints) and recurse into child ORCs;
+  if nothing satisfies the constraints, AskParent: the parent tries the
+  siblings, then escalates further up (DFS).  Communication latency from the
+  task's origin to a remote PU is folded into the constraint check, and every
+  remote hop is charged to the *scheduling overhead* ledger (paper Fig. 14).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .hwgraph import HWGraph, ProcessingUnit
+from .task import Task
+from .traverser import TaskPrediction, Traverser
+
+QUERY_BYTES = 1024.0          # size of a MapTask query/response message
+
+
+@dataclass
+class ActiveEntry:
+    task: Task
+    pu: str
+    est_finish: float
+    factor: float
+
+    def remaining_standalone(self, now: float) -> float:
+        return max(0.0, self.est_finish - now) / max(self.factor, 1e-12)
+
+
+class ActiveLedger:
+    """The runtime's belief of which tasks occupy which PUs.
+
+    Estimates come from the Orchestrator's own predictions (it cannot observe
+    ground truth — the paper's runtime monitors assignments, not hardware
+    counters on remote devices).
+    """
+
+    def __init__(self) -> None:
+        self.by_pu: dict[str, list[ActiveEntry]] = {}
+
+    def add(self, task: Task, pu: str, pred: TaskPrediction, now: float) -> ActiveEntry:
+        e = ActiveEntry(task=task, pu=pu, est_finish=now + pred.total,
+                        factor=pred.factor)
+        self.by_pu.setdefault(pu, []).append(e)
+        return e
+
+    def prune(self, now: float) -> None:
+        for pu in list(self.by_pu):
+            self.by_pu[pu] = [e for e in self.by_pu[pu] if e.est_finish > now]
+            if not self.by_pu[pu]:
+                del self.by_pu[pu]
+
+    def remove(self, task: Task) -> None:
+        for pu in list(self.by_pu):
+            self.by_pu[pu] = [e for e in self.by_pu[pu] if e.task.uid != task.uid]
+            if not self.by_pu[pu]:
+                del self.by_pu[pu]
+
+    def on_device(self, graph: HWGraph, pu_name: str) -> list[ActiveEntry]:
+        dev = graph.device_of(pu_name).name
+        out: list[ActiveEntry] = []
+        for pu, entries in self.by_pu.items():
+            if graph.device_of(pu).name == dev:
+                out.extend(entries)
+        return out
+
+    def pairs_on_device(self, graph: HWGraph, pu_name: str) -> list[tuple[Task, str]]:
+        return [(e.task, e.pu) for e in self.on_device(graph, pu_name)]
+
+    def count(self, pu: str) -> int:
+        return len(self.by_pu.get(pu, []))
+
+
+@dataclass
+class MapResult:
+    pu: str
+    prediction: TaskPrediction
+    overhead: float = 0.0        # scheduling overhead in seconds (Fig. 14)
+    queries: int = 0             # constraint checks performed
+    hops: int = 0                # remote ORC-to-ORC messages
+
+
+@dataclass
+class OrcConfig:
+    local_query_cost: float = 5e-6    # CPU time per candidate constraint check
+    objective: str = "best_fit"       # "best_fit" | "first_fit" | "min_load"
+    allow_best_effort: bool = True    # if nothing satisfies, pick least-bad PU
+
+
+class Orchestrator:
+    def __init__(self, graph: HWGraph, group: str, traverser: Traverser,
+                 ledger: ActiveLedger, config: Optional[OrcConfig] = None,
+                 parent: Optional["Orchestrator"] = None) -> None:
+        self.graph = graph
+        self.group = group
+        self.traverser = traverser
+        self.ledger = ledger
+        self.config = config or OrcConfig()
+        self.parent = parent
+        self.children: list["Orchestrator"] = []
+        self.leaf_pus: list[str] = []
+
+    # -- hierarchy ----------------------------------------------------------
+    def add_child(self, child: "Orchestrator") -> "Orchestrator":
+        child.parent = self
+        self.children.append(child)
+        return child
+
+    def is_device_orc(self) -> bool:
+        return bool(self.leaf_pus)
+
+    def __repr__(self) -> str:
+        return f"ORC({self.group})"
+
+    # -- Alg. 1 --------------------------------------------------------------
+    def map_task(self, task: Task, now: float = 0.0,
+                 commit: bool = True) -> Optional[MapResult]:
+        """Entry point (called on the task's *local* device ORC)."""
+        self.ledger.prune(now)
+        res = self._traverse_children(task, now)
+        if res is None:
+            res = self._ask_parent(task, now, origin=self)
+        if res is None and self.config.allow_best_effort:
+            res = self._best_effort(task, now)
+        if res is not None and commit:
+            self.ledger.add(task, res.pu, res.prediction, now)
+            task.assigned_pu = res.pu
+        return res
+
+    # TraverseChildren (Alg. 1 line 20)
+    def _traverse_children(self, task: Task, now: float) -> Optional[MapResult]:
+        candidates: list[MapResult] = []
+        queries = 0
+        hops = 0
+        overhead = 0.0
+        for pu_name in self.leaf_pus:
+            ok, pred = self._check_constraints(task, pu_name, now)
+            queries += 1
+            if ok:
+                r = MapResult(pu=pu_name, prediction=pred)
+                if self.config.objective == "first_fit":
+                    r.queries = queries
+                    r.overhead = overhead + queries * self.config.local_query_cost
+                    r.hops = hops
+                    return r
+                candidates.append(r)
+        for child in self.children:
+            hops += 1
+            overhead += self._hop_cost(child)
+            sub = child._traverse_children(task, now)
+            if sub is not None:
+                queries += sub.queries
+                hops += sub.hops
+                overhead += sub.overhead
+                if self.config.objective == "first_fit":
+                    sub.queries = queries
+                    sub.hops = hops
+                    sub.overhead = overhead + queries * self.config.local_query_cost
+                    return sub
+                candidates.append(sub)
+        if not candidates:
+            return None
+        best = self._select(candidates)
+        best.queries = queries
+        best.hops = hops
+        best.overhead = overhead + queries * self.config.local_query_cost
+        return best
+
+    # AskParent (Alg. 1 line 30)
+    def _ask_parent(self, task: Task, now: float,
+                    origin: "Orchestrator") -> Optional[MapResult]:
+        if self.parent is None:
+            return None
+        parent = self.parent
+        results: list[MapResult] = []
+        hops = 1                       # message up to the parent
+        overhead = self._hop_cost(parent)
+        queries = 0
+        for sibling in parent.children:
+            if sibling is self:
+                continue
+            hops += 1
+            overhead += parent._hop_cost(sibling)
+            sub = sibling._traverse_children(task, now)
+            if sub is not None:
+                sub.hops += hops
+                sub.overhead += overhead
+                if parent.config.objective == "first_fit":
+                    return sub
+                results.append(sub)
+                queries += sub.queries
+        if results:
+            best = self._select(results)
+            return best
+        # no sibling satisfies: propagate the search further up (DFS)
+        return parent._ask_parent(task, now, origin=origin)
+
+    # CheckTaskConstraints (Alg. 1 line 11)
+    def _check_constraints(self, task: Task, pu_name: str,
+                           now: float) -> tuple[bool, TaskPrediction]:
+        pu = self.graph.nodes[pu_name]
+        if not isinstance(pu, ProcessingUnit) or not pu.alive:
+            return False, TaskPrediction(float("inf"), 1.0, 0.0)
+        if pu.model is not None and not pu.model.supports(task, pu):
+            return False, TaskPrediction(float("inf"), 1.0, 0.0)
+        # tasks touching device-local peripherals cannot leave their origin
+        if (task.attrs.get("pinned")
+                and self.graph.device_of(pu_name).name != task.origin):
+            return False, TaskPrediction(float("inf"), 1.0, 0.0)
+        pred = self._predict_pipeline_aware(task, pu_name)
+        # tenancy cap: queueing wait behind the earliest finisher
+        entries = self.ledger.by_pu.get(pu_name, [])
+        if len(entries) >= pu.max_tenancy:
+            wait = min(e.est_finish for e in entries) - now
+            pred = TaskPrediction(standalone=pred.standalone,
+                                  factor=pred.factor,
+                                  comm=pred.comm + max(0.0, wait))
+        if task.deadline is not None and pred.total > task.deadline:
+            return False, pred
+        # existing tasks on this device must keep their constraints (Alg. 1 l.15)
+        device_entries = self.ledger.on_device(self.graph, pu_name)
+        if device_entries:
+            new_factors = self.traverser.predict_active_with(
+                task, pu_name, [(e.task, e.pu) for e in device_entries])
+            for e in device_entries:
+                if e.task.deadline is None:
+                    continue
+                rem = e.remaining_standalone(now)
+                new_finish = now + rem * new_factors[e.task.uid]
+                if new_finish - e.task.release_time > e.task.deadline * (1 + 1e-9):
+                    return False, pred
+        return True, pred
+
+    # -- helpers --------------------------------------------------------------
+    def _predict_pipeline_aware(self, task: Task, pu_name: str) -> TaskPrediction:
+        """predict_task + the holistic pipeline view: if this task's output
+        must return to a pinned consumer on the origin device, charge that
+        transfer here — otherwise a remote placement looks cheap while the
+        return leg destroys the downstream task's budget (cf. §5.4.1 CloudVR
+        comparison: balance computation AND communication)."""
+        active = self.ledger.pairs_on_device(self.graph, pu_name)
+        pred = self.traverser.predict_task(task, pu_name, active)
+        ret_bytes = task.attrs.get("succ_pinned_bytes", 0.0)
+        if ret_bytes > 0 and task.origin is not None:
+            dev = self.graph.device_of(pu_name).name
+            if dev != task.origin:
+                pred = TaskPrediction(
+                    standalone=pred.standalone, factor=pred.factor,
+                    comm=pred.comm + self.graph.transfer_time(
+                        dev, task.origin, ret_bytes))
+        return pred
+
+    def _select(self, candidates: list[MapResult]) -> MapResult:
+        if self.config.objective == "min_load":
+            return min(candidates, key=lambda r: self.ledger.count(r.pu))
+        return min(candidates, key=lambda r: r.prediction.total)
+
+    def _hop_cost(self, other: "Orchestrator") -> float:
+        """Round-trip query cost between this ORC's group and another's."""
+        try:
+            one_way = self.graph.transfer_time(self.group, other.group, QUERY_BYTES)
+        except KeyError:
+            one_way = 0.0
+        return 2.0 * one_way
+
+    def _best_effort(self, task: Task, now: float) -> Optional[MapResult]:
+        """Nothing satisfies the deadline anywhere: pick the globally least-bad
+        PU so the system degrades instead of dropping work (QoS failure is
+        recorded by the evaluation layer)."""
+        root = self
+        while root.parent is not None:
+            root = root.parent
+        best: Optional[MapResult] = None
+        for orc in root.iter_tree():
+            for pu_name in orc.leaf_pus:
+                pu = self.graph.nodes[pu_name]
+                if not isinstance(pu, ProcessingUnit) or not pu.alive:
+                    continue
+                if pu.model is not None and not pu.model.supports(task, pu):
+                    continue
+                if (task.attrs.get("pinned")
+                        and self.graph.device_of(pu_name).name != task.origin):
+                    continue
+                pred = self._predict_pipeline_aware(task, pu_name)
+                if best is None or pred.total < best.prediction.total:
+                    best = MapResult(pu=pu_name, prediction=pred)
+        return best
+
+    def iter_tree(self):
+        yield self
+        for c in self.children:
+            yield from c.iter_tree()
+
+    def find_device_orc(self, device: str) -> Optional["Orchestrator"]:
+        for orc in self.iter_tree():
+            if orc.group == device:
+                return orc
+        return None
+
+
+def build_orchestrators(graph: HWGraph, traverser: Traverser,
+                        ledger: Optional[ActiveLedger] = None,
+                        config: Optional[OrcConfig] = None,
+                        max_fanout: Optional[int] = None) -> Orchestrator:
+    """Build the ORC tree from GROUP nodes tagged with attrs['orc_level'].
+
+    Levels: 'root' (exactly one), 'cluster' (virtual groupings), 'device'
+    (manages every PU in its subtree).  Matches Fig. 4b.
+
+    ``max_fanout``: the paper's scalability device (§3.5) — "if a virtual
+    cluster gets too large, the logarithmic complexity could be maintained
+    by inserting virtual nodes and corresponding ORCs".  When a cluster ORC
+    ends up with more than max_fanout children, intermediate virtual ORCs
+    are inserted so every node's fanout stays bounded and a MapTask
+    escalation touches O(log n) ORCs instead of O(n) siblings.
+    """
+    ledger = ledger or ActiveLedger()
+    config = config or OrcConfig()
+    roots = [n for n in graph.nodes.values()
+             if n.attrs.get("orc_level") == "root"]
+    if len(roots) != 1:
+        raise ValueError(f"expected exactly one root group, got {len(roots)}")
+    root = Orchestrator(graph, roots[0].name, traverser, ledger, config)
+
+    def attach(parent_orc: Orchestrator, group_name: str) -> None:
+        for child in graph.children_of(group_name):
+            lvl = child.attrs.get("orc_level")
+            if lvl == "cluster":
+                orc = parent_orc.add_child(
+                    Orchestrator(graph, child.name, traverser, ledger, config))
+                attach(orc, child.name)
+            elif lvl == "device":
+                orc = parent_orc.add_child(
+                    Orchestrator(graph, child.name, traverser, ledger, config))
+                orc.leaf_pus = [p.name for p in graph.pus(under=child.name)]
+            elif child.kind.name == "GROUP":
+                attach(parent_orc, child.name)
+
+    attach(root, roots[0].name)
+    if max_fanout is not None and max_fanout >= 2:
+        for orc in list(root.iter_tree()):
+            _bound_fanout(orc, max_fanout)
+    return root
+
+
+def _bound_fanout(orc: Orchestrator, k: int) -> None:
+    """Insert virtual intermediate ORCs under ``orc`` until every node in
+    its subtree has at most k children (device ORCs are leaves)."""
+    level = 0
+    while len(orc.children) > k:
+        groups: list[Orchestrator] = []
+        kids = orc.children
+        for i in range(0, len(kids), k):
+            chunk = kids[i:i + k]
+            if len(chunk) == 1:
+                groups.append(chunk[0])
+                continue
+            virt = Orchestrator(orc.graph, f"{orc.group}.virt{level}_{i // k}",
+                                orc.traverser, orc.ledger, orc.config)
+            virt.parent = orc
+            for c in chunk:
+                c.parent = virt
+                virt.children.append(c)
+            groups.append(virt)
+        orc.children = groups
+        level += 1

@@ -1,0 +1,217 @@
+"""Ground-truth simulator + experiment runtime.
+
+The paper evaluates on a physical testbed; we stand in a discrete-event
+ground truth built on the same contention-interval engine as the Traverser
+but with *richer physics*: superlinear contention and per-task
+irregular-access noise (see core/slowdown.truth_params).  Predictors under
+test (H-EYE / ACE-like / LaTS-like) never see these parameters.
+
+``Runtime`` co-drives an assignment policy and the ground truth:
+
+  phase 1 (online assignment): tasks are presented in release order; the
+  policy (an Orchestrator, or a baseline) assigns each using only its own
+  predictions + its belief ledger.  Scheduling overhead is accrued per task
+  and delays the task's release (the paper counts orchestrator communication
+  as overhead, Fig. 14).
+
+  phase 2 (execution): the full workload with the frozen mapping runs
+  through the ground-truth engine, yielding real latencies / QoS failures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .hwgraph import HWGraph, ProcessingUnit
+from .orchestrator import ActiveLedger, MapResult, Orchestrator
+from .slowdown import DecoupledSlowdown, SlowdownParams, heye_params, truth_params
+from .task import Task, TaskGraph
+from .traverser import Timeline, Traverser
+
+
+def ground_truth_traverser(graph: HWGraph, seed: int = 0,
+                           params: Optional[SlowdownParams] = None) -> Traverser:
+    p = params or truth_params()
+    rng = np.random.default_rng(seed)
+    sd = DecoupledSlowdown(graph, p)
+    return Traverser(graph, slowdown=sd, noise=p.noise, rng=rng)
+
+
+def heye_traverser(graph: HWGraph) -> Traverser:
+    return Traverser(graph, slowdown=DecoupledSlowdown(graph, heye_params()))
+
+
+@dataclass
+class RunStats:
+    timeline: Timeline
+    mapping: dict[int, str]
+    overhead: dict[int, float] = field(default_factory=dict)   # uid -> seconds
+    queries: dict[int, int] = field(default_factory=dict)
+    hops: dict[int, int] = field(default_factory=dict)
+    unmapped: list[int] = field(default_factory=list)
+
+    def qos_failures(self, cfg: TaskGraph) -> int:
+        return sum(0 if self.timeline.deadline_met(t) else 1 for t in cfg)
+
+    def qos_failure_rate(self, cfg: TaskGraph) -> float:
+        dl = [t for t in cfg if t.deadline is not None]
+        if not dl:
+            return 0.0
+        return sum(0 if self.timeline.deadline_met(t) else 1
+                   for t in dl) / len(dl)
+
+    def mean_overhead_ratio(self, cfg: TaskGraph) -> float:
+        """Fig. 14 metric: scheduling overhead / task execution time."""
+        ratios = []
+        for t in cfg:
+            exec_t = (self.timeline.finish[t.uid] - self.timeline.start[t.uid])
+            if exec_t > 0 and t.uid in self.overhead:
+                ratios.append(self.overhead[t.uid] / exec_t)
+        return float(np.mean(ratios)) if ratios else 0.0
+
+
+class Runtime:
+    """Drives (policy -> mapping) then (ground truth -> outcomes)."""
+
+    def __init__(self, graph: HWGraph, seed: int = 0,
+                 truth: Optional[Traverser] = None) -> None:
+        self.graph = graph
+        self.truth = truth or ground_truth_traverser(graph, seed=seed)
+
+    def run(self, cfg: TaskGraph,
+            assign: Callable[[Task, float], Optional[MapResult]],
+            charge_overhead: bool = True) -> RunStats:
+        """``assign(task, now)`` returns a MapResult (policy decision)."""
+        mapping: dict[int, str] = {}
+        stats_overhead: dict[int, float] = {}
+        stats_q: dict[int, int] = {}
+        stats_h: dict[int, int] = {}
+        unmapped: list[int] = []
+        for t in sorted(cfg, key=lambda t: (t.release_time, t.uid)):
+            preds = cfg.preds(t)
+            placed = [p.assigned_pu for p in preds if p.assigned_pu]
+            if placed:
+                t.attrs["src_devices"] = sorted(
+                    {self.graph.device_of(pu).name for pu in placed})
+            res = assign(t, t.release_time)
+            if res is None:
+                unmapped.append(t.uid)
+                # fall back to any supporting PU so execution remains defined
+                res = _any_supporting(self.graph, t)
+                if res is None:
+                    raise RuntimeError(f"no PU supports {t}")
+            mapping[t.uid] = res.pu
+            stats_overhead[t.uid] = res.overhead
+            stats_q[t.uid] = res.queries
+            stats_h[t.uid] = res.hops
+            if charge_overhead:
+                t.release_time += res.overhead
+        tl = self.truth.traverse(cfg, mapping)
+        return RunStats(timeline=tl, mapping=mapping, overhead=stats_overhead,
+                        queries=stats_q, hops=stats_h, unmapped=unmapped)
+
+
+def _any_supporting(graph: HWGraph, task: Task) -> Optional[MapResult]:
+    from .traverser import TaskPrediction
+    for pu in graph.pus():
+        if pu.model is None or not pu.model.supports(task, pu):
+            continue
+        if (task.attrs.get("pinned") and
+                graph.device_of(pu.name).name != task.origin):
+            continue
+        return MapResult(pu=pu.name,
+                         prediction=TaskPrediction(pu.predict(task), 1.0, 0.0))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Baseline assignment policies (§5.1.1)
+# ---------------------------------------------------------------------------
+class AcePolicy:
+    """ACE-like: static application orchestration, contention-blind.
+
+    Maps each task kind once (at first sight) to the PU with the best
+    *standalone* time reachable under its deadline, then reuses that static
+    choice — "limited to static application orchestration ... does not
+    consider shared resource utilization".
+    """
+
+    def __init__(self, graph: HWGraph, blind_traverser: Traverser) -> None:
+        self.graph = graph
+        self.trav = blind_traverser
+        self.static_choice: dict[tuple[str, str], str] = {}   # (origin, kind) -> pu
+
+    def __call__(self, task: Task, now: float) -> Optional[MapResult]:
+        key = (task.origin or "", task.kind)
+        if key not in self.static_choice:
+            best, best_pred = None, None
+            for pu in self.graph.pus():
+                if pu.model is None or not pu.model.supports(task, pu):
+                    continue
+                if (task.attrs.get("pinned") and
+                        self.graph.device_of(pu.name).name != task.origin):
+                    continue
+                pred = self.trav.predict_task(task, pu.name, [])
+                if task.deadline is not None and pred.total > task.deadline:
+                    continue
+                if best_pred is None or pred.total < best_pred.total:
+                    best, best_pred = pu.name, pred
+            if best is None:
+                return None
+            self.static_choice[key] = best
+        pu = self.static_choice[key]
+        pred = self.trav.predict_task(task, pu, [])
+        return MapResult(pu=pu, prediction=pred, overhead=20e-6, queries=1)
+
+
+class LatsPolicy:
+    """Hetero-Edge/LaTS-like: latency-aware, availability-monitored, but
+    contention-blind — picks the *available* PU with the best standalone
+    time + communication, no shared-resource model (§5.1.1)."""
+
+    def __init__(self, graph: HWGraph, blind_traverser: Traverser,
+                 ledger: Optional[ActiveLedger] = None) -> None:
+        self.graph = graph
+        self.trav = blind_traverser
+        self.ledger = ledger or ActiveLedger()
+
+    def __call__(self, task: Task, now: float) -> Optional[MapResult]:
+        self.ledger.prune(now)
+        best: Optional[MapResult] = None
+        queries = 0
+        for pu in self.graph.pus():
+            if pu.model is None or not pu.model.supports(task, pu):
+                continue
+            if (task.attrs.get("pinned") and
+                    self.graph.device_of(pu.name).name != task.origin):
+                continue
+            queries += 1
+            pred = self.trav.predict_task(task, pu.name, [])
+            busy = self.ledger.count(pu.name)
+            if busy >= pu.max_tenancy:       # availability monitoring
+                continue
+            if best is None or pred.total < best.prediction.total:
+                best = MapResult(pu=pu.name, prediction=pred)
+        if best is not None:
+            best.queries = queries
+            best.overhead = queries * 5e-6
+            self.ledger.add(task, best.pu, best.prediction, now)
+        return best
+
+
+class OrchestratorPolicy:
+    """H-EYE: route each task to its origin device's ORC (paper §3.2)."""
+
+    def __init__(self, root: Orchestrator) -> None:
+        self.root = root
+
+    def __call__(self, task: Task, now: float) -> Optional[MapResult]:
+        orc = None
+        if task.origin is not None:
+            orc = self.root.find_device_orc(task.origin)
+        if orc is None:
+            orc = next((o for o in self.root.iter_tree() if o.is_device_orc()),
+                       self.root)
+        return orc.map_task(task, now)

@@ -1,0 +1,179 @@
+"""Decoupled shared-resource slowdown models (paper §3.4).
+
+The paper's accuracy insight: *decouple* standalone performance from the
+slowdown caused by shared-resource use.  Once per system, each shareable
+resource is characterized for the slowdown it induces per amount of
+concurrent use; each task is characterized by its generalized usage of each
+resource; at runtime ``slowdown()`` combines the two.
+
+Two contention mechanisms (paper §2.2, Fig. 2):
+
+* **Shared-memory contention across PUs** — discovered via the HW-GRAPH:
+  the *nearest common resource* on the two PUs' compute paths is the
+  contention point (e.g. two cores in one cluster meet at L2; cores in
+  different clusters meet at L3; GPU and DLA meet at DRAM).  Using the
+  nearest common point (rather than every shared node) reflects that an
+  upstream shared cache merges/filters traffic before it reaches deeper
+  levels, and is what reproduces the paper's Fig. 2 ordering
+  (L2 0.91x > L3 0.87x).
+
+* **Multi-tenancy on one PU** — co-tenant tasks on the same PU slow each
+  other down by a PU-class-specific factor (GPU 0.66x for 2 DNNs, etc.).
+
+Calibration below reproduces the paper's Orin AGX measurements:
+  same-cluster CPU MMs (L2)          -> 0.91x   => beta_l2  = 0.099
+  cross-cluster CPU MMs (L3)         -> 0.87x   => beta_l3  = 0.149
+  2 DNNs on one GPU (multi-tenancy)  -> 0.66x   => mt_gpu   = 0.515
+  GPU + DLA via shared DRAM          -> 0.68x   => beta_dram= 0.47
+  CPU + GPU via shared 4MB LLC       -> 0.89x   => beta_llc = 0.124
+
+The ground-truth simulator uses the same structure with a superlinear term
+and task-kind-specific irregular-access noise (``truth_params``), so that the
+H-EYE predictor (linear, noise-free) exhibits a small but honest error while
+contention-blind baselines (ACE-like) err by the full contention amount.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .hwgraph import HWGraph, ProcessingUnit
+from .task import Task
+
+# resource classes a STORAGE/CONTROLLER node may declare in attrs["rclass"]
+RCLASSES = ("l2", "l3", "llc", "sram", "dram", "hbm", "vmem", "nic")
+
+
+@dataclass
+class SlowdownParams:
+    # sensitivity of each resource class to one unit of co-runner pressure,
+    # normalized so that beta * 1.12 reproduces Fig. 2 at x=1 co-runner
+    # (the 1.12 = 1 + superlinear accounts for the profiled curvature)
+    beta: dict[str, float] = field(default_factory=lambda: {
+        "l2": 0.0884, "l3": 0.1330, "llc": 0.1107, "sram": 0.1786,
+        "dram": 0.4196, "hbm": 0.2679, "vmem": 0.0, "nic": 0.0893,
+    })
+    # multi-tenancy sensitivity per PU class
+    mt_beta: dict[str, float] = field(default_factory=lambda: {
+        "cpu": 0.3125, "gpu": 0.4598, "dla": 0.3571, "vic": 0.2232,
+        "pva": 0.2679, "tpu": 0.4018, "default": 0.3571,
+    })
+    superlinear: float = 0.12   # kappa: factor term beta*x*(1+kappa*x)
+    noise: float = 0.0          # rel. sigma of task-irregularity noise (truth only)
+
+    def mt(self, pu_class: str) -> float:
+        return self.mt_beta.get(pu_class, self.mt_beta["default"])
+
+
+def heye_params() -> SlowdownParams:
+    """The calibrated model H-EYE's Traverser uses for prediction.
+
+    The paper's step (1) profiles each shared resource "for the slowdown
+    they will experience per the amount of concurrent use" — i.e. the
+    calibration covers every concurrency level, so the predictor carries
+    the same superlinear shape as the system it was profiled on.  What it
+    can NOT know is the per-execution irregular-access noise (§5.2 names
+    exactly this as the source of H-EYE's residual 3.2% error)."""
+    return SlowdownParams(superlinear=0.12)
+
+
+def truth_params(noise: float = 0.035, superlinear: float = 0.12) -> SlowdownParams:
+    """Ground-truth behaviour: profiled contention + irregular-access noise.
+
+    These produce the paper-reported gap: H-EYE predicts within a few
+    percent (missing only the noise) while a contention-blind model misses
+    the entire slowdown (tens of percent under heavy sharing)."""
+    return SlowdownParams(superlinear=superlinear, noise=noise)
+
+
+class DecoupledSlowdown:
+    """slowdown(task on pu | co-running tasks) -> multiplicative factor >= 1."""
+
+    def __init__(self, graph: HWGraph, params: Optional[SlowdownParams] = None,
+                 rng: Optional[np.random.Generator] = None) -> None:
+        self.graph = graph
+        self.params = params or heye_params()
+        self.rng = rng
+        self._shared_cache: dict[tuple[str, str], Optional[str]] = {}
+
+    # -- helpers -----------------------------------------------------------
+    def nearest_shared(self, pu_a: str, pu_b: str) -> Optional[str]:
+        """Nearest common resource on the compute paths of two PUs (or None
+        if the PUs share nothing, e.g. they sit in different devices)."""
+        key = (pu_a, pu_b) if pu_a <= pu_b else (pu_b, pu_a)
+        if key not in self._shared_cache:
+            a = self.graph.nodes[pu_a]
+            pa = (a.get_compute_path() if isinstance(a, ProcessingUnit)
+                  else self.graph.resource_path(pu_a))
+            b = self.graph.nodes[pu_b]
+            pb = set(b.get_compute_path() if isinstance(b, ProcessingUnit)
+                     else self.graph.resource_path(pu_b))
+            hit = next((r for r in pa if r in pb), None)
+            self._shared_cache[key] = hit
+        return self._shared_cache[key]
+
+    def invalidate(self) -> None:
+        self._shared_cache.clear()
+
+    def _pressure_term(self, beta: float, x: float) -> float:
+        if x <= 0.0 or beta <= 0.0:
+            return 0.0
+        return beta * x * (1.0 + self.params.superlinear * x)
+
+    def _mem_usage(self, task: Task, pu_name: str) -> float:
+        """Effective shared-memory pressure of ``task`` when run on ``pu``.
+        PUs with private data storage (e.g. VIC, §5.3.1) cap it."""
+        u = task.usage.get("mem", 1.0)
+        cap = self.graph.nodes[pu_name].attrs.get("mem_usage_cap")
+        return min(u, cap) if cap is not None else u
+
+    # -- the model ---------------------------------------------------------
+    def factor(self, task: Task, pu_name: str,
+               coruns: list[tuple[Task, str]]) -> float:
+        """Multiplicative slowdown of ``task`` running on ``pu_name`` while
+        each (other_task, other_pu) in ``coruns`` runs concurrently."""
+        p = self.params
+        f = 1.0
+        pu = self.graph.nodes[pu_name]
+        pu_class = pu.attrs.get("pu_class_kind", pu.attrs.get("pu_class", "default"))
+        # split co-runners: same-PU tenants vs other-PU resource sharers
+        mt_pressure = 0.0
+        res_pressure: dict[str, float] = {}
+        for other, other_pu in coruns:
+            if other.uid == task.uid:
+                continue
+            if other_pu == pu_name:
+                mt_pressure += other.usage.get("pu", 1.0)
+            else:
+                shared = self.nearest_shared(pu_name, other_pu)
+                if shared is None:
+                    continue
+                rclass = self.graph.nodes[shared].attrs.get("rclass", "dram")
+                res_pressure[rclass] = (res_pressure.get(rclass, 0.0)
+                                        + self._mem_usage(other, other_pu))
+        if mt_pressure > 0.0:
+            f *= 1.0 + self._pressure_term(p.mt(pu_class), mt_pressure
+                                           ) * task.usage.get("pu", 1.0)
+        for rclass, x in res_pressure.items():
+            f *= 1.0 + self._pressure_term(p.beta.get(rclass, 0.3), x
+                                           ) * self._mem_usage(task, pu_name)
+        if p.noise > 0.0 and self.rng is not None and f > 1.0:
+            irregularity = task.attrs.get("irregularity", 1.0)
+            f *= float(np.exp(self.rng.normal(0.0, p.noise * irregularity)))
+        return max(1.0, f)
+
+
+class NoSlowdown:
+    """Contention-blind model (what ACE-like baselines assume)."""
+
+    def __init__(self, graph: HWGraph, *a, **k) -> None:
+        self.graph = graph
+
+    def factor(self, task: Task, pu_name: str,
+               coruns: list[tuple[Task, str]]) -> float:
+        return 1.0
+
+    def invalidate(self) -> None:
+        pass

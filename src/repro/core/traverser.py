@@ -1,0 +1,374 @@
+"""Traverser: predict performance of a CFG of tasks on mapped PUs, accounting
+for shared-resource slowdown between concurrently running tasks (paper §3.4).
+
+The Traverser walks the CFG in time order and splits execution into
+**contention intervals** (Fig. 6): maximal time spans during which the set of
+co-running tasks is constant.  Within an interval each task progresses at
+``1 / slowdown_factor`` of its standalone speed; at interval boundaries the
+factors are recomputed.  This is implemented as an event-driven simulation
+with virtual-work bookkeeping so rate changes are O(affected jobs).
+
+The same engine serves two roles:
+
+* **Prediction** (H-EYE's Traverser proper): linear calibrated slowdown
+  model, no noise — called by the Orchestrator for constraint checks.
+* **Ground truth** (core/simulator.py): superlinear slowdown + per-task
+  irregular-access noise — stands in for the paper's physical testbed.
+
+Communication is first-class: data moving between devices becomes a
+TransferJob that *shares link bandwidth* with concurrent transfers
+(paper Fig. 12's dynamic-bandwidth experiments rely on this).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from .hwgraph import EdgeAttr, HWGraph, ProcessingUnit
+from .slowdown import DecoupledSlowdown
+from .task import Task, TaskGraph
+
+
+@dataclass
+class TaskPrediction:
+    """Closed-form single-task prediction used by Orchestrator checks."""
+
+    standalone: float
+    factor: float
+    comm: float
+
+    @property
+    def total(self) -> float:
+        return self.comm + self.standalone * self.factor
+
+
+@dataclass
+class Timeline:
+    """Result of a CFG traverse."""
+
+    start: dict[int, float] = field(default_factory=dict)      # task.uid -> t
+    finish: dict[int, float] = field(default_factory=dict)
+    ready: dict[int, float] = field(default_factory=dict)      # deps resolved at
+    standalone: dict[int, float] = field(default_factory=dict)
+    comm: dict[int, float] = field(default_factory=dict)       # inbound comm time
+    queue_wait: dict[int, float] = field(default_factory=dict)
+    mapping: dict[int, str] = field(default_factory=dict)
+    n_intervals: int = 0
+
+    @property
+    def makespan(self) -> float:
+        return max(self.finish.values(), default=0.0)
+
+    def latency(self, task: Task) -> float:
+        """Ready-to-finish latency (comm + queueing + slowdown + compute).
+
+        'Ready' = dependencies resolved (or release time for roots) — the
+        moment the paper's runtime hands the task to the Orchestrator."""
+        t0 = self.ready.get(task.uid, task.release_time)
+        return self.finish[task.uid] - t0
+
+    def slowdown_of(self, task: Task) -> float:
+        busy = self.finish[task.uid] - self.start[task.uid]
+        sa = self.standalone[task.uid]
+        return busy / sa if sa > 0 else 1.0
+
+    def deadline_met(self, task: Task) -> bool:
+        if task.deadline is None:
+            return True
+        return self.latency(task) <= task.deadline * (1 + 1e-9)
+
+
+class _ComputeJob:
+    __slots__ = ("task", "pu", "device", "W", "rate", "t_last", "version", "start")
+
+    def __init__(self, task: Task, pu: str, device: str, work: float, t: float):
+        self.task = task
+        self.pu = pu
+        self.device = device
+        self.W = work
+        self.rate = 1.0
+        self.t_last = t
+        self.version = 0
+        self.start = t
+
+
+class _TransferJob:
+    __slots__ = ("key", "consumer_uid", "edges", "W", "rate", "t_last",
+                 "version", "latency")
+
+    def __init__(self, key: int, consumer_uid: int, edges: list[EdgeAttr],
+                 nbytes: float, latency: float, t: float):
+        self.key = key
+        self.consumer_uid = consumer_uid
+        self.edges = edges
+        self.W = max(nbytes, 0.0)
+        self.rate = 1.0
+        self.t_last = t
+        self.version = 0
+        self.latency = latency
+
+
+class Traverser:
+    """Predicts CFG performance on a given task->PU mapping (no scheduling)."""
+
+    def __init__(self, graph: HWGraph, slowdown: Optional[DecoupledSlowdown] = None,
+                 noise: float = 0.0, rng: Optional[np.random.Generator] = None):
+        self.graph = graph
+        self.slowdown = slowdown or DecoupledSlowdown(graph)
+        self.noise = noise
+        self.rng = rng or np.random.default_rng(0)
+
+    # ------------------------------------------------------------------
+    # Closed-form single-task prediction (Orchestrator constraint checks)
+    # ------------------------------------------------------------------
+    def predict_task(self, task: Task, pu_name: str,
+                     active: list[tuple[Task, str]] = ()) -> TaskPrediction:
+        pu = self.graph.nodes[pu_name]
+        assert isinstance(pu, ProcessingUnit)
+        standalone = pu.predict(task)
+        factor = self.slowdown.factor(task, pu_name, list(active))
+        comm = 0.0
+        if task.input_bytes > 0:
+            # data comes from the producers' devices (set by the runtime once
+            # predecessors are placed), falling back to the task's origin
+            srcs = task.attrs.get("src_devices")
+            if not srcs and task.origin is not None:
+                srcs = [task.origin]
+            dst_dev = self.graph.device_of(pu_name).name
+            for src_dev in srcs or []:
+                if src_dev != dst_dev:
+                    comm = max(comm, self.graph.transfer_time(
+                        src_dev, dst_dev, task.input_bytes))
+        return TaskPrediction(standalone=standalone, factor=factor, comm=comm)
+
+    def predict_active_with(self, new_task: Task, new_pu: str,
+                            active: list[tuple[Task, str]]) -> dict[int, float]:
+        """Updated slowdown factor of each active task if new_task joins."""
+        out: dict[int, float] = {}
+        pool = list(active) + [(new_task, new_pu)]
+        for t, p in active:
+            others = [(t2, p2) for t2, p2 in pool if t2.uid != t.uid]
+            out[t.uid] = self.slowdown.factor(t, p, others)
+        return out
+
+    # ------------------------------------------------------------------
+    # Full CFG traverse (contention-interval event simulation)
+    # ------------------------------------------------------------------
+    def traverse(self, cfg: TaskGraph, mapping: dict[int, str],
+                 background: list[tuple[Task, str, float]] = (),
+                 ) -> Timeline:
+        """Simulate ``cfg`` under ``mapping`` (task.uid -> pu name).
+
+        ``background``: (task, pu, remaining_standalone_seconds) triples of
+        already-running tasks that contend but whose dependencies are done.
+        """
+        tl = Timeline(mapping=dict(mapping))
+        heap: list[tuple[float, int, str, Any]] = []
+        seq = itertools.count()
+        time = 0.0
+
+        # --- state ---
+        compute: dict[int, _ComputeJob] = {}               # task.uid -> job
+        dev_members: dict[str, set[int]] = defaultdict(set)
+        transfers: dict[int, _TransferJob] = {}
+        xfer_seq = itertools.count()
+        edge_members: dict[int, set[int]] = defaultdict(set)   # id(edge) -> xfer keys
+        pu_running: dict[str, int] = defaultdict(int)
+        pu_queue: dict[str, deque[Task]] = defaultdict(deque)
+        waiting: dict[int, int] = {}                        # uid -> inbound count
+        ready_at: dict[int, float] = {}                     # uid -> data-arrival time
+        task_by_uid = {t.uid: t for t in cfg}
+        finished: set[int] = set()
+
+        def push(t: float, kind: str, payload: Any) -> None:
+            heapq.heappush(heap, (t, next(seq), kind, payload))
+
+        # --- rate maintenance -------------------------------------------
+        def settle(job) -> None:
+            job.W = max(0.0, job.W - job.rate * (time - job.t_last))
+            job.t_last = time
+
+        def reprice_device(dev: str) -> None:
+            members = [compute[u] for u in dev_members[dev]]
+            pool = [(j.task, j.pu) for j in members]
+            for j in members:
+                settle(j)
+                others = [(t, p) for t, p in pool if t.uid != j.task.uid]
+                f = self.slowdown.factor(j.task, j.pu, others)
+                j.rate = 1.0 / f
+                j.version += 1
+                push(time + j.W / j.rate, "cdone", (j.task.uid, j.version))
+            tl.n_intervals += 1
+
+        def reprice_edges(edges: list[EdgeAttr]) -> None:
+            affected: set[int] = set()
+            for e in edges:
+                affected |= edge_members[id(e)]
+            for k in affected:
+                x = transfers[k]
+                settle(x)
+                bw = min(e.bandwidth / max(1, len(edge_members[id(e)]))
+                         for e in x.edges) if x.edges else float("inf")
+                x.rate = bw
+                x.version += 1
+                eta = time + (x.W / x.rate if x.rate > 0 else float("inf"))
+                push(eta, "xdone", (x.key, x.version))
+
+        # --- job lifecycle ----------------------------------------------
+        def start_compute(task: Task) -> None:
+            pu_name = mapping[task.uid]
+            pu = self.graph.nodes[pu_name]
+            assert isinstance(pu, ProcessingUnit), pu_name
+            if pu_running[pu_name] >= pu.max_tenancy:
+                pu_queue[pu_name].append(task)
+                return
+            pu_running[pu_name] += 1
+            sa = pu.predict(task)
+            work = sa
+            if self.noise > 0.0:
+                irr = task.attrs.get("irregularity", 1.0)
+                work = sa * float(np.exp(self.rng.normal(0.0, self.noise * irr)))
+            dev = self.graph.device_of(pu_name).name
+            job = _ComputeJob(task, pu_name, dev, work, time)
+            compute[task.uid] = job
+            dev_members[dev].add(task.uid)
+            tl.start[task.uid] = time
+            tl.standalone[task.uid] = sa
+            tl.queue_wait[task.uid] = time - ready_at.get(task.uid, task.release_time)
+            reprice_device(dev)
+
+        def launch_transfer(consumer: Task, src_dev: str, dst_dev: str,
+                            nbytes: float) -> bool:
+            """Returns True if a transfer was started (False = local/no data)."""
+            if src_dev == dst_dev or nbytes <= 0:
+                return False
+            edges = self.graph.route_edges(src_dev, dst_dev)
+            lat = sum(e.latency for e in edges)
+            key = next(xfer_seq)
+            x = _TransferJob(key, consumer.uid, edges, nbytes, lat, time)
+            transfers[key] = x
+            for e in edges:
+                edge_members[id(e)].add(key)
+            reprice_edges(edges)
+            return True
+
+        def data_arrived(uid: int) -> None:
+            waiting[uid] -= 1
+            if waiting[uid] == 0:
+                ready_at[uid] = time
+                dep_done = max(task_by_uid[uid].release_time, _dep_finish(uid))
+                tl.ready[uid] = dep_done
+                tl.comm[uid] = time - dep_done
+                start_compute(task_by_uid[uid])
+
+        def _dep_finish(uid: int) -> float:
+            preds = cfg.preds(task_by_uid[uid])
+            return max((tl.finish[p.uid] for p in preds if p.uid in tl.finish),
+                       default=task_by_uid[uid].release_time)
+
+        def finish_compute(uid: int) -> None:
+            job = compute.pop(uid)
+            dev_members[job.device].discard(uid)
+            pu_running[job.pu] -= 1
+            tl.finish[uid] = time
+            finished.add(uid)
+            # successors: dependency bookkeeping + inter-device transfers
+            t = task_by_uid.get(uid)
+            if t is not None:
+                for s in cfg.succs(t):
+                    dst_dev = self.graph.device_of(mapping[s.uid]).name
+                    if launch_transfer(s, job.device, dst_dev, t.output_bytes):
+                        pass  # data_arrived fires on xdone
+                    else:
+                        data_arrived(s.uid)
+            # wake queued tasks on this PU
+            q = pu_queue[job.pu]
+            if q:
+                start_compute(q.popleft())
+            reprice_device(job.device)
+
+        # --- initialization ----------------------------------------------
+        for t in cfg:
+            if t.uid not in mapping:
+                raise KeyError(f"{t} has no mapping")
+            waiting[t.uid] = len(cfg.preds(t)) + 1     # +1 for the release event
+        for bt, bpu, brem in background:
+            dev = self.graph.device_of(bpu).name
+            job = _ComputeJob(bt, bpu, dev, brem, 0.0)
+            compute[bt.uid] = job
+            dev_members[dev].add(bt.uid)
+            pu_running[bpu] += 1
+            tl.start[bt.uid] = 0.0
+            tl.standalone[bt.uid] = brem
+        for dev in list(dev_members):
+            reprice_device(dev)
+        for t in cfg:
+            if not cfg.preds(t):
+                push(t.release_time, "release", t.uid)
+            else:
+                push(t.release_time, "release", t.uid)
+
+        # --- event loop ---------------------------------------------------
+        while heap:
+            ev_t, _, kind, payload = heapq.heappop(heap)
+            if kind == "cdone":
+                uid, ver = payload
+                job = compute.get(uid)
+                if job is None or job.version != ver:
+                    continue
+                time = max(time, ev_t)
+                settle(job)
+                if job.W > 1e-15:   # stale estimate; a fresh one is queued
+                    continue
+                finish_compute(uid)
+            elif kind == "xdone":
+                key, ver = payload
+                x = transfers.get(key)
+                if x is None or x.version != ver:
+                    continue
+                time = max(time, ev_t)
+                settle(x)
+                if x.W > 1e-6:
+                    continue
+                # latency tail: propagate arrival after fixed route latency
+                transfers.pop(key)
+                for e in x.edges:
+                    edge_members[id(e)].discard(key)
+                reprice_edges(x.edges)
+                if x.latency > 0:
+                    push(time + x.latency, "arrive", x.consumer_uid)
+                else:
+                    data_arrived(x.consumer_uid)
+            elif kind == "arrive":
+                time = max(time, ev_t)
+                data_arrived(payload)
+            elif kind == "release":
+                time = max(time, ev_t)
+                uid = payload
+                t = task_by_uid[uid]
+                # initial input payload from the origin device
+                pu_dev = self.graph.device_of(mapping[uid]).name
+                if (t.origin is not None and t.input_bytes > 0
+                        and not cfg.preds(t)):
+                    if launch_transfer(t, t.origin, pu_dev, t.input_bytes):
+                        continue
+                data_arrived(uid)
+            else:  # pragma: no cover
+                raise AssertionError(kind)
+
+        missing = [u for u in task_by_uid if u not in tl.finish]
+        if missing:
+            raise RuntimeError(f"traverse deadlock: unfinished {missing[:5]}")
+        # background tasks may legitimately still be running; report their
+        # projected finish assuming the final interval persists.
+        for bt, bpu, _ in background:
+            if bt.uid not in tl.finish and bt.uid in compute:
+                job = compute[bt.uid]
+                tl.finish[bt.uid] = time + job.W / job.rate
+        return tl

@@ -1,0 +1,111 @@
+"""Fault tolerance & elasticity, driven by the H-EYE HW-GRAPH.
+
+The same dynamic-adaptability machinery the paper demonstrates on edge
+fleets (§5.4: bandwidth drops, nodes joining) handles TPU-fleet failures:
+
+* a failed host is ``mark_dead`` in the HW-GRAPH; the manager recomputes the
+  largest healthy mesh (elastic rescale) and replays from the last committed
+  checkpoint, resharded onto the surviving mesh (checkpoint/store.restore
+  takes a per-leaf sharding_fn);
+* stragglers are detected as step-time outliers vs the fleet median — the
+  H-EYE slowdown model's inverse: an unexplained slowdown on one host means
+  contention we did not schedule, so the Orchestrator re-maps work off it;
+* periodic async checkpointing bounds lost work to one interval.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.hwgraph import HWGraph
+from repro.checkpoint import AsyncSaver
+
+
+@dataclass
+class FTConfig:
+    checkpoint_every: int = 100
+    straggler_factor: float = 1.8        # step time > f * median => straggler
+    straggler_patience: int = 3          # consecutive flags before action
+    min_hosts: int = 1
+
+
+@dataclass
+class RecoveryPlan:
+    restore_step: int
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    lost_hosts: tuple[str, ...]
+
+
+class FTManager:
+    def __init__(self, graph: HWGraph, cfg: Optional[FTConfig] = None,
+                 ckpt_dir: str = "/tmp/repro_ckpt") -> None:
+        self.graph = graph
+        self.cfg = cfg or FTConfig()
+        self.ckpt_dir = ckpt_dir
+        self.saver = AsyncSaver()
+        self.last_committed = -1
+        self._strikes: dict[str, int] = {}
+
+    # -- checkpointing --------------------------------------------------------
+    def maybe_checkpoint(self, state, step: int) -> bool:
+        if step % self.cfg.checkpoint_every != 0:
+            return False
+        self.saver.save(state, self.ckpt_dir, step)
+        self.last_committed = step
+        return True
+
+    # -- health ------------------------------------------------------------------
+    def alive_hosts(self) -> list[str]:
+        return sorted({n.name for n in self.graph.nodes.values()
+                       if n.attrs.get("orc_level") == "device" and n.alive})
+
+    def alive_chips(self) -> int:
+        return len(self.graph.pus())
+
+    def report_step_times(self, times: dict[str, float]) -> list[str]:
+        """Feed per-host step times; returns hosts confirmed as stragglers."""
+        if len(times) < 2:
+            return []
+        med = float(np.median(list(times.values())))
+        confirmed = []
+        for host, t in times.items():
+            if t > self.cfg.straggler_factor * med:
+                self._strikes[host] = self._strikes.get(host, 0) + 1
+                if self._strikes[host] >= self.cfg.straggler_patience:
+                    confirmed.append(host)
+            else:
+                self._strikes[host] = 0
+        return confirmed
+
+    # -- failure / elastic rescale ---------------------------------------------
+    def on_failure(self, hosts: list[str]) -> RecoveryPlan:
+        for h in hosts:
+            self.graph.mark_dead(h)
+        return self.plan_mesh()
+
+    def on_join(self, host: str) -> RecoveryPlan:
+        self.graph.mark_alive(host)
+        return self.plan_mesh()
+
+    def plan_mesh(self, model_parallel: int = 16) -> RecoveryPlan:
+        """Largest (data, model) grid over surviving chips, keeping the model
+        axis if divisible (re-sharding params across a different TP degree
+        needs no conversion — the checkpoint is stored unsharded)."""
+        chips = self.alive_chips()
+        if chips == 0:
+            raise RuntimeError("no healthy chips remain")
+        tp = model_parallel
+        while tp > 1 and chips % tp:
+            tp //= 2
+        dp = chips // tp
+        # largest power-of-two dp for clean batch sharding
+        dp = 2 ** int(math.floor(math.log2(dp))) if dp > 0 else 1
+        dead = tuple(n.name for n in self.graph.nodes.values()
+                     if n.attrs.get("orc_level") == "device" and not n.alive)
+        return RecoveryPlan(restore_step=max(self.last_committed, 0),
+                            mesh_shape=(dp, tp), mesh_axes=("data", "model"),
+                            lost_hosts=dead)

@@ -1,0 +1,158 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU-native design (HBM -> VMEM tiling via BlockSpec, MXU-aligned tiles):
+
+* grid = (B*Hq, n_q_blocks, n_kv_blocks); the kv dimension is innermost and
+  sequential ("arbitrary"), carrying the online-softmax state (m, l, acc) in
+  VMEM scratch across kv steps — the classic flash recurrence.
+* causal / sliding-window structure is exploited at *block* granularity:
+  fully-masked kv blocks are skipped with ``pl.when`` (the jnp fallback
+  cannot skip, so the kernel does ~2x less work on causal and O(S*w) on
+  sliding windows).
+* GQA is handled in the k/v BlockSpec index maps: q head -> kv head is a
+  static integer division, so no k/v repetition is materialized.
+* logit softcapping (gemma2) folds into the score block before the
+  online-softmax update.
+
+Block sizes default to (512, 512) — (8, 128)-lane aligned for f32/bf16 and
+small enough that q,k,v,acc tiles fit VMEM (4 * 512 * hd * 4B ~= 2 MB at
+hd=256, well under the ~16 MB/core budget with double buffering).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 softcap: Optional[float], bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level structure: skip fully-masked kv blocks
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_start <= q_start + bq - 1)
+    if window is not None:
+        live = live & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                  # (bq, 1)... stored 2D
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret", "num_kv_heads"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         num_kv_heads: int,
+                         causal: bool = True,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         block_q: int = 512, block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B*Hq, S, hd); k, v: (B*Hkv, S, hd) -> (B*Hq, S, hd).
+
+    Rows of q map to rows of k/v by static integer division (GQA).
+    """
+    BH, S, hd = q.shape
+    Hkv_total = k.shape[0]
+    rep = BH // Hkv_total
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} must be divisible by block sizes {bq},{bk}")
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh // rep, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # m
+            pltpu.VMEM((bq, 1), jnp.float32),     # l
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """(B,S,Hq,hd) x (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    o = flash_attention_bhsd(qr, kr, vr, num_kv_heads=Hkv, causal=causal,
+                             window=window, softcap=softcap,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return o.reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)

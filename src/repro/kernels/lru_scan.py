@@ -1,0 +1,68 @@
+"""Chunked linear-recurrence scan (h_t = a_t * h_{t-1} + b_t) as a Pallas
+TPU kernel — the compute core of RG-LRU (and any diagonal SSM).
+
+TPU-native design: the recurrence is sequential in t but embarrassingly
+parallel across channels and batch, so:
+
+* grid = (B, n_w_blocks, n_s_chunks); the time-chunk dimension is innermost
+  and sequential ("arbitrary"), carrying the hidden state h in VMEM scratch
+  across chunks.
+* within a chunk the kernel walks ``bs`` steps with a fori_loop; each step
+  is a fused multiply-add over a (1, bw) vector — lane-parallel on the VPU.
+* channel blocks (bw = 512 lanes) and time chunks (bs = 256) keep the
+  working set (2 * bs * bw * 4B = 1 MB) comfortably inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(a_ref, b_ref, o_ref, h_ref, *, bs: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        at = a_ref[0, t, :]                     # (bw,)
+        bt = b_ref[0, t, :]
+        h = at * h + bt
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = lax.fori_loop(0, bs, step, h_ref[0])
+    h_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def lru_scan_pallas(a: jax.Array, b: jax.Array, *, block_s: int = 256,
+                    block_w: int = 512, interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, W) fp32 -> h: (B, S, W) fp32."""
+    B, S, W = a.shape
+    bs = min(block_s, S)
+    bw = min(block_w, W)
+    if S % bs or W % bw:
+        raise ValueError(f"S={S}, W={W} must divide blocks ({bs},{bw})")
+    ns, nw = S // bs, W // bw
+    kernel = functools.partial(_lru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

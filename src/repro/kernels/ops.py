@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels lower natively; elsewhere (this container is
+CPU-only) they run in ``interpret=True`` mode, which executes the kernel
+body in Python — bit-accurate for validation against ref.py, not for speed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .lru_scan import lru_scan_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """(B,S,Hq,hd) attention; GQA via Hkv | Hq; see flash_attention.py."""
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def lru_scan(a, b, *, block_s: int = 256, block_w: int = 512,
+             interpret: Optional[bool] = None):
+    """h_t = a_t * h_{t-1} + b_t  over (B, S, W)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    # pad W to a block multiple if needed (lanes want 128-multiples on TPU)
+    B, S, W = a.shape
+    bw = min(block_w, W)
+    pad = (-W) % bw
+    if pad:
+        import jax.numpy as jnp
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    out = lru_scan_pallas(a, b, block_s=bs, block_w=bw, interpret=interpret)
+    return out[..., :W] if pad else out

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth that
+interpret-mode kernel sweeps assert against)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """Naive masked attention.  q: (B,S,Hq,hd); k,v: (B,S,Hkv,hd); GQA by
+    head repetition.  All math fp32."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array,
+                 h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, S, W) fp32."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+            u: jax.Array, state0: Optional[jax.Array] = None):
+    """Naive per-token RWKV6 WKV recurrence (fp32).
+
+    r,k,v,log_w: (B,S,H,hd); u: (H,hd).
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T;  o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    B, S, H, hd = r.shape
+    f32 = jnp.float32
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), f32)
+
+    def step(Sm, inp):
+        rt, kt, vt, lw = (x.astype(f32) for x in inp)
+        w = jnp.exp(lw)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, Sm)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", rt, u.astype(f32), kt)
+        o = o + bonus[..., None] * vt
+        S1 = Sm * w[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S1, o
+
+    seq = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, log_w))
+    state, outs = jax.lax.scan(step, state0, seq)
+    return jnp.moveaxis(outs, 0, 1), state

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count on first initialization, and the production
+# meshes below need 512 placeholder host devices.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --shape train_4k --mesh single --set microbatches=16 --set remat=none
+
+Per cell this script:
+  1. asks the placement search (core/placement.py — H-EYE's predict ->
+     check-constraint -> assign loop over layouts) for a Plan,
+  2. builds the jitted step (train_step / prefill / serve_step) with explicit
+     in/out shardings, ``.lower()``s it against ShapeDtypeStruct inputs
+     (no allocation) and ``.compile()``s it,
+  3. prints ``compiled.memory_analysis()`` (proves the cell fits HBM) and
+     ``compiled.cost_analysis()``,
+  4. parses the SPMD HLO with launch/hlo_analysis.py (loop-aware: XLA's
+     cost_analysis counts while bodies once) into the three roofline terms,
+  5. appends the record to a JSON results file consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, Shape, input_specs, shape_applicable
+from repro.core.placement import Plan, choose_plan, model_flops, predict_plan
+from repro.launch import hlo_analysis
+from repro.launch.mesh import batch_axes as mesh_batch_axes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import batch_sharding, make_shardings
+from repro.models import ParallelCtx, build_model
+from repro.optim import OptConfig
+from repro.train.step import init_train_state, make_train_step
+
+HBM_PER_CHIP = 16e9   # TPU v5e
+
+
+def _mesh_info(mesh):
+    return tuple(mesh.devices.shape), tuple(mesh.axis_names)
+
+
+def build_and_lower(arch: str, shape_name: str, mesh, plan: Plan):
+    """Returns (lowered, n_chips, tokens, mode)."""
+    cfg = get_config(arch)
+    if cfg.n_experts > 0 and plan.moe_group != cfg.moe_group:
+        cfg = cfg.scaled(moe_group=plan.moe_group)
+    shape = SHAPES[shape_name]
+    baxes = mesh_batch_axes(mesh)
+    # (§Perf refuted hypothesis: dropping the model-axis activation
+    # constraints under fsdp_only lets XLA insert a full-width fp32
+    # all-reduce instead — keep the constraints for every policy.)
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    ctx = ParallelCtx(batch_axes=baxes, model_axis="model", model_size=msize,
+                      remat=plan.remat, compute_dtype=jnp.bfloat16)
+    model = build_model(cfg, ctx)
+    specs = input_specs(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    n_chips = 1
+    for d in mesh.devices.shape:
+        n_chips *= d
+
+    if shape.mode == "train":
+        opt_cfg = OptConfig(state_dtype=jnp.dtype(plan.state_dtype))
+        pdt = jnp.dtype(plan.param_dtype)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.key(0), opt_cfg,
+                                     param_dtype=pdt))
+        state_sh = make_shardings(state_shape, mesh, policy=plan.policy,
+                                  batch_axes=baxes)
+        batch_sh = batch_sharding(specs, mesh, baxes)
+        step = make_train_step(model, opt_cfg, microbatches=plan.microbatches,
+                               accum_dtype=jnp.dtype(plan.accum_dtype))
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(state_shape, specs)
+        tokens = B * S
+    elif shape.mode == "prefill":
+        cdt = jnp.dtype(plan.cache_dtype)
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        cache_shape = jax.eval_shape(lambda: model.init_cache(B, S, dtype=cdt))
+        params_sh = make_shardings(params_shape, mesh, policy=plan.policy,
+                                   batch_axes=baxes)
+        cache_sh = make_shardings(cache_shape, mesh, policy=plan.policy,
+                                  batch_axes=baxes, cache_mode=plan.cache_mode)
+        batch_sh = batch_sharding(specs, mesh, baxes)
+
+        def prefill_step(params, cache, batch):
+            return model.prefill(params, batch, cache)
+
+        with mesh:
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(params_sh, cache_sh, batch_sh),
+                donate_argnums=(1,)).lower(params_shape, cache_shape, specs)
+        tokens = B * S
+    else:  # decode
+        cdt = jnp.dtype(plan.cache_dtype)
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        cache_shape = jax.eval_shape(lambda: model.init_cache(B, S, dtype=cdt))
+        params_sh = make_shardings(params_shape, mesh, policy=plan.policy,
+                                   batch_axes=baxes)
+        cache_sh = make_shardings(cache_shape, mesh, policy=plan.policy,
+                                  batch_axes=baxes, cache_mode=plan.cache_mode)
+        batch_sh = batch_sharding(specs, mesh, baxes)
+
+        def serve_step(params, cache, tokens, positions):
+            return model.decode_step(params, cache, tokens, positions)
+
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, cache_sh, batch_sh["tokens"],
+                              batch_sh["positions"]),
+                donate_argnums=(1,)).lower(
+                    params_shape, cache_shape, specs["tokens"],
+                    specs["positions"])
+        tokens = B
+    return lowered, n_chips, tokens, shape.mode
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             plan: Plan | None = None, verbose: bool = True,
+             autofit: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mesh_shape, mesh_axes = _mesh_info(mesh)
+    if plan is None:
+        plan, pred = choose_plan(cfg, shape, mesh_shape, mesh_axes)
+    else:
+        pred = predict_plan(cfg, shape, mesh_shape, mesh_axes, plan)
+
+    if autofit:
+        # measured-feedback loop: the analytic memory model chooses the
+        # starting microbatch count; if the COMPILED peak exceeds HBM,
+        # double mb and recompile (hypothesis -> measure -> iterate).
+        attempts = []
+        while True:
+            rec = _compile_cell(arch, shape_name, mesh_kind, mesh, cfg,
+                                shape, plan, pred, verbose)
+            attempts.append({"microbatches": plan.microbatches,
+                             "peak_gb": rec.get("memory", {}).get("peak_gb"),
+                             "status": rec["status"]})
+            over = (rec["status"] == "ok"
+                    and not rec["memory"]["fits_hbm"]
+                    and shape.mode == "train"
+                    and plan.microbatches * 2 <= shape.global_batch)
+            # stop when doubling mb no longer helps: the over-HBM component
+            # is static state (params/optimizer), which microbatching cannot
+            # shave (llama4 lesson, EXPERIMENTS.md §Perf-1)
+            if (over and len(attempts) >= 2
+                    and attempts[-2]["peak_gb"] is not None
+                    and rec["memory"]["peak_gb"]
+                    > 0.98 * attempts[-2]["peak_gb"]):
+                rec["autofit_attempts"] = attempts
+                rec["autofit_stopped"] = "static memory; mb-doubling flat"
+                return rec
+            if not over:
+                rec["autofit_attempts"] = attempts
+                return rec
+            jax.clear_caches()
+            plan = dataclasses.replace(plan,
+                                       microbatches=plan.microbatches * 2)
+            pred = predict_plan(cfg, shape, mesh_shape, mesh_axes, plan)
+            if verbose:
+                print(f"  autofit: over HBM -> retry with "
+                      f"mb={plan.microbatches}", flush=True)
+    return _compile_cell(arch, shape_name, mesh_kind, mesh, cfg, shape,
+                         plan, pred, verbose)
+
+
+def _compile_cell(arch, shape_name, mesh_kind, mesh, cfg, shape, plan,
+                  pred, verbose) -> dict:
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    record["plan"] = dataclasses.asdict(plan)
+    record["predicted"] = {
+        "mem_gb": pred.mem_bytes / 1e9,
+        "t_compute_s": pred.t_compute, "t_memory_s": pred.t_memory,
+        "t_collective_s": pred.t_collective, "t_step_s": pred.t_step,
+    }
+
+    t0 = time.time()
+    try:
+        lowered, n_chips, tokens, mode = build_and_lower(
+            arch, shape_name, mesh, plan)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 1)
+    except Exception as e:   # a failure here is a bug in the system
+        record.update(status="FAILED", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        return record
+
+    ma = compiled.memory_analysis()
+    arg_b = ma.argument_size_in_bytes
+    tmp_b = ma.temp_size_in_bytes
+    out_b = ma.output_size_in_bytes
+    alias_b = ma.alias_size_in_bytes
+    peak = arg_b + tmp_b + max(0, out_b - alias_b)
+    record["memory"] = {
+        "argument_gb": arg_b / 1e9, "temp_gb": tmp_b / 1e9,
+        "output_gb": out_b / 1e9, "aliased_gb": alias_b / 1e9,
+        "peak_gb": peak / 1e9, "fits_hbm": bool(peak <= HBM_PER_CHIP),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["xla_cost"] = {"flops": ca.get("flops", 0.0),
+                          "bytes_accessed": ca.get("bytes accessed", 0.0)}
+
+    mf = model_flops(cfg, tokens, "train" if mode == "train" else "serve")
+    rep = hlo_analysis.analyze_hlo(compiled.as_text())
+    terms = hlo_analysis.roofline_terms(rep, n_chips=n_chips,
+                                        model_flops_total=mf)
+    record["roofline"] = terms
+    record["status"] = "ok"
+    if verbose:
+        print(f"  memory_analysis: arg={arg_b/1e9:.2f}GB temp={tmp_b/1e9:.2f}GB "
+              f"peak={peak/1e9:.2f}GB fits={peak <= HBM_PER_CHIP}")
+        print(f"  cost_analysis:   flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e} (loop bodies x1)")
+        print(f"  roofline:        Tc={terms['t_compute_s']*1e3:.2f}ms "
+              f"Tm={terms['t_memory_s']*1e3:.2f}ms "
+              f"Tl={terms['t_collective_s']*1e3:.2f}ms "
+              f"bound={terms['bottleneck']} "
+              f"useful={terms['useful_flops_ratio']:.2f} "
+              f"frac={terms['roofline_fraction']:.2f}")
+    return record
+
+
+def _plan_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for kv in pairs:
+        k, v = kv.split("=", 1)
+        if k == "microbatches":
+            out[k] = int(v)
+        elif k == "moe_group":
+            out[k] = int(v)
+        else:
+            out[k] = v
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="override a Plan field (hillclimb variants)")
+    ap.add_argument("--autofit", action="store_true",
+                    help="if the compiled peak exceeds HBM, double the "
+                         "microbatch count and recompile until it fits")
+    ap.add_argument("--variant", default="baseline",
+                    help="label stored with overridden-plan records")
+    ap.add_argument("--cells", default=None,
+                    help="slice of the cell list, e.g. 0:16 (parallel shards)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import all_configs
+    if args.all:
+        cell_list = [(a, s) for a in all_configs() for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cell_list = [(args.arch, args.shape)]
+    if args.cells:
+        lo, hi = args.cells.split(":")
+        cell_list = cell_list[int(lo):int(hi)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    overrides = _plan_overrides(args.set)
+    results: dict[str, dict] = {}
+    out_path = args.out
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+
+    failures = 0
+    for arch, shape_name in cell_list:
+        for mesh_kind in meshes:
+            key = f"{arch}|{shape_name}|{mesh_kind}|{args.variant}"
+            print(f"[dryrun] {key}", flush=True)
+            plan = None
+            if overrides:
+                cfg = get_config(arch)
+                mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+                base, _ = choose_plan(cfg, SHAPES[shape_name],
+                                      *_mesh_info(mesh))
+                plan = dataclasses.replace(base, **overrides)
+            rec = run_cell(arch, shape_name, mesh_kind, plan=plan,
+                           autofit=args.autofit)
+            rec["variant"] = args.variant
+            results[key] = rec
+            jax.clear_caches()      # keep host memory flat across 80 compiles
+            if rec["status"] == "FAILED":
+                failures += 1
+                print(f"  FAILED: {rec['error']}", flush=True)
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"[dryrun] done: {len(cell_list) * len(meshes)} cells, "
+          f"{failures} failures -> {out_path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,297 @@
+"""Loop-aware HLO analysis for the roofline report.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any program
+built from ``lax.scan`` (microbatch accumulation, scan-over-layers) is
+undercounted by the product of trip counts.  This module parses the
+post-SPMD HLO text instead:
+
+* builds the computation call graph (while body/cond, fusion calls,
+  to_apply reducers) with per-computation *execution multipliers* derived
+  from ``backend_config={"known_trip_count":{"n":...}}``,
+* FLOPs: every ``dot`` op contributes 2 * prod(output dims) * prod(lhs
+  contracting dims), scaled by its computation's multiplier,
+* collective bytes: every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute contributes its operand bytes, scaled
+  and bucketed by type,
+* HBM traffic estimate: operand + output bytes of every op at fusion
+  granularity (ops inside fusion bodies are on-chip and skipped).  This
+  over-counts reads (once per consumer) and ignores caching — treat it as
+  an upper bound.
+
+All sizes are per-device: the text is the SPMD-partitioned module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*(?:\(([^)]*)\))?.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str          # text after the opening paren of the op call
+
+
+@dataclass
+class _Computation:
+    name: str
+    params: dict[str, str] = field(default_factory=dict)   # name -> type str
+    ops: list[_Op] = field(default_factory=list)
+    # edges: (callee, trip multiplier, via_fusion)
+    calls: list[tuple[str, int, bool]] = field(default_factory=list)
+
+
+@dataclass
+class HloReport:
+    """Per-device totals (the module is SPMD-partitioned)."""
+
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0                    # fusion-granularity upper bound
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    collective_count: dict[str, int] = field(default_factory=dict)
+    n_while: int = 0
+    unknown_trip_whiles: int = 0
+    top_traffic: list = field(default_factory=list)   # (bytes, op, shape)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = _Computation(name=m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry = m.group(1)
+                for p in (m.group(2) or "").split(","):
+                    p = p.strip()
+                    if ":" in p:
+                        pname, ptype = p.split(":", 1)
+                        cur.params[pname.strip()] = ptype.strip()
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        op = _Op(name=name, type_str=type_str, kind=kind, rest=rest)
+        cur.ops.append(op)
+        # call edges
+        trip = 1
+        if kind == "while":
+            tm = _TRIP_RE.search(rest)
+            trip = int(tm.group(1)) if tm else -1
+        for attr in _CALL_ATTR_RE.finditer(rest):
+            callee = attr.group(1)
+            via_fusion = kind == "fusion"
+            cur.calls.append((callee, trip, via_fusion))
+    if cur is not None:
+        comps[cur.name] = cur
+    if entry is not None and entry in comps:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def analyze_hlo(text: str) -> HloReport:
+    comps = _parse_computations(text)
+    entry = comps.get("__entry__")
+    rep = HloReport()
+    if entry is None:
+        return rep
+
+    # multiplier per computation (and whether reached only through fusions)
+    mult: dict[str, float] = defaultdict(float)
+    fusion_internal: dict[str, bool] = {}
+
+    def visit(comp: _Computation, m: float, via_fusion: bool) -> None:
+        mult[comp.name] += m
+        fusion_internal[comp.name] = (fusion_internal.get(comp.name, True)
+                                      and via_fusion)
+        for callee, trip, fus in comp.calls:
+            if callee not in comps:
+                continue
+            t = trip
+            if t == -1:
+                rep.unknown_trip_whiles += 1
+                t = 1
+            visit(comps[callee], m * t, via_fusion or fus)
+
+    visit(entry, 1.0, False)
+
+    # op walks
+    name_to_type: dict[str, dict[str, str]] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        table = dict(comp.params)
+        for op in comp.ops:
+            table[op.name] = op.type_str
+        name_to_type[cname] = table
+
+    seen = set()
+    for cname, comp in comps.items():
+        if cname == "__entry__" or comp.name in seen:
+            continue
+        seen.add(comp.name)
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        table = name_to_type[comp.name]
+        internal = fusion_internal.get(comp.name, False)
+        for op in comp.ops:
+            if op.kind == "while":
+                rep.n_while += 1
+            if op.kind == "dot":
+                out_dims = _shape_dims(op.type_str)
+                lhs_m = _OPERAND_RE.search(op.rest)
+                k = 1
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                if lhs_m and cd and lhs_m.group(1) in table:
+                    lhs_dims = _shape_dims(table[lhs_m.group(1)])
+                    for d in (cd.group(1).split(",") if cd.group(1) else []):
+                        di = int(d)
+                        if di < len(lhs_dims):
+                            k *= lhs_dims[di]
+                out = 1
+                for d in out_dims:
+                    out *= d
+                rep.dot_flops += m * 2.0 * out * k
+            if op.kind in COLLECTIVES:
+                nbytes = 0
+                # operands appear before the first ')', attrs after
+                arg_text = op.rest.split(")")[0]
+                for operand in _OPERAND_RE.findall(arg_text):
+                    if operand in table:
+                        nbytes += _shape_bytes(table[operand])
+                if nbytes == 0:     # fall back to output size
+                    nbytes = _shape_bytes(op.type_str)
+                rep.collective_bytes[op.kind] = (
+                    rep.collective_bytes.get(op.kind, 0.0) + m * nbytes)
+                rep.collective_count[op.kind] = (
+                    rep.collective_count.get(op.kind, 0) + 1)
+            # HBM traffic at fusion granularity
+            if not internal and op.kind not in ("tuple", "get-tuple-element",
+                                                "parameter", "constant",
+                                                "bitcast"):
+                out_b = _shape_bytes(op.type_str)
+                obytes = []
+                arg_text = op.rest.split(")")[0]
+                for operand in _OPERAND_RE.findall(arg_text):
+                    if operand in table:
+                        b = _shape_bytes(table[operand])
+                        # inside a loop (m>1), an operand vastly larger than
+                        # the op's output is a loop-carried buffer accessed
+                        # through an internal (dynamic-)slice — charge the
+                        # slice-sized access, not the whole buffer.  Weights
+                        # fully re-read per iteration stay fully charged
+                        # (they are never >64x the activation they produce).
+                        if m > 1 and b > 64 * max(out_b, 1):
+                            b = max(out_b, 1)
+                        obytes.append(b)
+                in_b = sum(obytes)
+                total = m * (out_b + in_b)
+                # dynamic-update-slice updates in place: the target buffer is
+                # neither fully read nor fully written — charge the update
+                # slice (2x the sub-buffer-sized operands; the target may
+                # appear as several full-size aliased operands).
+                lname = op.name.lower()
+                if ("dynamic-update-slice" in lname
+                        or op.kind == "dynamic-update-slice"):
+                    small = sum(b for b in obytes if b < max(out_b, 1) / 2)
+                    total = m * 2.0 * max(small, 1)
+                elif op.kind == "dynamic-slice":
+                    total = m * 2.0 * out_b
+                rep.hbm_bytes += total
+                rep.top_traffic.append((total, op.kind,
+                                        op.type_str[:60], op.name[:40]))
+    rep.top_traffic = sorted(rep.top_traffic, reverse=True)[:20]
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (assignment-prescribed hardware constants: TPU v5e)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+
+def roofline_terms(rep: HloReport, *, n_chips: int,
+                   model_flops_total: float = 0.0) -> dict:
+    """Terms in seconds (per-step).  ``rep`` totals are per-device already,
+    so the per-chip roofline divides by nothing further; total-FLOP ratios
+    multiply back by n_chips."""
+    t_compute = rep.dot_flops / PEAK_FLOPS
+    t_memory = rep.hbm_bytes / HBM_BW
+    t_coll = rep.total_collective_bytes / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    hlo_total_flops = rep.dot_flops * n_chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dominant,
+        "hlo_flops_total": hlo_total_flops,
+        "model_flops_total": model_flops_total,
+        "useful_flops_ratio": (model_flops_total / hlo_total_flops
+                               if hlo_total_flops else 0.0),
+        "collective_bytes_per_chip": rep.total_collective_bytes,
+        "collective_breakdown": dict(rep.collective_bytes),
+        "roofline_bound_s": max(t_compute, t_memory, t_coll),
+        "roofline_fraction": (t_compute /
+                              max(t_compute, t_memory, t_coll)
+                              if max(t_compute, t_memory, t_coll) > 0 else 0.0),
+    }

@@ -1,0 +1,101 @@
+"""Serving driver: multi-tenant engine placement via the H-EYE Orchestrator.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
+        --requests 12 --smoke
+
+Two layers cooperate, exactly as the paper's §3.2 prescribes:
+
+* the H-EYE Orchestrator places request streams ("tenants") onto pod
+  slices of a TPU-fleet HW-GRAPH, using the Traverser's slowdown model to
+  keep every tenant's latency SLO intact under multi-tenancy, and
+* a ServeEngine (continuous batching over a slot pool) executes the stream
+  placed on THIS process's devices.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (Task, build_orchestrators, heye_traverser)
+from repro.core.topology import build_tpu_fleet
+from repro.models import ParallelCtx, build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def place_tenants(n_tenants: int, slo_s: float, est_s: float):
+    """Map tenant streams onto fleet chips with the Orchestrator; returns
+    {tenant -> chip} and the scheduling overhead ledger."""
+    tb = build_tpu_fleet(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    # a profiled model for 'serve_stream' tasks: est_s per stream
+    from repro.core.predict import CallableModel
+    model = CallableModel(fn=lambda t, pu, unit: est_s * t.size)
+    for chip in tb.graph.pus():
+        chip.model = model
+        chip.max_tenancy = 4
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    placements = {}
+    overheads = []
+    orc = next(o for o in root.iter_tree() if o.is_device_orc())
+    for i in range(n_tenants):
+        t = Task(kind="serve_stream", deadline=slo_s,
+                 usage={"pu": 1.0, "mem": 0.6})
+        t.origin = orc.group
+        res = orc.map_task(t, now=0.0)
+        placements[i] = res.pu if res else None
+        overheads.append(res.overhead if res else 0.0)
+    return placements, overheads
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--slo-ms", type=float, default=50.0)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg, ParallelCtx(
+        compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16))
+    params = model.init(jax.random.key(0))
+
+    # fleet-level placement: one tenant per batch of requests
+    n_tenants = max(1, args.requests // args.slots)
+    placements, overheads = place_tenants(
+        n_tenants, slo_s=args.slo_ms * 1e-3, est_s=args.slo_ms * 0.4e-3)
+    spread = len(set(filter(None, placements.values())))
+    print(f"[serve] orchestrator placed {n_tenants} tenants on {spread} chips "
+          f"(mean placement overhead {np.mean(overheads) * 1e6:.0f} us)")
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=rng.integers(2, 6)
+                                        ).astype(np.int32),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    eng = ServeEngine(model, params, max_slots=args.slots,
+                      max_len=args.max_len)
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, {eng._tokens_decoded} decode steps)")
+    for r in sorted(done, key=lambda r: r.rid)[:4]:
+        print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,164 @@
+"""Sharding policies: param-tree path -> PartitionSpec.
+
+Logical roles per weight (Megatron/GSPMD conventions):
+    col  (d_in, d_out*)  : in->fsdp, out->tp      (wq wk wv wg wu w_x ...)
+    row  (d_in*, d_out)  : in->tp,  out->fsdp     (wo wd w_out w_o ...)
+    embed (V, d)         : V->tp,  d->fsdp
+    expert (E, ., .)     : E->tp (expert parallelism), then col/row inside
+    vectors / norms / small tensors: replicated
+
+Policies map logical axes onto mesh axes:
+    tp_fsdp (default) : tp->model, fsdp->data   (2D: Megatron TP + ZeRO-3)
+    tp_only           : tp->model, fsdp->None   (params replicated over data)
+    fsdp_only         : tp->None,  fsdp->data
+Params are replicated across the 'pod' axis (DCN carries only gradient
+all-reduce) — the multi-pod baseline.  Dims that do not divide the mesh axis
+fall back to replication (e.g. 8 q-heads on a 16-way model axis).
+
+Stacked layers (leading n_super dim from scan) get a leading None.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+COL = ("fsdp", "tp")
+ROW = ("tp", "fsdp")
+_RULES: list[tuple[str, tuple]] = [
+    (r"(^|/)(embed|lm_head)$", ("tp", "fsdp")),
+    (r"/moe/(wg|wu)$", ("tp", "fsdp", None)),       # (E, d, ff)
+    (r"/moe/wd$", ("tp", None, "fsdp")),            # (E, ff, d)
+    (r"/moe/router$", ("fsdp", None)),
+    (r"/(wq|wk|wv|wg|wu|w_x|w_gate|w_r|w_k|w_v|w_g|w_lora_a)$", COL),
+    (r"/(wo|wd|w_out|w_o|w_lora_b)$", ROW),
+    # caches: (B, C, Hkv, hd) -> batch over data axes; recurrent states
+    (r"/attn/(k|v)$", ("batch", None, None, None)),
+    (r"/cross_kv/(k|v)$", ("batch", None, None, None)),
+    (r"/rec/(h|state)$", ("batch", None)),           # padded per-ndim below
+]
+# cache_mode overrides for KV caches (flash-decode style seq sharding, or
+# kv-head TP when the head count divides the model axis).  "ctp" resolves to
+# the model axis under EVERY policy — the cache must shard even when params
+# are fsdp-only, else a 32k x batch cache replicates 16x.
+_CACHE_MODES = {
+    "batch": ("batch", None, None, None),
+    "seq": ("batch", "ctp", None, None),
+    "heads": ("batch", None, "ctp", None),
+}
+
+
+# weight-stationary MoE overrides (policy tp_fsdp_moeff): the ff dim shards
+# over data, so the (huge) expert weights stay put; forward/backward instead
+# all-reduce the (small) activation partial sums over data.
+_MOEFF_RULES = {
+    "wg": ("tp", None, "fsdp"), "wu": ("tp", None, "fsdp"),
+    "wd": ("tp", "fsdp", None),
+}
+
+
+def _logical_for(path: str, ndim: int, cache_mode: str = "batch",
+                 policy: str = "tp_fsdp") -> tuple:
+    if policy == "tp_fsdp_moeff":
+        m = re.search(r"/moe/(wg|wu|wd)$", path)
+        if m:
+            ax = list(_MOEFF_RULES[m.group(1)])
+            if ndim > 3:
+                ax = [None] * (ndim - 3) + ax
+            return tuple(ax)
+    for pat, axes in _RULES:
+        if re.search(pat, path):
+            ax = list(axes)
+            if re.search(r"/attn/(k|v)$", path):
+                ax = list(_CACHE_MODES[cache_mode])
+            if len(ax) < ndim:                    # stacked: leading scan dims
+                ax = [None] * (ndim - len(ax)) + ax
+            elif len(ax) > ndim:
+                ax = ax[-ndim:] if ndim > 0 else []
+            return tuple(ax)
+    return (None,) * ndim
+
+
+def _resolve(logical: tuple, shape: tuple, mesh: Mesh, policy: str,
+             batch_axes: tuple[str, ...]) -> P:
+    mapping = {"tp_fsdp": {"tp": "model", "fsdp": "data"},
+               "tp_only": {"tp": "model", "fsdp": None},
+               "fsdp_only": {"tp": None, "fsdp": "data"},
+               "fsdp_pod": {"tp": "model", "fsdp": ("data", "pod")
+                            if "pod" in mesh.axis_names else "data"},
+               # weight-stationary MoE: like tp_fsdp, but expert FFNs keep
+               # the ff dim sharded over data (see _MOEFF_RULES) so expert
+               # weights are never all-gathered per microbatch
+               "tp_fsdp_moeff": {"tp": "model", "fsdp": "data"},
+               }[policy]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, role in enumerate(logical):
+        if role == "batch":
+            ax: Any = tuple(a for a in batch_axes if a in sizes)
+            n = int(np.prod([sizes[a] for a in ax])) if ax else 1
+            if not ax or shape[dim] % n:
+                ax = None
+            elif len(ax) == 1:
+                ax = ax[0]
+        elif role == "ctp":
+            ax = "model" if "model" in sizes else None
+            if ax is not None and shape[dim] % sizes[ax]:
+                ax = None
+        elif role in ("tp", "fsdp"):
+            ax = mapping[role]
+            if ax is not None:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([sizes[a] for a in axes]))
+                if shape[dim] % n:
+                    ax = None
+        else:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def tree_paths_and_leaves(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def make_shardings(tree: Pytree, mesh: Mesh, policy: str = "tp_fsdp",
+                   batch_axes: tuple[str, ...] = ("data",),
+                   cache_mode: str = "batch") -> Pytree:
+    """NamedSharding tree matching ``tree`` (of arrays or ShapeDtypeStructs)."""
+    flat, treedef = tree_paths_and_leaves(tree)
+    shardings = []
+    for path, leaf in flat:
+        logical = _logical_for(path, len(leaf.shape), cache_mode, policy)
+        spec = _resolve(logical, leaf.shape, mesh, policy, batch_axes)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_sharding(specs: Pytree, mesh: Mesh,
+                   batch_axes: tuple[str, ...]) -> Pytree:
+    """Shard dim-0 (global batch) over the batch axes; replicate the rest."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = int(np.prod([sizes[a] for a in batch_axes]))
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % n == 0:
+            ax = batch_axes[0] if len(batch_axes) == 1 else batch_axes
+            return NamedSharding(mesh, P(ax, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,113 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --steps 200 --batch 8 --seq 128 --smoke
+
+Wires every substrate layer together on whatever devices exist (the
+production meshes are exercised by dryrun.py): config registry -> model ->
+data pipeline (prefetched) -> sharded train step -> AdamW -> periodic async
+checkpointing -> restart-from-latest, with the FT manager watching per-step
+times for stragglers.  ``--smoke`` shrinks the arch to its reduced config so
+the driver runs on one CPU; without it the full config is used (TPU fleet).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, synthetic_batches
+from repro.ft.manager import FTConfig, FTManager
+from repro.launch.mesh import batch_axes, make_host_mesh
+from repro.launch.sharding import batch_sharding, make_shardings
+from repro.models import ParallelCtx, build_model
+from repro.optim import OptConfig
+from repro.train.step import init_train_state, make_train_step
+from repro.checkpoint import latest_step, restore
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = make_host_mesh(data=len(jax.devices()))
+    baxes = batch_axes(mesh)
+    ctx = ParallelCtx(batch_axes=baxes, model_axis="model",
+                      compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    model = build_model(cfg, ctx)
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                        decay_steps=args.steps)
+
+    state = init_train_state(model, jax.random.key(0), opt_cfg)
+    start_step = 0
+    if args.resume and latest_step(args.ckpt_dir) is not None:
+        start_step = latest_step(args.ckpt_dir)
+        state = restore(args.ckpt_dir, state)
+        print(f"[train] resumed from step {start_step}")
+
+    state_sh = make_shardings(state, mesh)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, state_sh)
+
+    dcfg = DataConfig(batch=args.batch, seq=args.seq, vocab=cfg.vocab,
+                      seed=start_step)
+    specs = {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)}
+    b_sh = batch_sharding(specs, mesh, baxes)["tokens"]
+    data = Prefetcher(synthetic_batches(dcfg, cfg), depth=2)
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      microbatches=args.microbatches),
+                      donate_argnums=(0,))
+
+    from repro.core.topology import build_tpu_fleet
+    ft = FTManager(build_tpu_fleet(n_pods=1, hosts_per_pod=1,
+                                   chips_per_host=len(jax.devices())).graph,
+                   FTConfig(checkpoint_every=args.ckpt_every),
+                   ckpt_dir=args.ckpt_dir)
+
+    t_last = time.time()
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = next(data)
+            batch = {k: jax.device_put(jnp.asarray(v), b_sh)
+                     if v.ndim == 2 and v.shape == (args.batch, args.seq)
+                     else jnp.asarray(v) for k, v in batch.items()}
+            state, metrics = step_fn(state, batch)
+            if (step + 1) % args.log_every == 0:
+                loss = float(metrics["loss"])
+                dt = (time.time() - t_last) / args.log_every
+                t_last = time.time()
+                tok_s = args.batch * args.seq / dt
+                print(f"[train] step {step + 1:5d} loss {loss:7.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):6.2f} "
+                      f"{dt * 1e3:7.1f} ms/step {tok_s:9.0f} tok/s",
+                      flush=True)
+                ft.report_step_times({"host0": dt})
+            ft.maybe_checkpoint(state, step + 1)
+    ft.saver.wait()
+    data.close()
+    print(f"[train] done at step {args.steps}; "
+          f"last checkpoint: {latest_step(args.ckpt_dir)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+from .layers import ParallelCtx
+from .model import Model, build_model

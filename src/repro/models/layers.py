@@ -1,0 +1,387 @@
+"""Model building blocks: norms, rotary embeddings, attention variants,
+gated MLP — pure JAX, shape-static, scan- and pjit-friendly.
+
+Attention comes in three execution strategies:
+* full masked attention            — small sequences / smoke tests
+* flash-style chunked attention    — online softmax, O(S * kc) live memory;
+                                     used for 'global' layers at long S
+* banded chunked local attention   — O(S * 2w) compute for sliding windows
+
+All math runs in ``compute_dtype`` (bf16 by default) with fp32 softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Pytree = Any
+NEG_INF = -2.0 ** 30   # large-but-finite mask value (bf16-safe)
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """Execution context threaded through the model code."""
+
+    batch_axes: tuple[str, ...] = ()     # mesh axes sharding the batch dim
+    model_axis: Optional[str] = None     # tensor-parallel axis name
+    model_size: int = 1                  # size of the model axis (for guards)
+    use_kernels: bool = False            # pallas kernels (TPU) vs pure jnp
+    remat: str = "none"                  # "none" | "block"
+    compute_dtype: Any = jnp.bfloat16
+    flash_block: int = 1024              # q/kv chunk for chunked attention
+    flash_threshold: int = 8192          # use chunked attention when S >= this
+
+    def shard(self, x: jax.Array, *spec) -> jax.Array:
+        """with_sharding_constraint when running under a mesh, else no-op."""
+        if self.model_axis is None and not self.batch_axes:
+            return x
+        try:
+            return lax.with_sharding_constraint(
+                x, jax.sharding.PartitionSpec(*spec))
+        except (ValueError, RuntimeError):
+            return x
+
+    def head_axis(self, n_heads: int) -> Optional[str]:
+        """The model axis iff the head count divides it — sharding 8 heads
+        onto a 16-way axis pads 2x and triggers SPMD full-remat copies."""
+        if self.model_axis is not None and n_heads % max(self.model_size, 1) == 0:
+            return self.model_axis
+        return None
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms / embeddings
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, scale: float = 1.0, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def init_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+def init_embedding(key, vocab: int, d: int) -> jax.Array:
+    return _dense_init(key, (vocab, d), scale=1.0)
+
+
+def embed(tokens: jax.Array, table: jax.Array, compute_dtype) -> jax.Array:
+    x = table.astype(compute_dtype)[tokens]
+    return x * jnp.asarray(math.sqrt(table.shape[1]), compute_dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array,
+            softcap: Optional[float] = None) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, hd) -> (B, S, Hkv*n_rep, hd)"""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def _softcap(scores: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def full_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                   softcap: Optional[float] = None,
+                   q_offset: int = 0) -> jax.Array:
+    """Reference masked attention. q: (B,Sq,Hq,hd), k/v: (B,Skv,Hkv,hd)."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, Hq // Hkv)
+    v = _repeat_kv(v, Hq // Hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = _softcap(scores, softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool = True,
+                        softcap: Optional[float] = None,
+                        block: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention (flash-style) in pure jnp.
+
+    q chunks are processed in parallel (extra batch dim); kv chunks are
+    scanned sequentially with running (max, sum, acc) statistics, so peak
+    live memory is O(S * block) instead of O(S^2).
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    n_rep = Hq // Hkv
+    blk = min(block, S)
+    assert S % blk == 0, (S, blk)
+    n = S // blk
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = q.reshape(B, n, blk, Hq, hd)
+    kc = k.reshape(B, n, blk, Hkv, hd)
+    vc = v.reshape(B, n, blk, Hkv, hd)
+
+    def kv_step(carry, inputs):
+        o_acc, m, l = carry                       # (B,n,blk,Hq,hd) fp32, ...
+        kj, vj, j = inputs
+        kj = _repeat_kv(kj, n_rep)                # (B,blk,Hq,hd)
+        vj = _repeat_kv(vj, n_rep)
+        s = jnp.einsum("bnqhd,bkhd->bnhqk", qc, kj).astype(jnp.float32) * scale
+        s = _softcap(s, softcap)
+        if causal:
+            qpos = (jnp.arange(n)[:, None] * blk + jnp.arange(blk)[None, :])
+            kpos = j * blk + jnp.arange(blk)
+            mask = kpos[None, None, :] <= qpos[:, :, None]    # (n,blk,blk)
+            s = jnp.where(mask[None, :, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))                # (B,n,H,blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnhqk,bkhd->bnqhd", p.astype(q.dtype), vj)
+        o_new = (o_acc * jnp.transpose(corr, (0, 1, 3, 2))[..., None]
+                 + pv.astype(jnp.float32))
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, n, blk, Hq, hd), jnp.float32)
+    m0 = jnp.full((B, n, Hq, blk), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, n, Hq, blk), jnp.float32)
+    ks = jnp.moveaxis(kc, 1, 0)
+    vs = jnp.moveaxis(vc, 1, 0)
+    (o, m, l), _ = lax.scan(kv_step, (o0, m0, l0),
+                            (ks, vs, jnp.arange(n)))
+    l = jnp.transpose(l, (0, 1, 3, 2))[..., None]             # (B,n,blk,Hq,1)
+    out = (o / jnp.maximum(l, 1e-20)).astype(q.dtype)
+    return out.reshape(B, S, Hq, hd)
+
+
+def local_attention_jnp(q, k, v, *, window: int,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """Banded sliding-window attention: chunk size = window; each q chunk
+    attends to its own + the previous chunk -> exact for span <= window,
+    O(S * 2w * hd) compute."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    w = min(window, S)
+    if S % w != 0:      # pad sequence to a chunk multiple
+        pad = w - S % w
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = q.shape[1]
+    n = Sp // w
+    n_rep = Hq // Hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    qc = q.reshape(B, n, w, Hq, hd)
+    kc = k.reshape(B, n, w, Hq, hd)
+    vc = v.reshape(B, n, w, Hq, hd)
+    # previous chunk (zeros before chunk 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kc], axis=2)                 # (B,n,2w,H,hd)
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qc, k2).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    s = _softcap(s, softcap)
+    qpos = jnp.arange(w)
+    kpos = jnp.arange(2 * w) - w                              # rel. to chunk start
+    mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - w)
+    first = jnp.arange(n) == 0                                # chunk 0 has no prev
+    mask_first = mask & (kpos[None, :] >= 0)
+    m = jnp.where(first[:, None, None], mask_first[None], mask[None])
+    s = jnp.where(m[None, :, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bnhqk,bnkhd->bnqhd", p, v2)
+    return o.reshape(B, Sp, Hq, hd)[:, :S]
+
+
+def decode_attention(q, k_cache, v_cache, *, length_mask: jax.Array,
+                     softcap: Optional[float] = None) -> jax.Array:
+    """Single-token attention against a cache.
+    q: (B,1,Hq,hd); caches: (B,Skv,Hkv,hd); length_mask: (B,Skv) bool."""
+    B, _, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    k = _repeat_kv(k_cache, Hq // Hkv)
+    v = _repeat_kv(v_cache, Hq // Hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    s = _softcap(s, softcap)
+    s = jnp.where(length_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + cache handling)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg) -> dict[str, jax.Array]:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(k1, (d, cfg.n_heads * hd)),
+        "wk": _dense_init(k2, (d, cfg.n_kv * hd)),
+        "wv": _dense_init(k3, (d, cfg.n_kv * hd)),
+        "wo": _dense_init(k4, (cfg.n_heads * hd, d), scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd)
+        p["k_norm"] = init_norm(hd)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions, dt, use_rope: bool = True,
+                 ctx: Optional["ParallelCtx"] = None):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, cfg.n_kv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.n_kv, hd)
+    if ctx is not None and (ctx.batch_axes or ctx.model_axis):
+        ba = ctx.batch_axes or None
+        q = ctx.shard(q, ba, None, ctx.head_axis(cfg.n_heads), None)
+        kv_ax = ctx.head_axis(cfg.n_kv)
+        k = ctx.shard(k, ba, None, kv_ax, None)
+        v = ctx.shard(v, ba, None, kv_ax, None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer(p, x, cfg, ctx: ParallelCtx, kind: str,
+                    positions: jax.Array) -> jax.Array:
+    """Training/prefill attention. kind in {'global','local','enc'}."""
+    dt = ctx.compute_dtype
+    B, S, _ = x.shape
+    causal = kind != "enc"
+    q, k, v = _project_qkv(p, x, cfg, positions, dt, use_rope=True, ctx=ctx)
+    if ctx.use_kernels:
+        from repro.kernels import ops as kops
+        window = cfg.window if kind == "local" else None
+        o = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                 softcap=cfg.attn_softcap)
+    elif kind == "local":
+        o = local_attention_jnp(q, k, v, window=cfg.window,
+                                softcap=cfg.attn_softcap)
+    elif S >= ctx.flash_threshold and causal:
+        o = flash_attention_jnp(q, k, v, causal=True,
+                                softcap=cfg.attn_softcap,
+                                block=ctx.flash_block)
+    else:
+        o = full_attention(q, k, v, causal=causal, softcap=cfg.attn_softcap)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return o @ p["wo"].astype(dt)
+
+
+def attention_decode(p, x, cache, cfg, ctx: ParallelCtx, kind: str,
+                     positions: jax.Array):
+    """One-token decode. cache = {'k','v'}: (B, C, Hkv, hd); positions (B,).
+
+    For 'local' layers the cache is a rolling buffer of size window;
+    for 'global' it is the full sequence length.
+    """
+    dt = ctx.compute_dtype
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg, positions[:, None], dt, use_rope=True,
+                           ctx=ctx)
+    C = cache["k"].shape[1]
+    slot = positions % C if kind == "local" else positions
+    idx = slot[:, None]                                     # (B,1)
+    bidx = jnp.arange(B)[:, None]
+    k_cache = cache["k"].at[bidx, idx].set(k.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, idx].set(v.astype(cache["v"].dtype))
+    kpos = jnp.arange(C)[None, :]
+    if kind == "local":
+        # rolling buffer: valid entries are the last min(pos+1, window)
+        valid = kpos < jnp.minimum(positions[:, None] + 1, C)
+    else:
+        valid = kpos <= positions[:, None]
+    o = decode_attention(q, k_cache.astype(dt), v_cache.astype(dt),
+                         length_mask=valid, softcap=cfg.attn_softcap)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"].astype(dt)
+    return o, {"k": k_cache, "v": v_cache}
+
+
+def init_attn_cache(cfg, B: int, S: int, kind: str,
+                    dtype=jnp.bfloat16) -> dict[str, jax.Array]:
+    C = min(cfg.window, S) if kind == "local" else S
+    shape = (B, C, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff: Optional[int] = None) -> dict[str, jax.Array]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(k1, (d, ff)),
+        "wu": _dense_init(k2, (d, ff)),
+        "wd": _dense_init(k3, (ff, d), scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlp(p, x, cfg, ctx: ParallelCtx) -> jax.Array:
+    dt = ctx.compute_dtype
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    h = act(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    h = ctx.shard(h, ctx.batch_axes or None, None, ctx.model_axis)
+    return h @ p["wd"].astype(dt)

@@ -1,0 +1,121 @@
+"""Unified Model API over all assigned architectures.
+
+    model = Model(cfg, ctx)
+    params = model.init(rng)
+    logits, aux = model.forward(params, batch)                    # train
+    cache = model.init_cache(B, max_len)
+    logits, cache = model.prefill(params, batch, cache)           # prefill
+    logits, cache = model.decode_step(params, cache, tokens, pos) # decode
+
+``batch`` is a dict: tokens (B,S) plus optional modality-stub inputs
+(``patches`` for vlm, ``frames`` for audio enc-dec).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import transformer as tf
+from .layers import ParallelCtx, embed, init_embedding, init_norm, rms_norm, unembed
+
+Pytree = Any
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    ctx: ParallelCtx
+
+    def __post_init__(self) -> None:
+        cfg = self.cfg
+        self.sm = tf.stack_meta(cfg)
+        self.enc_sm = (tf.stack_meta(cfg, n_layers=cfg.encoder_layers,
+                                     pattern_override=("enc",))
+                       if cfg.is_encdec else None)
+
+    # -- params ---------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Pytree:
+        cfg = self.cfg
+        k_emb, k_stack, k_enc, k_head = jax.random.split(rng, 4)
+        params: dict[str, Any] = {
+            "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model),
+            "stack": tf.init_stack(k_stack, cfg, self.sm),
+            "final_norm": init_norm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_embedding(k_head, cfg.vocab, cfg.d_model)
+        if cfg.is_encdec:
+            params["encoder"] = tf.init_stack(k_enc, cfg, self.enc_sm)
+            params["enc_norm"] = init_norm(cfg.d_model)
+        return params
+
+    # -- shared pieces ----------------------------------------------------------
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg, ctx = self.cfg, self.ctx
+        x = embed(batch["tokens"], params["embed"], ctx.compute_dtype)
+        if cfg.frontend == "vision" and "patches" in batch:
+            n = min(cfg.n_patches, x.shape[1])
+            x = jax.lax.dynamic_update_slice_in_dim(
+                x, batch["patches"][:, :n].astype(x.dtype), 0, 1)
+        return x
+
+    def _encode(self, params, batch) -> Optional[jax.Array]:
+        if not self.cfg.is_encdec:
+            return None
+        frames = batch["frames"].astype(self.ctx.compute_dtype)
+        pos = jnp.arange(frames.shape[1])
+        h, _, _ = tf.apply_stack(params["encoder"], frames, self.cfg, self.ctx,
+                                 self.enc_sm, pos)
+        return rms_norm(h, params["enc_norm"], self.cfg.norm_eps)
+
+    def _logits(self, params, x) -> jax.Array:
+        table = params.get("lm_head", params["embed"])
+        return unembed(x, table, self.cfg.final_softcap)
+
+    # -- entry points -------------------------------------------------------------
+    def forward(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Training/scoring forward. Returns (logits (B,S,V) fp32, aux)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = self._embed_inputs(params, batch)
+        enc_out = self._encode(params, batch)
+        pos = jnp.arange(x.shape[1])
+        x, aux, _ = tf.apply_stack(params["stack"], x, cfg, ctx, self.sm, pos,
+                                   enc_out=enc_out)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x), aux
+
+    def init_cache(self, B: int, max_len: int, dtype=jnp.bfloat16) -> Pytree:
+        return tf.init_stack_cache(self.cfg, self.sm, B, max_len, dtype)
+
+    def prefill(self, params, batch, cache) -> tuple[jax.Array, Pytree]:
+        """Run S prompt tokens, filling the decode cache.
+        Returns (last-position logits (B,V), cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = self._embed_inputs(params, batch)
+        enc_out = self._encode(params, batch)
+        pos = jnp.arange(x.shape[1])
+        x, _, cache = tf.apply_stack(params["stack"], x, cfg, ctx, self.sm,
+                                     pos, enc_out=enc_out, cache=cache)
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x)[:, 0], cache
+
+    def decode_step(self, params, cache, tokens: jax.Array,
+                    positions: jax.Array,
+                    batch: Optional[dict] = None) -> tuple[jax.Array, Pytree]:
+        """One decode step. tokens (B,1) int32, positions (B,) int32.
+        Returns (logits (B,V) fp32, new cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = embed(tokens, params["embed"], ctx.compute_dtype)
+        x, cache = tf.apply_stack_decode(params["stack"], x, cache, cfg, ctx,
+                                         self.sm, positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x)[:, 0], cache
+
+
+def build_model(cfg: ModelConfig, ctx: Optional[ParallelCtx] = None) -> Model:
+    return Model(cfg, ctx or ParallelCtx())

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts layer: capacity-bounded top-k routing.
+
+Two dispatch implementations, selected by ``cfg.moe_impl``:
+
+* ``einsum`` (default under SPMD) — GShard-style one-hot dispatch/combine
+  tensors of shape (G, g, E, C).  Einsums partition cleanly under GSPMD
+  (groups over the batch axes, experts over the model axis = expert
+  parallelism; XLA inserts the G<->E all-to-all at the constraint
+  boundaries).  Memory cost: the one-hots scale as tokens * g*cf*k — the
+  placement search (core/placement.py) sizes microbatches accordingly, and
+  the dispatch einsum FLOPs are visible in the roofline's
+  MODEL_FLOPS/HLO_FLOPs ratio (a documented GShard overhead).
+
+* ``scatter`` — scatter-add dispatch / gather combine.  No one-hot tensors
+  (memory-lean, no dispatch FLOPs) and exactly the same routing semantics,
+  but GSPMD replicates scatters whose indices cross the expert sharding,
+  so this path is for single-device execution and as the building block
+  for a future shard_map expert-parallel kernel.
+
+Routing semantics (identical in both): within a group of ``g`` tokens,
+capacity C = ceil(g * cf * k / E); slot s of token t claims position
+``running_count[expert]`` if below C, else the token-slot is dropped.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParallelCtx, _dense_init
+
+
+def init_moe(key, cfg) -> dict[str, jax.Array]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(k1, (d, E)),
+        "wg": _dense_init(k2, (E, d, ff)),
+        "wu": _dense_init(k3, (E, d, ff)),
+        "wd": _dense_init(k4, (E, ff, d), scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _route(logits: jax.Array, k: int):
+    """logits (..., E) -> (gate_vals (..., k), expert_idx (..., k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / jnp.clip(vals.sum(-1, keepdims=True), 1e-9)   # renormalize
+    return vals, idx
+
+
+def _group(cfg, tokens: int, group: Optional[int]) -> tuple[int, int, int]:
+    g = min(group if group is not None else cfg.moe_group, tokens)
+    while tokens % g != 0:       # shapes are powers of two; this terminates
+        g //= 2
+    G = tokens // g
+    C = max(1, math.ceil(g * cfg.capacity_factor * max(1, cfg.top_k)
+                         / cfg.n_experts))
+    return G, g, C
+
+
+def _aux_loss(logits: jax.Array, idx: jax.Array, E: int) -> jax.Array:
+    """Switch-style load-balance loss over the full batch."""
+    probs_mean = jax.nn.softmax(logits.astype(jnp.float32), -1).mean((0, 1))
+    frac = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), (0, 1))
+    return E * jnp.sum(probs_mean * frac)
+
+
+def _expert_ffn(p, xin: jax.Array, cfg, dt) -> jax.Array:
+    """xin: (..., E, C, d) -> (..., E, C, d) through per-expert gated MLP."""
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    h = act(jnp.einsum("...ecd,edf->...ecf", xin, p["wg"].astype(dt)))
+    h = h * jnp.einsum("...ecd,edf->...ecf", xin, p["wu"].astype(dt))
+    return jnp.einsum("...ecf,efd->...ecd", h, p["wd"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# einsum (GShard) dispatch — GSPMD-partitionable
+# ---------------------------------------------------------------------------
+def moe_layer_einsum(p, x: jax.Array, cfg, ctx: ParallelCtx,
+                     group: Optional[int] = None):
+    dt = ctx.compute_dtype
+    B, S, d = x.shape
+    E, k = cfg.n_experts, max(1, cfg.top_k)
+    G, g, C = _group(cfg, B * S, group)
+
+    xg = x.reshape(G, g, d)
+    logits = xg @ p["router"].astype(dt)                     # (G, g, E)
+    gate_vals, idx = _route(logits, k)
+    aux = _aux_loss(logits, idx, E)
+
+    # per-slot dispatch with capacity-priority across slots
+    disp = jnp.zeros((G, g, E, C), dt)
+    comb = jnp.zeros((G, g, E, C), jnp.float32)
+    prev_counts = jnp.zeros((G, E), jnp.int32)
+    for slot in range(k):
+        oh = jax.nn.one_hot(idx[..., slot], E, dtype=jnp.int32)   # (G, g, E)
+        pos = jnp.cumsum(oh, axis=1) - oh + prev_counts[:, None, :]
+        keep = (pos < C) & (oh > 0)
+        pos_oh = jax.nn.one_hot(pos, C, dtype=dt) * keep[..., None].astype(dt)
+        slot_disp = oh[..., None].astype(dt) * pos_oh             # (G,g,E,C)
+        disp = disp + slot_disp
+        comb = comb + slot_disp.astype(jnp.float32) * gate_vals[..., slot][..., None, None]
+        prev_counts = prev_counts + jnp.sum(oh * keep, axis=1)
+
+    # dispatch -> expert FFN -> combine.  Sharding constraints implement EP:
+    # groups shard over the batch axes, experts over the model axis — the
+    # G<->E resharding of xin/out_e is the all-to-all of expert parallelism.
+    ba = ctx.batch_axes or None
+    disp = ctx.shard(disp, ba, None, ctx.model_axis, None)
+    comb = ctx.shard(comb, ba, None, ctx.model_axis, None)
+    xin = jnp.einsum("gsec,gsd->gecd", disp, xg)                 # (G, E, C, d)
+    xin = ctx.shard(xin, ba, ctx.model_axis, None, None)
+    out_e = _expert_ffn(p, xin, cfg, dt)                         # (G, E, C, d)
+    out_e = ctx.shard(out_e, ba, ctx.model_axis, None, None)
+    out = jnp.einsum("gsec,gecd->gsd", comb.astype(dt), out_e)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# scatter/gather dispatch — memory-lean, single-shard semantics
+# ---------------------------------------------------------------------------
+def moe_layer_scatter(p, x: jax.Array, cfg, ctx: ParallelCtx,
+                      group: Optional[int] = None):
+    dt = ctx.compute_dtype
+    B, S, d = x.shape
+    E, k = cfg.n_experts, max(1, cfg.top_k)
+    G, g, C = _group(cfg, B * S, group)
+
+    xg = x.reshape(G, g, d)
+    logits = xg @ p["router"].astype(dt)
+    gate_vals, idx = _route(logits, k)
+    aux = _aux_loss(logits, idx, E)
+
+    gidx = jnp.arange(G)[:, None]                            # (G, 1)
+    prev_counts = jnp.zeros((G, E), jnp.int32)
+    slot_pos, slot_keep = [], []
+    for slot in range(k):
+        e_s = idx[..., slot]                                 # (G, g)
+        oh = jax.nn.one_hot(e_s, E, dtype=jnp.int32)         # (G, g, E)
+        pos = jnp.cumsum(oh, axis=1) - oh + prev_counts[:, None, :]
+        pos_tok = jnp.take_along_axis(pos, e_s[..., None], -1)[..., 0]
+        keep = pos_tok < C
+        slot_pos.append(jnp.where(keep, pos_tok, C))         # C = overflow bin
+        slot_keep.append(keep)
+        prev_counts = prev_counts + jnp.sum(oh * keep[..., None], axis=1)
+
+    xin = jnp.zeros((G, E, C + 1, d), dt)
+    for slot in range(k):
+        xin = xin.at[gidx, idx[..., slot], slot_pos[slot]].add(
+            jnp.where(slot_keep[slot][..., None], xg, 0))
+    out_e = _expert_ffn(p, xin[:, :, :C], cfg, dt)           # (G, E, C, d)
+    out_e = jnp.pad(out_e, ((0, 0), (0, 0), (0, 1), (0, 0)))  # overflow -> 0
+
+    out = jnp.zeros((G, g, d), dt)
+    for slot in range(k):
+        y = out_e[gidx, idx[..., slot], slot_pos[slot]]      # (G, g, d)
+        w = (gate_vals[..., slot] * slot_keep[slot])[..., None].astype(dt)
+        out = out + y * w
+    return out.reshape(B, S, d), aux
+
+
+def moe_layer(p, x: jax.Array, cfg, ctx: ParallelCtx,
+              group: Optional[int] = None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  Impl chosen by cfg.moe_impl
+    ('einsum' | 'scatter'); einsum is the SPMD-partitionable default."""
+    impl = getattr(cfg, "moe_impl", "einsum")
+    fn = moe_layer_scatter if impl == "scatter" else moe_layer_einsum
+    return fn(p, x, cfg, ctx, group)

@@ -1,0 +1,385 @@
+"""Decoder/encoder stack assembly.
+
+Layers are grouped into *superblocks* of P = lcm(|pattern|, moe_every) layers
+so every superblock is structurally identical; parameters are stacked over
+superblocks and the stack is applied with ``jax.lax.scan`` (small HLO even at
+48 layers).  ``n_layers % P`` trailing layers form an unrolled remainder.
+
+Each sublayer is pre-norm residual:
+    x += mix(norm(x))        mix in {attention, RG-LRU, RWKV6 time-mix}
+    x += ffn(norm(x))        ffn in {gated MLP, MoE}
+(+ an extra cross-attention sublayer in enc-dec decoder layers).
+
+Three entry points share the layer code:
+    apply_stack(...)                   training (no cache)
+    apply_stack(..., cache=...)        prefill (fills the decode cache)
+    apply_stack_decode(...)            one-token decode
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import moe as moe_mod
+from . import recurrent as rec
+from .layers import (ParallelCtx, attention_decode, attention_layer,
+                     decode_attention, init_attention, init_attn_cache,
+                     init_mlp, init_norm, mlp, rms_norm, _project_qkv)
+
+Pytree = Any
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def superblock_len(cfg) -> int:
+    p = len(cfg.layer_pattern)
+    if cfg.n_experts > 0:
+        p = _lcm(p, cfg.moe_every)
+    return p
+
+
+def layer_meta(cfg, i: int) -> dict:
+    return {"kind": cfg.kind_of_layer(i), "moe": cfg.is_moe_layer(i),
+            "cross": cfg.cross_attn and cfg.is_encdec}
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg, meta: dict) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model),
+                         "norm2": init_norm(cfg.d_model)}
+    kind = meta["kind"]
+    if kind in ("global", "local", "enc"):
+        p["attn"] = init_attention(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rec.init_rglru(ks[0], cfg)
+    elif kind == "rwkv":
+        p["rwkv"] = rec.init_rwkv(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if meta["cross"] and kind != "enc":
+        p["norm_x"] = init_norm(cfg.d_model)
+        p["cross"] = init_attention(ks[2], cfg)
+    if meta["moe"]:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_layer_cache(cfg, meta: dict, B: int, S: int,
+                     dtype=jnp.bfloat16) -> dict:
+    kind = meta["kind"]
+    c: dict[str, Any] = {}
+    if kind in ("global", "local", "enc"):
+        c["attn"] = init_attn_cache(cfg, B, S, kind, dtype)
+    elif kind == "rglru":
+        c["rec"] = rec.init_rglru_cache(cfg, B, dtype)
+    else:
+        c["rec"] = rec.init_rwkv_cache(cfg, B, dtype)
+    if meta["cross"] and kind != "enc":
+        c["cross_kv"] = {
+            "k": jnp.zeros((B, cfg.src_seq, cfg.n_kv, cfg.hd), dtype),
+            "v": jnp.zeros((B, cfg.src_seq, cfg.n_kv, cfg.hd), dtype)}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# cache write helpers (prefill)
+# ---------------------------------------------------------------------------
+def _write_attn_cache(entry: dict, k: jax.Array, v: jax.Array,
+                      kind: str) -> dict:
+    """Write S prefilled (roped) k/v into a decode cache buffer.
+
+    Global: positions [0, S) go to slots [0, S).  Local: the buffer is a
+    rolling window (slot = pos % C) so the last C entries land rolled by S%C.
+    """
+    S = k.shape[1]
+    C = entry["k"].shape[1]
+    kd, vd = k.astype(entry["k"].dtype), v.astype(entry["v"].dtype)
+    if kind == "local" and S >= C:
+        kd = jnp.roll(kd[:, -C:], S % C, axis=1)
+        vd = jnp.roll(vd[:, -C:], S % C, axis=1)
+        return {"k": kd, "v": vd}
+    n = min(S, C)
+    return {"k": lax.dynamic_update_slice_in_dim(entry["k"], kd[:, :n], 0, 1),
+            "v": lax.dynamic_update_slice_in_dim(entry["v"], vd[:, :n], 0, 1)}
+
+
+# ---------------------------------------------------------------------------
+# per-layer apply (training / prefill)
+# ---------------------------------------------------------------------------
+def apply_layer(p, x, cfg, ctx: ParallelCtx, meta: dict,
+                positions: jax.Array,
+                enc_out: Optional[jax.Array] = None,
+                cache: Optional[dict] = None):
+    """Returns (x, aux_loss, updated_cache_or_None)."""
+    kind = meta["kind"]
+    dt = ctx.compute_dtype
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("global", "local", "enc"):
+        o = attention_layer(p["attn"], h, cfg, ctx, kind, positions)
+        if cache is not None:
+            _, k, v = _project_qkv(p["attn"], h, cfg, positions, dt, ctx=ctx)
+            new_cache["attn"] = _write_attn_cache(cache["attn"], k, v, kind)
+    elif kind == "rglru":
+        if cache is not None:
+            o, st = rec.rglru_layer(p["rglru"], h, cfg, ctx, return_cache=True)
+            new_cache["rec"] = jax.tree.map(
+                lambda a, b: a.astype(b.dtype), st, cache["rec"])
+        else:
+            o = rec.rglru_layer(p["rglru"], h, cfg, ctx)
+    else:  # rwkv
+        if cache is not None:
+            o, st = rec.rwkv_layer(p["rwkv"], h, cfg, ctx, return_cache=True)
+            new_cache["rec"] = jax.tree.map(
+                lambda a, b: a.astype(b.dtype), st, cache["rec"])
+        else:
+            o = rec.rwkv_layer(p["rwkv"], h, cfg, ctx)
+    x = x + o
+    if meta["cross"] and kind != "enc" and enc_out is not None:
+        hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        o, ckv = _cross_attention(p["cross"], hx, enc_out, cfg, ctx)
+        x = x + o
+        if cache is not None:
+            new_cache["cross_kv"] = jax.tree.map(
+                lambda a, b: a.astype(b.dtype), ckv, cache["cross_kv"])
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if meta["moe"]:
+        o, aux = moe_mod.moe_layer(p["moe"], h, cfg, ctx)
+    else:
+        o = mlp(p["mlp"], h, cfg, ctx)
+    x = x + o
+    return x, aux, new_cache
+
+
+def _cross_attention(p, x, enc_out, cfg, ctx: ParallelCtx):
+    """Decoder cross-attention over encoder output (no mask, no rope)."""
+    from .layers import full_attention
+    dt = ctx.compute_dtype
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+    Senc = enc_out.shape[1]
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Senc, cfg.n_kv, hd)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Senc, cfg.n_kv, hd)
+    o = full_attention(q, k, v, causal=False)
+    o = o.reshape(B, S, cfg.n_heads * hd) @ p["wo"].astype(dt)
+    return o, {"k": k, "v": v}
+
+
+def _cross_decode(p, x, cross_kv, cfg, ctx: ParallelCtx) -> jax.Array:
+    dt = ctx.compute_dtype
+    B = x.shape[0]
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, cfg.n_heads, hd)
+    k = cross_kv["k"].astype(dt)
+    v = cross_kv["v"].astype(dt)
+    mask = jnp.ones((B, k.shape[1]), bool)
+    o = decode_attention(q, k, v, length_mask=mask)
+    return o.reshape(B, 1, cfg.n_heads * hd) @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# per-layer apply (decode)
+# ---------------------------------------------------------------------------
+def apply_layer_decode(p, x, cache, cfg, ctx: ParallelCtx, meta: dict,
+                       positions: jax.Array):
+    kind = meta["kind"]
+    new_cache = dict(cache)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("global", "local", "enc"):
+        o, new_cache["attn"] = attention_decode(p["attn"], h, cache["attn"],
+                                                cfg, ctx, kind, positions)
+    elif kind == "rglru":
+        o, new_cache["rec"] = rec.rglru_decode(p["rglru"], h, cache["rec"],
+                                               cfg, ctx)
+    else:
+        o, new_cache["rec"] = rec.rwkv_decode(p["rwkv"], h, cache["rec"],
+                                              cfg, ctx)
+    x = x + o
+    if meta["cross"] and kind != "enc" and "cross_kv" in cache:
+        hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + _cross_decode(p["cross"], hx, cache["cross_kv"], cfg, ctx)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if meta["moe"]:
+        o, _ = moe_mod.moe_layer(p["moe"], h, cfg, ctx)
+    else:
+        o = mlp(p["mlp"], h, cfg, ctx)
+    return x + o, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack = scan(superblocks) + unrolled remainder
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StackMeta:
+    P: int
+    n_super: int
+    remainder: int
+    metas: tuple           # per-sublayer meta dicts, len P
+    rem_metas: tuple
+
+
+def stack_meta(cfg, n_layers: Optional[int] = None,
+               pattern_override: Optional[tuple] = None) -> StackMeta:
+    n = n_layers if n_layers is not None else cfg.n_layers
+    if pattern_override is not None:
+        P = len(pattern_override)
+        if P > n:
+            P = n
+        n_super, rem = n // P, n % P
+        metas = tuple({"kind": pattern_override[j], "moe": False,
+                       "cross": False} for j in range(P))
+        rem_metas = tuple({"kind": pattern_override[j], "moe": False,
+                           "cross": False} for j in range(rem))
+        return StackMeta(P, n_super, rem, metas, rem_metas)
+    P = superblock_len(cfg)
+    if P > n:
+        P = n
+    n_super = n // P
+    rem = n - n_super * P
+    metas = tuple(layer_meta(cfg, j) for j in range(P))
+    rem_metas = tuple(layer_meta(cfg, n_super * P + j) for j in range(rem))
+    return StackMeta(P=P, n_super=n_super, remainder=rem, metas=metas,
+                     rem_metas=rem_metas)
+
+
+def init_stack(key, cfg, sm: StackMeta) -> dict:
+    keys = jax.random.split(key, sm.n_super + 1)
+    sb_params = []
+    for s in range(sm.n_super):
+        lkeys = jax.random.split(keys[s], sm.P)
+        sb_params.append(tuple(init_layer(lkeys[j], cfg, sm.metas[j])
+                               for j in range(sm.P)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sb_params) \
+        if sm.n_super > 0 else ()
+    rem_keys = jax.random.split(keys[-1], max(sm.remainder, 1))
+    rem = tuple(init_layer(rem_keys[j], cfg, sm.rem_metas[j])
+                for j in range(sm.remainder))
+    return {"blocks": stacked, "rem": rem}
+
+
+def init_stack_cache(cfg, sm: StackMeta, B: int, S: int,
+                     dtype=jnp.bfloat16) -> dict:
+    per_sb = tuple(init_layer_cache(cfg, sm.metas[j], B, S, dtype)
+                   for j in range(sm.P))
+    stacked = jax.tree.map(
+        lambda x: jnp.zeros((sm.n_super,) + x.shape, x.dtype), per_sb) \
+        if sm.n_super > 0 else ()
+    rem = tuple(init_layer_cache(cfg, sm.rem_metas[j], B, S, dtype)
+                for j in range(sm.remainder))
+    return {"blocks": stacked, "rem": rem}
+
+
+def _index_cache(cblocks, i):
+    return jax.tree.map(
+        lambda buf: lax.dynamic_index_in_dim(buf, i, 0, keepdims=False),
+        cblocks)
+
+
+def _update_cache(cblocks, new_c, i):
+    return jax.tree.map(
+        lambda buf, nc: lax.dynamic_update_index_in_dim(
+            buf, nc.astype(buf.dtype), i, 0),
+        cblocks, new_c)
+
+
+def apply_stack(stack_params, x, cfg, ctx: ParallelCtx, sm: StackMeta,
+                positions, enc_out=None, cache: Optional[dict] = None):
+    """Training (cache=None) or prefill (cache filled). Returns
+    (x, aux_total, new_cache_or_None).
+
+    The stacked cache travels as a scan CARRY updated in place with
+    dynamic_update_index (not as xs/ys, which would double-buffer the
+    entire KV cache in HBM — a 2x cache-memory regression measured in the
+    decode_32k dry-run cells)."""
+    fill = cache is not None
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if fill:
+        def sb_fn(carry, inp):
+            h, aux, cblocks = carry
+            i, p_sb = inp
+            c_sb = _index_cache(cblocks, i)
+            new_cs = []
+            for j in range(sm.P):
+                h, a, cj = apply_layer(p_sb[j], h, cfg, ctx, sm.metas[j],
+                                       positions, enc_out, c_sb[j])
+                aux = aux + a
+                new_cs.append(cj)
+            cblocks = _update_cache(cblocks, tuple(new_cs), i)
+            return (h, aux, cblocks), None
+    else:
+        def sb_fn(carry, p_sb):
+            h, aux = carry
+            for j in range(sm.P):
+                h, a, _ = apply_layer(p_sb[j], h, cfg, ctx, sm.metas[j],
+                                      positions, enc_out, None)
+                aux = aux + a
+            return (h, aux), None
+
+    if ctx.remat == "block":
+        sb_fn = jax.checkpoint(sb_fn)
+
+    sb_caches = cache["blocks"] if fill else ()
+    if sm.n_super > 0:
+        if fill:
+            (x, aux, sb_caches), _ = lax.scan(
+                sb_fn, (x, aux0, cache["blocks"]),
+                (jnp.arange(sm.n_super), stack_params["blocks"]))
+        else:
+            (x, aux), _ = lax.scan(sb_fn, (x, aux0), stack_params["blocks"])
+    else:
+        aux = aux0
+    rem_caches = []
+    for j in range(sm.remainder):
+        cj = cache["rem"][j] if fill else None
+        x, a, cj = apply_layer(stack_params["rem"][j], x, cfg, ctx,
+                               sm.rem_metas[j], positions, enc_out, cj)
+        aux = aux + a
+        rem_caches.append(cj)
+    new_cache = ({"blocks": sb_caches, "rem": tuple(rem_caches)}
+                 if fill else None)
+    return x, aux, new_cache
+
+
+def apply_stack_decode(stack_params, x, cache, cfg, ctx: ParallelCtx,
+                       sm: StackMeta, positions):
+    """One-token decode; the stacked cache is a scan carry (in-place)."""
+    def sb_fn(carry, inp):
+        h, cblocks = carry
+        i, p_sb = inp
+        c_sb = _index_cache(cblocks, i)
+        new_c = []
+        for j in range(sm.P):
+            h, cj = apply_layer_decode(p_sb[j], h, c_sb[j], cfg, ctx,
+                                       sm.metas[j], positions)
+            new_c.append(cj)
+        cblocks = _update_cache(cblocks, tuple(new_c), i)
+        return (h, cblocks), None
+
+    if sm.n_super > 0:
+        (x, new_blocks), _ = lax.scan(
+            sb_fn, (x, cache["blocks"]),
+            (jnp.arange(sm.n_super), stack_params["blocks"]))
+    else:
+        new_blocks = ()
+    new_rem = []
+    for j in range(sm.remainder):
+        x, cj = apply_layer_decode(stack_params["rem"][j], x,
+                                   cache["rem"][j], cfg, ctx,
+                                   sm.rem_metas[j], positions)
+        new_rem.append(cj)
+    return x, {"blocks": new_blocks, "rem": tuple(new_rem)}

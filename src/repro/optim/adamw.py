@@ -1,0 +1,97 @@
+"""AdamW with dtype-configurable state (fp32 / bf16 8-byte-per-param modes),
+warmup-cosine schedule, global-norm clipping — pure JAX, pytree-native.
+
+State layout is a flat dict so sharding rules apply uniformly:
+    state = {"step": (), "m": tree, "v": tree}
+ZeRO-style sharding of m/v over the data axis is applied by the launcher's
+sharding rules (see launch/sharding.py), not here.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32     # bf16 halves optimizer memory
+
+
+def schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params: Pytree, cfg: OptConfig) -> Pytree:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_update(params: Pytree, grads: Pytree, state: Pytree,
+                 cfg: OptConfig) -> tuple[Pytree, Pytree, dict]:
+    step = state["step"] + 1
+    lr = schedule(step, cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(cfg.state_dtype),
+                v_new.astype(cfg.state_dtype))
+
+    # flatten explicitly: the param tree contains structural tuples (the
+    # unrolled remainder layers), so tuple-is_leaf unzipping would mis-fire.
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+    triples = [upd(p, g, m, v) for p, g, m, v in
+               zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    params_new = jax.tree_util.tree_unflatten(treedef, [t[0] for t in triples])
+    m_new = jax.tree_util.tree_unflatten(treedef, [t[1] for t in triples])
+    v_new = jax.tree_util.tree_unflatten(treedef, [t[2] for t in triples])
+    new_state = {"step": step, "m": m_new, "v": v_new}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params_new, new_state, metrics

@@ -1,0 +1,73 @@
+"""Gradient compression: blockwise int8 quantization with error feedback.
+
+Used by the distributed-optimization path to shrink cross-pod (DCN) gradient
+traffic ~4x: gradients are quantized to int8 with a per-block fp32 scale
+before the reduction, and the quantization residual is carried in an error-
+feedback buffer so the compression is unbiased over time (momentum-SGD /
+Adam tolerate this well in practice).
+
+On a real multi-pod run the quantized tensors are what crosses DCN (the
+launcher reduces the int8 payload inside shard_map); here the transform is
+exact and testable standalone.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+BLOCK = 256
+
+
+def _pad_to(x: jax.Array, m: int) -> jax.Array:
+    pad = (-x.size) % m
+    return jnp.pad(x.reshape(-1), (0, pad))
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g -> (int8 payload, per-block fp32 scales)."""
+    flat = _pad_to(g.astype(jnp.float32), BLOCK).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(flat / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = q.astype(jnp.float32) * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compress_grads(grads: Pytree, error: Pytree) -> tuple[Pytree, Pytree]:
+    """Returns (compressed-then-decompressed grads, new error buffers).
+
+    ``error`` is a pytree of fp32 buffers shaped like grads (init zeros).
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize(target)
+        deq = dequantize(q, s, g.shape, jnp.float32)
+        return deq.astype(g.dtype), target - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_err
+
+
+def init_error(grads_like: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compressed_bytes(grads: Pytree) -> int:
+    """DCN bytes after compression (int8 payload + fp32 block scales)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        blocks = -(-n // BLOCK)
+        total += n + 4 * blocks
+    return total

@@ -1,0 +1,106 @@
+"""Serving engine: continuous batching over a fixed slot pool.
+
+``ServeEngine`` keeps a (max_slots, max_len) KV cache; requests claim free
+slots, are prefillled (per-request), then advance together in batched decode
+steps; finished slots are recycled mid-flight (continuous batching).  The
+multi-tenant *placement* of engines onto pod slices — with SLO-aware
+contention checks — is handled by the H-EYE Orchestrator (see
+examples/serve_fleet.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (P,) int32
+    max_new: int = 16
+    out: list[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_slots: int = 4,
+                 max_len: int = 128, cache_dtype=jnp.float32) -> None:
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(max_slots, max_len, dtype=cache_dtype)
+        self.free = list(range(max_slots))
+        self.active: dict[int, Request] = {}
+        self.pos = np.zeros(max_slots, np.int32)
+        self._decode = jax.jit(model.decode_step)
+        self._tokens_decoded = 0
+
+    # -- slot management ------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        if not self.free:
+            return False
+        req.slot = self.free.pop()
+        self.active[req.slot] = req
+        # per-request prefill: feed prompt tokens through decode steps for the
+        # claimed slot (batched single-token steps keep the cache layout
+        # uniform across slots; bulk prefill is an optimization knob)
+        for t, tok in enumerate(req.prompt):
+            logits = self._step_slot(req.slot, int(tok), t)
+        self.pos[req.slot] = len(req.prompt)
+        req.out.append(int(np.argmax(logits)))
+        return True
+
+    def _step_slot(self, slot: int, token: int, position: int):
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        poss = self.pos.copy()
+        toks[slot, 0] = token
+        poss[slot] = position
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks), jnp.asarray(poss))
+        self._tokens_decoded += 1
+        return np.asarray(logits[slot])
+
+    # -- batched decode ------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One decode step for every active slot; returns finished requests."""
+        if not self.active:
+            return []
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.out[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(self.pos))
+        logits = np.asarray(logits)
+        finished = []
+        for slot, req in list(self.active.items()):
+            self.pos[slot] += 1
+            req.out.append(int(np.argmax(logits[slot])))
+            self._tokens_decoded += 1
+            if (len(req.out) >= req.max_new
+                    or self.pos[slot] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.free.append(slot)
+                self.pos[slot] = 0
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Continuous batching: admit whenever a slot frees up."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or self.active:
+            while pending and self.free:
+                self.admit(pending.pop(0))
+            done.extend(self.step())
+        return done

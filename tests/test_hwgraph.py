@@ -1,0 +1,138 @@
+"""HW-GRAPH unit tests (paper §3.3): topology queries, compute paths,
+shared-resource discovery, dynamic adaptability."""
+import pytest
+
+from repro.core import (HWGraph, Node, NodeKind, ProcessingUnit, Unit,
+                        build_edge_device, build_server, build_testbed)
+from repro.core.topology import build_tpu_fleet, make_task, vr_mining_profile
+
+
+def test_add_and_query_nodes():
+    g = HWGraph()
+    g.add_node(Node("root", NodeKind.GROUP, attrs={"orc_level": "root"}))
+    g.add_node(Node("dev", NodeKind.GROUP, parent="root",
+                    attrs={"orc_level": "device"}))
+    pu = g.add_node(ProcessingUnit("dev.cpu", parent="dev"))
+    assert "dev.cpu" in g
+    assert g.parent_of("dev.cpu").name == "dev"
+    assert g.children_of("root")[0].name == "dev"
+    assert g.pus() == [pu]
+    assert g.pus(under="dev") == [pu]
+
+
+def test_duplicate_node_rejected():
+    g = HWGraph()
+    g.add_node(Node("a", NodeKind.STORAGE))
+    with pytest.raises(ValueError):
+        g.add_node(Node("a", NodeKind.STORAGE))
+
+
+def test_edge_requires_known_nodes():
+    g = HWGraph()
+    g.add_node(Node("a", NodeKind.STORAGE))
+    with pytest.raises(KeyError):
+        g.add_edge("a", "missing")
+
+
+def test_compute_path_reaches_dram():
+    g = HWGraph()
+    g.add_node(Node("soc", NodeKind.GROUP, attrs={"orc_level": "device"}))
+    build = lambda n, k, rc=None: g.add_node(
+        Node(n, k, parent="soc", attrs={"rclass": rc} if rc else {}))
+    build("dram", NodeKind.STORAGE, "dram")
+    build("l2", NodeKind.STORAGE, "l2")
+    pu = g.add_node(ProcessingUnit("cpu", parent="soc"))
+    g.add_edge("cpu", "l2", latency=1e-9)
+    g.add_edge("l2", "dram", latency=1e-8)
+    assert pu.get_compute_path() == ["l2", "dram"]
+
+
+def test_shared_resources_dla_pva_meet_at_sram(testbed):
+    """The paper's Fig. 4 example: DLA and PVA share SRAM (+DRAM behind it)."""
+    g = testbed.graph
+    e = testbed.edges[0]
+    shared = g.shared_resources(f"{e}.dla", f"{e}.pva")
+    assert f"{e}.sram" in shared
+    # cross-cluster CPUs meet at L3, not at either L2
+    shared_cpu = g.shared_resources(f"{e}.cpu0", f"{e}.cpu1")
+    assert f"{e}.l3" in shared_cpu
+    assert f"{e}.l2_0" not in shared_cpu and f"{e}.l2_1" not in shared_cpu
+
+
+def test_nearest_shared_orders_cache_levels(testbed):
+    from repro.core import DecoupledSlowdown
+    g = testbed.graph
+    e = testbed.edges[0]
+    sd = DecoupledSlowdown(g)
+    # same-device CPU+GPU meet at the LLC before DRAM
+    hit = sd.nearest_shared(f"{e}.cpu0", f"{e}.gpu")
+    assert g.nodes[hit].attrs["rclass"] == "llc"
+    # different devices share nothing
+    e2 = testbed.edges[1]
+    assert sd.nearest_shared(f"{e}.cpu0", f"{e2}.cpu0") is None
+
+
+def test_transfer_time_bottleneck_and_latency(testbed):
+    g = testbed.graph
+    e, s = testbed.edges[0], testbed.servers[0]
+    t0 = g.transfer_time(e, s, 0.0)
+    t1 = g.transfer_time(e, s, 1e6)
+    assert t1 > t0 > 0.0
+    assert g.transfer_time(e, e, 1e9) == 0.0
+
+
+def test_mark_dead_excludes_subtree(testbed):
+    from repro.core import build_testbed
+    tb = build_testbed()
+    g = tb.graph
+    e = tb.edges[0]
+    n_before = len(g.pus())
+    g.mark_dead(e)
+    assert all(not p.name.startswith(e + ".") for p in g.pus())
+    g.mark_alive(e)
+    assert len(g.pus()) == n_before
+
+
+def test_set_bandwidth_dynamic(testbed):
+    from repro.core import build_testbed
+    tb = build_testbed()
+    g = tb.graph
+    e = tb.edges[0]
+    before = g.transfer_time(e, tb.servers[0], 10e6)
+    g.set_bandwidth(f"link_{e}", 1e6)   # throttle the edge's uplink
+    after = g.transfer_time(e, tb.servers[0], 10e6)
+    assert after > before
+    with pytest.raises(KeyError):
+        g.set_bandwidth("no_such_link", 1.0)
+
+
+def test_predict_requires_model():
+    g = HWGraph()
+    g.add_node(Node("d", NodeKind.GROUP, attrs={"orc_level": "device"}))
+    pu = g.add_node(ProcessingUnit("d.x", parent="d"))
+    with pytest.raises(ValueError):
+        pu.predict(make_task("mm"))
+
+
+def test_profiled_model_predicts_seconds(testbed):
+    g = testbed.graph
+    e = testbed.edges[0]
+    pu = g.nodes[f"{e}.gpu"]
+    t = pu.predict(make_task("render"))
+    assert 0.001 < t < 1.0
+    with pytest.raises(ValueError):
+        pu.predict(make_task("render"), Unit.JOULES)
+
+
+def test_tpu_fleet_topology():
+    tb = build_tpu_fleet(n_pods=2, hosts_per_pod=2, chips_per_host=4)
+    g = tb.graph
+    assert len(g.pus()) == 2 * 2 * 4
+    chip = g.pus()[0]
+    assert chip.attrs["peak_flops"] == 197e12
+    # chips on different hosts of one pod are connected (host ring)
+    p = g.path("pod0.host0", "pod0.host1")
+    assert len(p) >= 2
+    # cross-pod goes through the abstract DCN node
+    hops = [n for n, _ in g.path("pod0.host0", "pod1.host0")]
+    assert "dcn" in hops

@@ -1,0 +1,169 @@
+"""Pallas kernel validation: interpret-mode sweeps vs the pure-jnp oracles
+in kernels/ref.py (shapes x dtypes x masking variants), plus causality and
+numerical-stability properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.recurrent import wkv_chunked
+
+
+def _qkv(key, B, S, Hq, Hkv, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    return (x.astype(dtype) for x in (q, k, v))
+
+
+TOL = {jnp.float32: 2e-3, jnp.bfloat16: 6e-2}
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 128, 2, 2, 64),     # MHA
+    (2, 256, 4, 2, 64),     # GQA 2:1
+    (1, 256, 8, 1, 128),    # MQA
+    (1, 512, 4, 4, 256),    # large head dim (gemma-class)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal_sweep(key, B, S, Hq, Hkv, hd, dtype):
+    q, k, v = _qkv(key, B, S, Hq, Hkv, hd, dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [64, 128, 512])
+def test_flash_attention_sliding_window(key, window):
+    q, k, v = _qkv(key, 1, 512, 4, 2, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=128, block_k=128)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-3)
+
+
+@pytest.mark.parametrize("softcap", [20.0, 50.0])
+def test_flash_attention_softcap(key, softcap):
+    """gemma2's logit softcapping inside the kernel."""
+    q, k, v = _qkv(key, 1, 256, 4, 4, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, softcap=softcap,
+                              block_q=128, block_k=128)
+    want = ref.attention_ref(q, k, v, causal=True, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-3)
+
+
+def test_flash_attention_causality(key):
+    """Perturbing future tokens must not change past outputs."""
+    q, k, v = _qkv(key, 1, 256, 2, 2, 64, jnp.float32)
+    out1 = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    k2 = k.at[:, 128:].add(100.0)
+    v2 = v.at[:, 128:].add(-50.0)
+    out2 = ops.flash_attention(q, k2, v2, causal=True,
+                               block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(out1[:, :128]),
+                               np.asarray(out2[:, :128]), atol=1e-5)
+
+
+def test_flash_attention_extreme_logits(key):
+    """Online softmax must survive large score magnitudes (no NaN/overflow)."""
+    q, k, v = _qkv(key, 1, 128, 2, 2, 64, jnp.float32)
+    out = ops.flash_attention(q * 100.0, k * 100.0, v,
+                              causal=True, block_q=64, block_k=64)
+    assert not np.any(np.isnan(np.asarray(out)))
+    want = ref.attention_ref(q * 100.0, k * 100.0, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-3)
+
+
+def test_flash_attention_indivisible_block_raises(key):
+    from repro.kernels.flash_attention import flash_attention_bhsd
+    q = jnp.zeros((2, 100, 64))
+    with pytest.raises(ValueError):
+        flash_attention_bhsd(q, q, q, num_kv_heads=2, block_q=64, block_k=64,
+                             interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# lru_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (1, 64, 128, 32, 128),
+    (2, 256, 256, 128, 128),
+    (1, 128, 100, 64, 64),     # W padded to block multiple
+    (3, 96, 64, 256, 512),     # blocks clamp to dims
+])
+def test_lru_scan_sweep(key, B, S, W, bs, bw):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (B, S, W), jnp.float32, 0.7, 0.999)
+    b = jax.random.normal(k2, (B, S, W), jnp.float32)
+    out = ops.lru_scan(a, b, block_s=bs, block_w=bw)
+    want = ref.lru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.integers(2, 6).map(lambda e: 2 ** e),
+       w=st.integers(4, 130),
+       seed=st.integers(0, 2**31 - 1))
+def test_lru_scan_property(s, w, seed):
+    """Property sweep over arbitrary (S, W): kernel == sequential scan."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    a = jax.random.uniform(k1, (1, s, w), jnp.float32, 0.0, 1.0)
+    b = jax.random.normal(k2, (1, s, w), jnp.float32)
+    out = ops.lru_scan(a, b, block_s=32, block_w=64)
+    want = ref.lru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_lru_scan_decay_bound(key):
+    """|a| <= 1 and bounded b => output bounded by sum of |b| tail (stability)."""
+    a = jnp.full((1, 64, 32), 0.5)
+    b = jnp.ones((1, 64, 32))
+    out = ops.lru_scan(a, b, block_s=32, block_w=32)
+    assert float(jnp.max(jnp.abs(out))) <= 2.0 + 1e-6   # geometric sum bound
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV (rwkv6) vs naive recurrence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (64, 64), (48, 16)])
+def test_wkv_chunked_matches_ref(key, S, chunk):
+    B, H, hd = 2, 2, 16
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    o1, s1 = wkv_chunked(r, k, v, lw, u, chunk=chunk)
+    o2, s2 = ref.wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_wkv_carried_state(key):
+    """Splitting a sequence in halves with carried state == one pass."""
+    B, S, H, hd = 1, 32, 2, 8
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.3 - 2.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    o_full, s_full = wkv_chunked(r, k, v, lw, u, chunk=8)
+    h = S // 2
+    o1, s1 = wkv_chunked(r[:, :h], k[:, :h], v[:, :h], lw[:, :h], u, chunk=8)
+    o2, s2 = wkv_chunked(r[:, h:], k[:, h:], v[:, h:], lw[:, h:], u,
+                         chunk=8, state0=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=2e-5, rtol=1e-4)

@@ -1,0 +1,241 @@
+"""Launch-layer tests: sharding rules, placement search, HLO analysis,
+data pipeline.  These run on the single real CPU device (a (1,1) mesh) —
+the 512-device path is exercised by launch/dryrun.py itself."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_configs, get_config
+from repro.configs.shapes import SHAPES, cells, input_specs, shape_applicable
+from repro.core.placement import (Plan, cache_bytes_total, candidate_plans,
+                                  choose_plan, model_flops, predict_plan)
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import batch_axes, make_host_mesh
+from repro.launch.sharding import _logical_for, _resolve, make_shardings
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def test_logical_rules():
+    assert _logical_for("stack/rem/0/attn/wq", 2) == ("fsdp", "tp")
+    assert _logical_for("stack/rem/0/attn/wo", 2) == ("tp", "fsdp")
+    assert _logical_for("embed", 2) == ("tp", "fsdp")
+    assert _logical_for("stack/blocks/0/moe/wg", 3) == ("tp", "fsdp", None)
+    # stacked scan layers get a leading None
+    assert _logical_for("stack/blocks/0/attn/wq", 3) == (None, "fsdp", "tp")
+    # caches honor cache_mode
+    assert _logical_for("blocks/0/attn/k", 4) == ("batch", None, None, None)
+    assert _logical_for("blocks/0/attn/k", 4, "seq") == ("batch", "ctp", None, None)
+    # 5-dim stacked cache pads a leading None
+    assert _logical_for("blocks/0/attn/k", 5, "heads") == (
+        None, "batch", None, "ctp", None)
+    assert _logical_for("unknown/leaf", 3) == (None, None, None)
+
+
+def test_resolve_divisibility_fallback():
+    mesh = make_host_mesh()          # (1,1) on CPU: everything divides
+    spec = _resolve(("fsdp", "tp"), (8, 8), mesh, "tp_fsdp", ("data",))
+    assert isinstance(spec, P)
+    # simulated larger mesh via a fake object
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 4)
+    spec = _resolve(("fsdp", "tp"), (6, 8), FakeMesh, "tp_fsdp", ("data",))
+    assert spec[0] is None          # 6 % 4 != 0 -> replicated
+    assert spec[1] == "model"
+    spec = _resolve(("batch", None), (8, 3), FakeMesh, "tp_fsdp", ("data",))
+    assert spec[0] == "data"
+    # ctp always maps to model regardless of policy
+    spec = _resolve(("batch", "ctp", None, None), (8, 64, 2, 4),
+                    FakeMesh, "fsdp_only", ("data",))
+    assert spec[1] == "model"
+
+
+def test_make_shardings_tree():
+    mesh = make_host_mesh()
+    tree = {"embed": jnp.zeros((16, 8)),
+            "stack": {"rem": ({"mlp": {"wg": jnp.zeros((8, 32))}},)}}
+    sh = make_shardings(tree, mesh)
+    leaves = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(leaves) == 2
+
+
+# ---------------------------------------------------------------------------
+# shapes / cells
+# ---------------------------------------------------------------------------
+def test_cells_cover_assignment():
+    all_cells = cells(include_skipped=True)
+    assert len(all_cells) == 40      # 10 archs x 4 shapes
+    runnable = [c for c in all_cells if c[2]]
+    assert len(runnable) == 32       # long_500k runs only for 2 archs
+    skipped = [(a, s) for a, s, ok, _ in all_cells if not ok]
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("recurrentgemma-9b", "long_500k") not in skipped
+    assert ("rwkv6-1.6b", "long_500k") not in skipped
+
+
+def test_input_specs_modes():
+    cfg = get_config("whisper-large-v3")
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert set(tr) == {"tokens", "labels", "frames"}
+    assert tr["tokens"].shape == (256, 4096)
+    de = input_specs(cfg, SHAPES["decode_32k"])
+    assert set(de) == {"tokens", "positions", "frames"}
+    assert de["tokens"].shape == (128, 1)
+    vl = input_specs(get_config("phi-3-vision-4.2b"), SHAPES["prefill_32k"])
+    assert "patches" in vl
+
+
+# ---------------------------------------------------------------------------
+# placement search
+# ---------------------------------------------------------------------------
+def test_choose_plan_fits_most_cells():
+    notes = []
+    for arch in all_configs():
+        cfg = get_config(arch)
+        for sname in ("train_4k", "prefill_32k", "decode_32k"):
+            plan, cost = choose_plan(cfg, SHAPES[sname], (16, 16),
+                                     ("data", "model"))
+            if plan.notes:
+                notes.append((arch, sname))
+    # only 400B-class cells may be structurally infeasible on one pod
+    assert all("llama4" in a for a, _ in notes), notes
+
+
+def test_plan_prefers_conservative_dtypes():
+    cfg = get_config("gemma3-1b")
+    plan, _ = choose_plan(cfg, SHAPES["train_4k"], (16, 16),
+                          ("data", "model"))
+    assert plan.param_dtype == "float32"
+    assert plan.state_dtype == "float32"
+
+
+def test_predict_plan_memory_monotonic_in_microbatches():
+    cfg = get_config("gemma3-4b")
+    mems = []
+    for mb in (1, 4, 16):
+        c = predict_plan(cfg, SHAPES["train_4k"], (16, 16),
+                         ("data", "model"),
+                         Plan(microbatches=mb))
+        mems.append(c.mem_bytes)
+    assert mems[0] > mems[1] > mems[2]
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = get_config("minitron-4b")
+    moe = get_config("llama4-maverick-400b-a17b")
+    f_moe = model_flops(moe, 1e6, "train")
+    # active-param flops must be ~25x below total-param flops for 400b/17b
+    n_total = moe.param_count()
+    f_if_total = 6.0 * n_total * 1e6
+    assert f_moe < 0.15 * f_if_total
+    assert model_flops(dense, 1e6, "serve") == pytest.approx(
+        model_flops(dense, 1e6, "train") / 3.0)
+
+
+def test_cache_bytes_families():
+    g3 = cache_bytes_total(get_config("gemma3-4b"), B=1, S=32768)
+    rw = cache_bytes_total(get_config("rwkv6-1.6b"), B=1, S=32768)
+    assert rw < g3 / 50       # state-space cache is constant in S
+    # and truly constant: quadrupling S must not change it
+    assert rw == cache_bytes_total(get_config("rwkv6-1.6b"), B=1, S=131072)
+
+
+def test_multipod_candidates_include_pod_fsdp():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    plans = candidate_plans(cfg, SHAPES["train_4k"])
+    assert any(p.policy == "fsdp_pod" for p in plans)
+    plan, cost = choose_plan(cfg, SHAPES["train_4k"], (2, 16, 16),
+                             ("pod", "data", "model"))
+    assert cost.mem_bytes < 16e9 or plan.notes
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis (loop-aware cost parsing)
+# ---------------------------------------------------------------------------
+def test_hlo_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                            jax.ShapeDtypeStruct((64, 16), jnp.float32)
+                            ).compile()
+    rep = analyze_hlo(comp.as_text())
+    assert rep.dot_flops == 2 * 32 * 64 * 16
+
+
+def test_hlo_while_multiplier():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 16), jnp.float32),
+                            jax.ShapeDtypeStruct((16, 16), jnp.float32)
+                            ).compile()
+    rep = analyze_hlo(comp.as_text())
+    assert rep.dot_flops == 7 * 2 * 8 * 16 * 16
+    assert rep.n_while == 1
+
+
+def test_hlo_collective_parsing_canned():
+    txt = """
+HloModule m
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %all-reduce = f32[128,256]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %all-gather = f32[128,256]{1,0} all-gather(%all-reduce), channel_id=2, dimensions={1}
+}
+"""
+    rep = analyze_hlo(txt)
+    assert rep.collective_bytes["all-reduce"] == 128 * 256 * 4
+    assert rep.collective_bytes["all-gather"] == 128 * 256 * 4
+    terms = roofline_terms(rep, n_chips=8)
+    assert terms["t_collective_s"] > 0
+    assert terms["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_hlo_nested_loops_multiply():
+    def f(x, w):
+        def outer(c, _):
+            def inner(h, _):
+                return jnp.tanh(h @ w), ()
+            h, _ = jax.lax.scan(inner, c, None, length=3)
+            return h, ()
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                            jax.ShapeDtypeStruct((8, 8), jnp.float32)
+                            ).compile()
+    rep = analyze_hlo(comp.as_text())
+    assert rep.dot_flops == 15 * 2 * 4 * 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_synthetic_data_deterministic():
+    from repro.data.pipeline import DataConfig, synthetic_batches
+    cfg = DataConfig(batch=4, seq=16, vocab=128, seed=3)
+    a = next(synthetic_batches(cfg))
+    b = next(synthetic_batches(cfg))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    assert a["labels"].max() < 128
+    # labels are next-token shifted
+    it = synthetic_batches(cfg)
+    batch = next(it)
+    assert not np.array_equal(batch["tokens"], batch["labels"])
+
+
+def test_prefetcher_drains():
+    from repro.data.pipeline import DataConfig, Prefetcher, synthetic_batches
+    it = synthetic_batches(DataConfig(batch=2, seq=8, vocab=64))
+    pf = Prefetcher(it, depth=2)
+    batches = [next(pf) for _ in range(4)]
+    assert all(b["tokens"].shape == (2, 8) for b in batches)
+    pf.close()

@@ -1,0 +1,153 @@
+"""Orchestrator tests (paper §3.5, Alg. 1): hierarchy construction,
+local-first mapping, escalation, constraint protection, overhead ledger."""
+import pytest
+
+from repro.core import (ActiveLedger, OrcConfig, Orchestrator, Traverser,
+                        build_orchestrators, build_testbed, heye_traverser)
+from repro.core.topology import make_task
+
+
+@pytest.fixture()
+def setup():
+    tb = build_testbed(edge_counts={"orin_agx": 1, "orin_nano": 1},
+                       server_counts={"server1": 1, "server2": 1})
+    trav = heye_traverser(tb.graph)
+    root = build_orchestrators(tb.graph, trav)
+    return tb, trav, root
+
+
+def test_hierarchy_matches_fig4b(setup):
+    tb, _, root = setup
+    # root has two cluster ORCs (edge + server), each with device children
+    assert len(root.children) == 2
+    groups = sorted(c.group for c in root.children)
+    assert groups == ["edge_cluster", "server_cluster"]
+    devices = [o.group for c in root.children for o in c.children]
+    assert set(devices) == set(tb.edges) | set(tb.servers)
+    # device ORCs know their own PUs only (resource segregation)
+    for c in root.children:
+        for dev in c.children:
+            assert dev.leaf_pus
+            assert all(p.startswith(dev.group + ".") for p in dev.leaf_pus)
+    # cluster and root ORCs hold no PUs directly
+    assert not root.leaf_pus
+    assert all(not c.leaf_pus for c in root.children)
+
+
+def test_local_first_assignment(setup):
+    tb, _, root = setup
+    e = tb.edges[0]
+    orc = root.find_device_orc(e)
+    t = make_task("capture", origin=e, deadline=0.1)
+    res = orc.map_task(t)
+    assert res is not None
+    assert res.pu.startswith(e + ".")       # stayed local
+    assert res.hops == 0                    # no remote queries
+    assert t.assigned_pu == res.pu
+
+
+def test_escalation_to_server(setup):
+    tb, _, root = setup
+    e = tb.edges[1]                         # orin_nano: render at 90 ms
+    orc = root.find_device_orc(e)
+    t = make_task("render", origin=e, deadline=0.030, input_bytes=4e3)
+    res = orc.map_task(t)
+    assert res is not None
+    dev = tb.graph.device_of(res.pu).name
+    assert dev in tb.servers                # escalated off-device
+    assert res.hops > 0                     # remote messages counted
+    assert res.overhead > 0.0
+
+
+def test_pinned_stays_local(setup):
+    tb, _, root = setup
+    e = tb.edges[1]
+    orc = root.find_device_orc(e)
+    t = make_task("capture", origin=e, deadline=0.1)
+    t.attrs["pinned"] = True
+    res = orc.map_task(t)
+    assert tb.graph.device_of(res.pu).name == e
+
+
+def test_existing_task_constraints_protected(setup):
+    """Alg. 1 l.15: a new task must not break a resident task's deadline."""
+    tb, trav, root = setup
+    e = tb.edges[0]
+    orc = root.find_device_orc(e)
+    gpu = f"{e}.gpu"
+    # resident: a GPU task with a deadline it barely meets
+    sa = tb.graph.nodes[gpu].predict(make_task("dnn"))
+    resident = make_task("dnn", origin=e, deadline=sa * 1.05)
+    pred = trav.predict_task(resident, gpu, [])
+    orc.ledger.add(resident, gpu, pred, now=0.0)
+    # a new heavy task on the same GPU would slow the resident beyond 1.05x
+    newbie = make_task("dnn", origin=e, deadline=10.0)
+    ok, _ = orc._check_constraints(newbie, gpu, now=0.0)
+    assert not ok
+    # but a task on a PU that does not contend hard is fine
+    ok2, _ = orc._check_constraints(
+        make_task("capture", origin=e, deadline=10.0), f"{e}.cpu0", now=0.0)
+    assert ok2
+
+
+def test_best_effort_when_nothing_fits(setup):
+    tb, _, root = setup
+    e = tb.edges[0]
+    orc = root.find_device_orc(e)
+    t = make_task("render", origin=e, deadline=1e-9)   # impossible deadline
+    res = orc.map_task(t)
+    assert res is not None                  # degraded, not dropped
+    t2 = make_task("render", origin=e, deadline=1e-9)
+    cfg = OrcConfig(allow_best_effort=False)
+    orc2 = build_orchestrators(tb.graph, heye_traverser(tb.graph),
+                               config=cfg).find_device_orc(e)
+    assert orc2.map_task(t2) is None
+
+
+def test_ledger_prune_and_remove(setup):
+    tb, trav, root = setup
+    e = tb.edges[0]
+    led = ActiveLedger()
+    t = make_task("dnn", origin=e)
+    led.add(t, f"{e}.gpu", trav.predict_task(t, f"{e}.gpu", []), now=0.0)
+    assert led.count(f"{e}.gpu") == 1
+    led.prune(now=1e9)
+    assert led.count(f"{e}.gpu") == 0
+    led.add(t, f"{e}.gpu", trav.predict_task(t, f"{e}.gpu", []), now=0.0)
+    led.remove(t)
+    assert led.count(f"{e}.gpu") == 0
+
+
+def test_first_fit_cheaper_than_best_fit(setup):
+    tb, trav, _ = setup
+    e = tb.edges[0]
+    t_bf = make_task("pose_pred", origin=e, deadline=0.5)
+    t_ff = make_task("pose_pred", origin=e, deadline=0.5)
+    best = build_orchestrators(tb.graph, trav, config=OrcConfig())
+    first = build_orchestrators(tb.graph, trav,
+                                config=OrcConfig(objective="first_fit"))
+    r_bf = best.find_device_orc(e).map_task(t_bf)
+    r_ff = first.find_device_orc(e).map_task(t_ff)
+    assert r_ff.queries <= r_bf.queries
+
+
+def test_dead_pu_not_assigned(setup):
+    tb, trav, _ = setup
+    e = tb.edges[0]
+    tb.graph.mark_dead(f"{e}.gpu")
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    orc = root.find_device_orc(e)
+    t = make_task("dnn", origin=e, deadline=1.0)
+    res = orc.map_task(t)
+    assert res is not None and res.pu != f"{e}.gpu"
+    tb.graph.mark_alive(f"{e}.gpu")
+
+
+def test_overhead_scales_with_remote_search(setup):
+    tb, _, root = setup
+    e = tb.edges[1]
+    orc = root.find_device_orc(e)
+    local = orc.map_task(make_task("capture", origin=e, deadline=1.0))
+    remote = orc.map_task(make_task("render", origin=e, deadline=0.030,
+                                    input_bytes=4e3))
+    assert remote.overhead > local.overhead

@@ -1,0 +1,75 @@
+"""§3.5 scalability: virtual-ORC insertion keeps fanout bounded so a
+MapTask escalation touches O(log n) ORCs, and the search still finds
+feasible placements at fleet scale."""
+import math
+
+import pytest
+
+from repro.core import (OrcConfig, Runtime, build_orchestrators,
+                        build_testbed, heye_traverser, mining_workload,
+                        OrchestratorPolicy)
+from repro.core.topology import make_task
+
+
+def _flat_fleet(n_edges: int):
+    return build_testbed(edge_counts={"orin_agx": n_edges},
+                         server_counts={"server1": 2})
+
+
+def test_virtual_orcs_bound_fanout():
+    tb = _flat_fleet(40)
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph),
+                               max_fanout=4)
+    for orc in root.iter_tree():
+        assert len(orc.children) <= 4, orc.group
+    # every device is still reachable exactly once
+    devices = [o.group for o in root.iter_tree() if o.is_device_orc()]
+    assert sorted(devices) == sorted(tb.edges + tb.servers)
+
+
+def test_virtual_orcs_preserve_mapping():
+    tb = _flat_fleet(12)
+    flat_root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    deep_root = build_orchestrators(tb.graph, heye_traverser(tb.graph),
+                                    max_fanout=3)
+    t1 = make_task("render", origin=tb.edges[0], deadline=0.030,
+                   input_bytes=4e3)
+    t2 = make_task("render", origin=tb.edges[0], deadline=0.030,
+                   input_bytes=4e3)
+    r_flat = flat_root.find_device_orc(tb.edges[0]).map_task(t1)
+    r_deep = deep_root.find_device_orc(tb.edges[0]).map_task(t2)
+    assert r_flat is not None and r_deep is not None
+    # both find a server-grade PU meeting the deadline
+    assert tb.graph.device_of(r_flat.pu).name in tb.servers
+    assert tb.graph.device_of(r_deep.pu).name in tb.servers
+
+
+def test_escalation_depth_logarithmic():
+    """The ORC-tree depth (escalation path length) grows like log(n)."""
+    depths = {}
+    for n in (8, 64):
+        tb = _flat_fleet(n)
+        root = build_orchestrators(tb.graph, heye_traverser(tb.graph),
+                                   max_fanout=4)
+
+        def depth(orc):
+            if not orc.children:
+                return 1
+            return 1 + max(depth(c) for c in orc.children)
+
+        depths[n] = depth(root)
+    # 8x more devices must cost at most +2 levels at fanout 4
+    assert depths[64] <= depths[8] + 2
+    assert depths[64] >= depths[8]
+
+
+def test_fleet_scale_end_to_end():
+    """64 edges + 8 servers, 200+ tasks: mapping succeeds, QoS holds."""
+    tb = build_testbed(edge_counts={"orin_agx": 32, "orin_nano": 32},
+                       server_counts={"server1": 4, "server2": 4})
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph),
+                               max_fanout=8)
+    cfg = mining_workload(tb, n_sensors=80, n_readings=1)
+    stats = Runtime(tb.graph, seed=0).run(cfg, OrchestratorPolicy(root))
+    assert stats.qos_failure_rate(cfg) < 0.05
+    assert stats.mean_overhead_ratio(cfg) < 0.05

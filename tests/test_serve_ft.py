@@ -1,0 +1,116 @@
+"""Serving engine (continuous batching) + fault-tolerance manager tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import ParallelCtx, build_model
+from repro.serve.engine import Request, ServeEngine
+
+CTX = ParallelCtx(compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = all_configs()["gemma3-1b"].smoke()
+    model = build_model(cfg, CTX)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, n_new, max_len=64):
+    """Sequential greedy decode via repeated full forward (oracle)."""
+    toks = list(prompt)
+    out = []
+    for _ in range(n_new):
+        logits, _ = model.forward(params, {
+            "tokens": jnp.asarray([toks], jnp.int32)})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def test_engine_matches_sequential_decode(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params, max_slots=2, max_len=64)
+    prompts = [np.array([5, 9, 2], np.int32), np.array([7, 1], np.int32),
+               np.array([3, 3, 3, 3], np.int32)]
+    reqs = [Request(rid=i, prompt=p, max_new=5) for i, p in enumerate(prompts)]
+    done = eng.run(reqs)
+    assert len(done) == 3 and all(r.done for r in done)
+    for r in sorted(done, key=lambda r: r.rid):
+        want = _greedy_reference(model, params, list(prompts[r.rid]), 5)
+        assert r.out[:5] == want[:5], (r.rid, r.out, want)
+
+
+def test_engine_slot_recycling(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params, max_slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=np.array([i + 1], np.int32), max_new=3)
+            for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    assert len(eng.free) == 2 and not eng.active
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+def test_straggler_detection_patience():
+    from repro.core.topology import build_tpu_fleet
+    from repro.ft.manager import FTConfig, FTManager
+    tb = build_tpu_fleet(n_pods=1, hosts_per_pod=4, chips_per_host=2)
+    ft = FTManager(tb.graph, FTConfig(straggler_patience=2))
+    hosts = ft.alive_hosts()
+    times = {h: 1.0 for h in hosts}
+    times[hosts[0]] = 3.0
+    assert ft.report_step_times(times) == []           # strike 1
+    assert ft.report_step_times(times) == [hosts[0]]   # strike 2 -> confirmed
+    # recovery resets strikes
+    ok = {h: 1.0 for h in hosts}
+    ft.report_step_times(ok)
+    assert ft.report_step_times(times) == []
+
+
+def test_failure_and_elastic_rescale():
+    from repro.core.topology import build_tpu_fleet
+    from repro.ft.manager import FTManager
+    tb = build_tpu_fleet(n_pods=1, hosts_per_pod=4, chips_per_host=8)
+    ft = FTManager(tb.graph)
+    assert ft.alive_chips() == 32
+    plan = ft.on_failure([ft.alive_hosts()[0]])
+    assert ft.alive_chips() == 24
+    dp, tp = plan.mesh_shape
+    assert dp * tp <= 24
+    assert 24 % tp == 0
+    assert plan.lost_hosts and plan.restore_step == 0
+    # node joins back (paper §5.4.2)
+    plan2 = ft.on_join(plan.lost_hosts[0])
+    assert ft.alive_chips() == 32
+    assert np.prod(plan2.mesh_shape) >= np.prod(plan.mesh_shape)
+
+
+def test_checkpoint_cadence(tmp_path):
+    from repro.core.topology import build_tpu_fleet
+    from repro.ft.manager import FTConfig, FTManager
+    tb = build_tpu_fleet(n_pods=1, hosts_per_pod=2, chips_per_host=2)
+    ft = FTManager(tb.graph, FTConfig(checkpoint_every=10),
+                   ckpt_dir=str(tmp_path))
+    state = {"w": jnp.ones((4,))}
+    assert not ft.maybe_checkpoint(state, step=5)
+    assert ft.maybe_checkpoint(state, step=10)
+    ft.saver.wait()
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 10
+    assert ft.last_committed == 10
+
+
+def test_recovery_plan_no_chips_raises():
+    from repro.core.topology import build_tpu_fleet
+    from repro.ft.manager import FTManager
+    tb = build_tpu_fleet(n_pods=1, hosts_per_pod=1, chips_per_host=2)
+    ft = FTManager(tb.graph)
+    with pytest.raises(RuntimeError):
+        ft.on_failure(ft.alive_hosts())

@@ -1,0 +1,190 @@
+"""Traverser tests (paper §3.4): contention intervals, predictions,
+communication modeling, queueing."""
+import numpy as np
+import pytest
+
+from repro.core import (DecoupledSlowdown, NoSlowdown, Task, TaskGraph,
+                        Traverser, build_testbed)
+from repro.core.topology import make_task
+
+
+@pytest.fixture(scope="module")
+def tb():
+    return build_testbed(edge_counts={"orin_agx": 1, "orin_nano": 1},
+                         server_counts={"server1": 1})
+
+
+@pytest.fixture()
+def trav(tb):
+    return Traverser(tb.graph)
+
+
+def test_serial_chain_sums(tb, trav):
+    """No contention: chain latency == sum of standalone times."""
+    e = tb.edges[0]
+    cfg = TaskGraph()
+    t1, t2 = make_task("capture", origin=e), make_task("display", origin=e)
+    cfg.chain([t1, t2])
+    tl = trav.traverse(cfg, {t1.uid: f"{e}.cpu0", t2.uid: f"{e}.cpu0"})
+    exp = tb.graph.nodes[f"{e}.cpu0"].predict(t1) + \
+        tb.graph.nodes[f"{e}.cpu0"].predict(t2)
+    assert tl.makespan == pytest.approx(exp, rel=1e-9)
+
+
+def test_parallel_tasks_with_contention_slow_down(tb, trav):
+    e = tb.edges[0]
+    cfg = TaskGraph()
+    a, b = make_task("dnn", origin=e), make_task("dnn", origin=e)
+    cfg.add(a)
+    cfg.add(b)
+    tl = trav.traverse(cfg, {a.uid: f"{e}.gpu", b.uid: f"{e}.gpu"})
+    sa = tb.graph.nodes[f"{e}.gpu"].predict(a)
+    # both run concurrently at ~0.66x speed -> each takes sa/0.66
+    assert tl.makespan == pytest.approx(sa / 0.66, rel=0.05)
+    assert tl.slowdown_of(a) > 1.4
+    assert tl.n_intervals >= 2
+
+
+def test_blind_model_sees_no_contention(tb):
+    e = tb.edges[0]
+    blind = Traverser(tb.graph, slowdown=NoSlowdown(tb.graph))
+    cfg = TaskGraph()
+    a, b = make_task("dnn", origin=e), make_task("dnn", origin=e)
+    cfg.add(a)
+    cfg.add(b)
+    tl = blind.traverse(cfg, {a.uid: f"{e}.gpu", b.uid: f"{e}.gpu"})
+    sa = tb.graph.nodes[f"{e}.gpu"].predict(a)
+    assert tl.makespan == pytest.approx(sa, rel=1e-6)
+
+
+def test_contention_interval_release(tb, trav):
+    """A short co-runner finishing mid-way restores the long task's speed:
+    the long task's total busy time must be < full-contention bound."""
+    e = tb.edges[0]
+    cfg = TaskGraph()
+    long = make_task("knn", origin=e)     # 14 ms standalone on gpu
+    short = make_task("mlp", origin=e)    # 5 ms standalone
+    cfg.add(long)
+    cfg.add(short)
+    tl = trav.traverse(cfg, {long.uid: f"{e}.gpu", short.uid: f"{e}.gpu"})
+    sa_long = tb.graph.nodes[f"{e}.gpu"].predict(long)
+    full_contention = sa_long * tl.slowdown_of(short)
+    assert tl.finish[long.uid] < full_contention + sa_long  # regained speed
+    assert tl.finish[short.uid] < tl.finish[long.uid]
+
+
+def test_cross_device_transfer_charged(tb, trav):
+    e, s = tb.edges[0], tb.servers[0]
+    cfg = TaskGraph()
+    a = make_task("render", origin=e, input_bytes=250e3)
+    cfg.add(a)
+    tl = trav.traverse(cfg, {a.uid: f"{s}.gpu"})
+    sa = tb.graph.nodes[f"{s}.gpu"].predict(a)
+    comm = tb.graph.transfer_time(e, s, 250e3)
+    assert tl.makespan == pytest.approx(sa + comm, rel=0.05)
+    assert tl.comm[a.uid] == pytest.approx(comm, rel=0.05)
+
+
+def test_concurrent_transfers_share_link(tb, trav):
+    """Two transfers over the same edge uplink halve each other's bandwidth."""
+    e, s = tb.edges[0], tb.servers[0]
+    nbytes = 5e6
+    single = TaskGraph()
+    a = make_task("render", origin=e, input_bytes=nbytes)
+    single.add(a)
+    tl1 = trav.traverse(single, {a.uid: f"{s}.gpu"})
+    t_single = tl1.comm[a.uid]
+
+    both = TaskGraph()
+    b1 = make_task("render", origin=e, input_bytes=nbytes)
+    b2 = make_task("render", origin=e, input_bytes=nbytes)
+    both.add(b1)
+    both.add(b2)
+    tl2 = trav.traverse(both, {b1.uid: f"{s}.gpu", b2.uid: f"{s}.gpu"})
+    t_shared = max(tl2.comm[b1.uid], tl2.comm[b2.uid])
+    assert t_shared > 1.6 * t_single
+
+
+def test_max_tenancy_queues(tb, trav):
+    e = tb.edges[0]
+    pu = tb.graph.nodes[f"{e}.vic"]       # max_tenancy=2
+    cfg = TaskGraph()
+    ts = [make_task("encode", origin=e) for _ in range(4)]
+    for t in ts:
+        cfg.add(t)
+    tl = trav.traverse(cfg, {t.uid: pu.name for t in ts})
+    waits = sorted(tl.queue_wait[t.uid] for t in ts)
+    assert waits[0] == 0.0 and waits[1] == 0.0      # first two start at once
+    assert waits[2] > 0.0 and waits[3] > 0.0        # rest queue
+
+
+def test_background_tasks_contend(tb, trav):
+    e = tb.edges[0]
+    bg = make_task("render", origin=e)
+    cfg = TaskGraph()
+    a = make_task("dnn", origin=e)
+    cfg.add(a)
+    tl = trav.traverse(cfg, {a.uid: f"{e}.gpu"},
+                       background=[(bg, f"{e}.gpu", 0.050)])
+    assert tl.slowdown_of(a) > 1.0
+    assert tl.finish[bg.uid] > 0.0      # projected finish reported
+
+
+def test_deadline_checks(tb, trav):
+    e = tb.edges[0]
+    cfg = TaskGraph()
+    ok = make_task("capture", origin=e, deadline=0.1)
+    late = make_task("render", origin=e, deadline=1e-6)
+    cfg.add(ok)
+    cfg.add(late)
+    tl = trav.traverse(cfg, {ok.uid: f"{e}.cpu0", late.uid: f"{e}.gpu"})
+    assert tl.deadline_met(ok)
+    assert not tl.deadline_met(late)
+
+
+def test_predict_task_closed_form(tb, trav):
+    e = tb.edges[0]
+    t = make_task("dnn", origin=e)
+    active = [(make_task("dnn"), f"{e}.gpu")]
+    pred = trav.predict_task(t, f"{e}.gpu", active)
+    sa = tb.graph.nodes[f"{e}.gpu"].predict(t)
+    assert pred.standalone == pytest.approx(sa)
+    assert pred.factor > 1.4
+    assert pred.total == pytest.approx(sa * pred.factor + pred.comm)
+
+
+def test_dag_dependencies_respected(tb, trav):
+    e = tb.edges[0]
+    cfg = TaskGraph()
+    a = make_task("capture", origin=e)
+    b1 = make_task("svm", origin=e)
+    b2 = make_task("mlp", origin=e)
+    c = make_task("display", origin=e)
+    cfg.add(a)
+    cfg.add(b1, deps=[a])
+    cfg.add(b2, deps=[a])
+    cfg.add(c, deps=[b1, b2])
+    m = {a.uid: f"{e}.cpu0", b1.uid: f"{e}.gpu", b2.uid: f"{e}.cpu1",
+         c.uid: f"{e}.cpu0"}
+    tl = trav.traverse(cfg, m)
+    assert tl.start[b1.uid] >= tl.finish[a.uid]
+    assert tl.start[b2.uid] >= tl.finish[a.uid]
+    assert tl.start[c.uid] >= max(tl.finish[b1.uid], tl.finish[b2.uid])
+
+
+def test_missing_mapping_raises(tb, trav):
+    cfg = TaskGraph()
+    t = make_task("mm")
+    cfg.add(t)
+    with pytest.raises(KeyError):
+        trav.traverse(cfg, {})
+
+
+def test_cycle_detection():
+    cfg = TaskGraph()
+    a, b = Task("x"), Task("y")
+    cfg.add(a)
+    cfg.add(b, deps=[a])
+    cfg.add_dep(b, a)
+    with pytest.raises(ValueError):
+        cfg.topological()

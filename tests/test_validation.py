@@ -1,0 +1,128 @@
+"""Integration tests reproducing the paper's core claims at test scale:
+contention-aware prediction beats contention-blind baselines (§5.2),
+the orchestrator improves latency/QoS over ACE/LaTS (§5.3), and the
+workload generators match the paper's applications (§4)."""
+import numpy as np
+import pytest
+
+from repro.core import (AcePolicy, LatsPolicy, NoSlowdown, OrchestratorPolicy,
+                        Runtime, Traverser, build_orchestrators,
+                        build_testbed, heye_traverser, mining_workload,
+                        vr_workload)
+from repro.core.task import TaskGraph
+from repro.core.topology import make_task
+from repro.core.workloads import (MINING_TASKS, VR_PINNED, VR_TASKS,
+                                  vr_frame_latencies)
+
+
+def _fresh(n_sensors=14, n_readings=4):
+    tb = build_testbed(edge_counts={"orin_nano": 1, "xavier_nx": 1},
+                       server_counts={"server1": 1})
+    cfg = mining_workload(tb, n_sensors=n_sensors, n_readings=n_readings)
+    return tb, cfg
+
+
+def test_heye_prediction_beats_blind_model():
+    """§5.2 in miniature: on a contended schedule, H-EYE's Traverser
+    predicts ground-truth latency far better than a contention-blind model."""
+    tb, cfg = _fresh()
+    # contended mapping: round-robin over every capable PU (1-3 co-runners,
+    # the regime of the paper's Fig. 10 validation)
+    pus = [p.name for p in tb.graph.pus()
+           if p.model.supports(list(cfg)[0], p)]
+    mapping = {t.uid: pus[i % len(pus)] for i, t in enumerate(cfg)}
+    truth = Runtime(tb.graph, seed=1).truth.traverse(cfg, mapping)
+    heye_tl = heye_traverser(tb.graph).traverse(cfg, mapping)
+    blind_tl = Traverser(tb.graph, slowdown=NoSlowdown(tb.graph)).traverse(
+        cfg, mapping)
+
+    def err(tl):
+        errs = []
+        for t in cfg:
+            a = truth.latency(t)
+            p = tl.latency(t)
+            if a > 0:
+                errs.append(abs(p - a) / a)
+        return float(np.mean(errs))
+
+    e_heye, e_blind = err(heye_tl), err(blind_tl)
+    assert e_heye < e_blind * 0.5, (e_heye, e_blind)
+    assert e_heye < 0.10                      # paper: 3.2% avg (noise-limited)
+    assert e_blind > 0.15                     # paper: ACE 27.4%
+
+
+def test_orchestrator_beats_baselines_on_qos():
+    """§5.3 in miniature: under load, H-EYE's contention-aware mapping has
+    no more QoS failures than contention-blind ACE/LaTS and achieves
+    lower mean latency."""
+    results = {}
+    for name in ("heye", "ace", "lats"):
+        tb, cfg = _fresh(n_sensors=16, n_readings=5)
+        rt = Runtime(tb.graph, seed=0)
+        if name == "heye":
+            pol = OrchestratorPolicy(
+                build_orchestrators(tb.graph, heye_traverser(tb.graph)))
+        elif name == "ace":
+            pol = AcePolicy(tb.graph,
+                            Traverser(tb.graph, slowdown=NoSlowdown(tb.graph)))
+        else:
+            pol = LatsPolicy(tb.graph,
+                             Traverser(tb.graph, slowdown=NoSlowdown(tb.graph)))
+        stats = rt.run(cfg, pol)
+        lat = np.mean([stats.timeline.latency(t) for t in cfg])
+        results[name] = (stats.qos_failure_rate(cfg), float(lat))
+    q_heye, l_heye = results["heye"]
+    assert q_heye <= min(results["ace"][0], results["lats"][0]) + 1e-9
+    assert l_heye <= 1.05 * min(results["ace"][1], results["lats"][1])
+
+
+def test_orchestrator_overhead_small():
+    """Fig. 14: scheduling overhead stays in the low single-digit percent."""
+    tb, cfg = _fresh(n_sensors=10, n_readings=5)
+    rt = Runtime(tb.graph, seed=0)
+    pol = OrchestratorPolicy(
+        build_orchestrators(tb.graph, heye_traverser(tb.graph)))
+    stats = rt.run(cfg, pol)
+    assert stats.mean_overhead_ratio(cfg) < 0.08
+
+
+def test_vr_workload_structure():
+    tb = build_testbed()
+    cfg = vr_workload(tb, n_frames=2)
+    per_frame = len(VR_TASKS)
+    assert len(cfg) == len(tb.edges) * 2 * per_frame
+    for t in cfg:
+        assert t.deadline is not None and t.deadline > 0
+        if t.kind in VR_PINNED:
+            assert t.attrs["pinned"]
+    # frame deadline shares sum to the frame period
+    frame0 = [t for t in cfg if t.origin == tb.edges[0]
+              and t.attrs["frame"] == 0]
+    from repro.core.topology import EDGE_FPS
+    period = 1.0 / EDGE_FPS[tb.edge_kind[tb.edges[0]]]
+    assert sum(t.deadline for t in frame0) == pytest.approx(period, rel=1e-6)
+
+
+def test_vr_pipeline_end_to_end():
+    tb = build_testbed(edge_counts={"orin_agx": 1},
+                       server_counts={"server1": 1, "server2": 1})
+    cfg = vr_workload(tb, n_frames=3)
+    rt = Runtime(tb.graph, seed=0)
+    pol = OrchestratorPolicy(
+        build_orchestrators(tb.graph, heye_traverser(tb.graph)))
+    stats = rt.run(cfg, pol)
+    lats = vr_frame_latencies(cfg, stats.timeline)
+    assert len(lats) == 3
+    # with a server available, rendering must be offloaded (edge GPU cannot
+    # hold 30 FPS: 38 ms standalone > 33 ms period)
+    render_pus = {stats.mapping[t.uid] for t in cfg if t.kind == "render"}
+    assert any(tb.graph.device_of(p).name in tb.servers for p in render_pus)
+
+
+def test_mining_workload_structure():
+    tb = build_testbed()
+    cfg = mining_workload(tb, n_sensors=6, n_readings=2)
+    assert len(cfg) == 6 * 2 * len(MINING_TASKS)
+    for t in cfg:
+        assert t.deadline == pytest.approx(0.100)
+        assert not list(cfg.preds(t))      # all independent (parallel ML)
