@@ -1,0 +1,16 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench bench-compile
+
+# tier-1 verification (see ROADMAP.md)
+test:
+	python -m pytest -x -q
+
+# all paper-figure benchmarks
+bench:
+	python -m benchmarks.run
+
+# object-path vs compiled-path engine throughput; writes BENCH_graph_compile.json
+bench-compile:
+	python -m benchmarks.graph_compile

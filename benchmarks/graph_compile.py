@@ -1,0 +1,199 @@
+"""Object-path vs compiled-path HW-GRAPH evaluation throughput.
+
+Measures the three hot paths the array-native engine (core/compiled.py)
+vectorized, against a faithful replica of the seed's per-pair object-graph
+algorithms, on the Fig. 13 mining topology at mult=4 — and then runs the
+weak-scaling mining row at mult=8, the paper's real 100-sensor/80-edge/
+24-server ratios that the object path was too slow to reach:
+
+* ``slowdown_pool``    — joint co-run factors of a fleet-wide pool (what the
+  Traverser recomputes at every contention-interval boundary)
+* ``slowdown_pairs``   — all pairwise co-run factors (``slowdown_matrix``)
+* ``constraint_check`` — an ORC scoring every candidate PU of a busy device
+  including the Alg. 1 l.15 re-check of active tasks' constraints
+
+Emits ``BENCH_graph_compile.json`` next to the repo root so the perf
+trajectory is tracked from PR to PR.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (ActiveLedger, DecoupledSlowdown, Runtime,
+                        build_orchestrators, build_testbed, heye_params,
+                        heye_traverser, mining_workload)
+from repro.core.topology import make_task
+
+from .common import Table, make_policy
+from .scaling import _mining_completion, mining_counts
+
+_JSON = Path(__file__).resolve().parent.parent / "BENCH_graph_compile.json"
+
+
+class ObjectPathSlowdown:
+    """The seed's pre-compilation algorithm, kept verbatim as the baseline:
+    per-pair compute-path scans with a dict cache, Python dict loops for
+    pressure aggregation."""
+
+    def __init__(self, graph, params=None):
+        self.graph = graph
+        self.params = params or heye_params()
+        self._shared_cache: dict[tuple[str, str], str | None] = {}
+
+    def nearest_shared(self, pu_a, pu_b):
+        key = (pu_a, pu_b) if pu_a <= pu_b else (pu_b, pu_a)
+        if key not in self._shared_cache:
+            pa = self.graph.nodes[pu_a].get_compute_path()
+            pb = set(self.graph.nodes[pu_b].get_compute_path())
+            self._shared_cache[key] = next((r for r in pa if r in pb), None)
+        return self._shared_cache[key]
+
+    def _pressure_term(self, beta, x):
+        if x <= 0.0 or beta <= 0.0:
+            return 0.0
+        return beta * x * (1.0 + self.params.superlinear * x)
+
+    def _mem_usage(self, task, pu_name):
+        u = task.usage.get("mem", 1.0)
+        cap = self.graph.nodes[pu_name].attrs.get("mem_usage_cap")
+        return min(u, cap) if cap is not None else u
+
+    def factor(self, task, pu_name, coruns):
+        p = self.params
+        f = 1.0
+        pu = self.graph.nodes[pu_name]
+        pu_class = pu.attrs.get("pu_class_kind",
+                                pu.attrs.get("pu_class", "default"))
+        mt_pressure = 0.0
+        res_pressure: dict[str, float] = {}
+        for other, other_pu in coruns:
+            if other.uid == task.uid:
+                continue
+            if other_pu == pu_name:
+                mt_pressure += other.usage.get("pu", 1.0)
+            else:
+                shared = self.nearest_shared(pu_name, other_pu)
+                if shared is None:
+                    continue
+                rclass = self.graph.nodes[shared].attrs.get("rclass", "dram")
+                res_pressure[rclass] = (res_pressure.get(rclass, 0.0)
+                                        + self._mem_usage(other, other_pu))
+        if mt_pressure > 0.0:
+            f *= 1.0 + self._pressure_term(p.mt(pu_class), mt_pressure
+                                           ) * task.usage.get("pu", 1.0)
+        for rclass, x in res_pressure.items():
+            f *= 1.0 + self._pressure_term(p.beta.get(rclass, 0.3), x
+                                           ) * self._mem_usage(task, pu_name)
+        return max(1.0, f)
+
+
+def _fleet_pool(tb, per_device=4):
+    kinds = ("dnn", "knn", "svm", "mlp", "render", "encode")
+    pool = []
+    for i, e in enumerate(tb.edges):
+        for j, short in enumerate(("cpu0", "gpu", "dla", "vic")[:per_device]):
+            pool.append((make_task(kinds[(i + j) % len(kinds)]),
+                         f"{e}.{short}"))
+    for s in tb.servers:
+        pool.append((make_task("knn"), f"{s}.gpu"))
+        pool.append((make_task("mlp"), f"{s}.cpu"))
+    return pool
+
+
+def _time(fn, reps):
+    fn()                                   # warmup (jit/caches/compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> Table:
+    t = Table("graph_compile", "object vs compiled HW-GRAPH engine")
+    ec, sc = mining_counts(4)
+    tb = build_testbed(edge_counts=ec, server_counts=sc)
+    g = tb.graph
+    obj = ObjectPathSlowdown(g)
+    sd = DecoupledSlowdown(g, heye_params())
+    pool = _fleet_pool(tb)
+
+    # parity first: the two paths must agree before their speeds mean anything
+    want = np.array([obj.factor(tk, pu, pool) for tk, pu in pool])
+    np.testing.assert_allclose(sd.factor_batch(pool), want,
+                               atol=1e-9, rtol=1e-9)
+
+    # --- joint factors of the whole pool (contention-interval repricing) ----
+    obj_s = _time(lambda: [obj.factor(tk, pu, pool) for tk, pu in pool], 5)
+    cmp_s = _time(lambda: sd.factor_batch(pool), 5)
+    t.add("slowdown_pool_object", obj_s * 1e3, "ms", n=len(pool))
+    t.add("slowdown_pool_compiled", cmp_s * 1e3, "ms", n=len(pool))
+    t.add("slowdown_pool_speedup", obj_s / cmp_s, "x")
+
+    # --- all pairwise co-run factors ---------------------------------------
+    obj_pairs = _time(lambda: [[obj.factor(ti, pi, [(tj, pj)])
+                                for tj, pj in pool] for ti, pi in pool], 2)
+    cmp_pairs = _time(lambda: sd.slowdown_matrix(pool), 2)
+    t.add("slowdown_pairs_object", obj_pairs * 1e3, "ms", n=len(pool))
+    t.add("slowdown_pairs_compiled", cmp_pairs * 1e3, "ms", n=len(pool))
+    t.add("slowdown_pairs_speedup", obj_pairs / cmp_pairs, "x")
+
+    # --- ORC constraint check over every candidate PU of a busy device -----
+    trav = heye_traverser(g)
+    ledger = ActiveLedger()
+    root = build_orchestrators(g, trav, ledger=ledger)
+    dev = tb.edges[0]
+    orc = root.find_device_orc(dev)
+    active = [(make_task(k, origin=dev, deadline=0.5), f"{dev}.{pu}")
+              for k, pu in (("dnn", "gpu"), ("dnn", "gpu"), ("svm", "cpu0"),
+                            ("mlp", "cpu1"), ("encode", "vic"),
+                            ("dnn", "dla"), ("render", "gpu"))]
+    for tk, pu in active:
+        ledger.add(tk, pu, trav.predict_task(tk, pu, active), now=0.0)
+    task = make_task("render", origin=dev, deadline=0.1)
+
+    def object_check():
+        # the seed's per-candidate flow: one factor for the newcomer plus a
+        # re-factor of every active task, per candidate PU
+        out = []
+        for pu in orc.leaf_pus:
+            f_new = obj.factor(task, pu, active)
+            pool_c = active + [(task, pu)]
+            refac = [obj.factor(tk, p, pool_c) for tk, p in active]
+            out.append((f_new, refac))
+        return out
+
+    obj_chk = _time(object_check, 20)
+    cmp_chk = _time(lambda: orc._check_candidates(task, orc.leaf_pus, 0.0), 20)
+    t.add("constraint_check_object", obj_chk * 1e6, "us",
+          candidates=len(orc.leaf_pus), active=len(active))
+    t.add("constraint_check_compiled", cmp_chk * 1e6, "us",
+          candidates=len(orc.leaf_pus), active=len(active))
+    t.add("constraint_check_speedup", obj_chk / cmp_chk, "x")
+
+    # --- weak scaling restored to the paper's real ratios (mult=8) ---------
+    wall = {}
+    for mult in (4, 8):
+        ecm, scm = mining_counts(mult)
+        tbm = build_testbed(edge_counts=ecm, server_counts=scm)
+        t0 = time.perf_counter()
+        comp, _, _ = _mining_completion(tbm, n_sensors=12 * mult)
+        wall[mult] = time.perf_counter() - t0
+        t.add(f"weak_mining_x{mult}_completion", comp * 1e3, "ms",
+              devices=sum(ecm.values()) + sum(scm.values()),
+              wall_s=round(wall[mult], 2))
+
+    payload = {
+        "figure": t.figure,
+        "rows": {r.name: {"value": r.value, "unit": r.unit, **r.extra}
+                 for r in t.rows},
+    }
+    _JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    return t
+
+
+if __name__ == "__main__":
+    run().print_csv()

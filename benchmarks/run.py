@@ -12,10 +12,11 @@ import sys
 import time
 
 MODULES = ("contention", "validation", "vr_perf", "dynamic", "scaling",
-           "overhead", "strategies", "roofline")
+           "overhead", "strategies", "roofline", "graph_compile")
 FIG_OF = {"contention": "fig2", "validation": "fig10", "vr_perf": "fig11",
           "dynamic": "fig12", "scaling": "fig13", "overhead": "fig14",
-          "strategies": "fig15", "roofline": "roofline"}
+          "strategies": "fig15", "roofline": "roofline",
+          "graph_compile": "graph_compile"}
 
 
 def main(argv=None) -> int:

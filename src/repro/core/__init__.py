@@ -2,6 +2,7 @@
 
 Public surface:
   HWGraph / Node / ProcessingUnit / Predictable  — graph-based HW repr (§3.3)
+  CompiledHWGraph                                — array-native snapshot engine
   Task / TaskGraph                               — CFGs of constrained tasks
   ProfiledModel / RooflineModel / CallableModel  — modular predict() (§3.3)
   DecoupledSlowdown / SlowdownParams             — decoupled slowdown (§3.4)
@@ -10,6 +11,7 @@ Public surface:
   build_testbed / build_tpu_fleet                — topologies (Fig. 4, TPU)
   Runtime / policies                             — experiment harness (§5)
 """
+from .compiled import CompiledHWGraph
 from .hwgraph import (EdgeAttr, HWGraph, Node, NodeKind, Predictable,
                       ProcessingUnit, Unit)
 from .orchestrator import (ActiveLedger, MapResult, OrcConfig, Orchestrator,

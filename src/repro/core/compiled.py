@@ -1,0 +1,217 @@
+"""Compiled, array-native HW-GRAPH engine.
+
+The HW-GRAPH lives in two layers:
+
+* **Authoring layer** (`hwgraph.HWGraph`) — the mutable object graph the
+  topology builders construct and the dynamic-adaptability hooks mutate
+  (``mark_dead`` / ``mark_alive`` / ``set_bandwidth``).  It stays the
+  single source of truth and the reference implementation for every
+  query (``resource_path``, ``transfer_time``, ``shared_resources``).
+
+* **Compiled layer** (this module) — an immutable, dense-array snapshot
+  built once per topology version and shared by every consumer that
+  evaluates *many* PUs or PU pairs per decision: the vectorized slowdown
+  model (`slowdown.DecoupledSlowdown.factor_batch` / `slowdown_matrix`),
+  the Traverser's contention-interval repricing, and the Orchestrator's
+  batched candidate constraint checks.
+
+``HWGraph.compiled()`` returns the current snapshot and rebuilds it
+lazily after any topology mutation (the existing ``_invalidate_paths()``
+hook drops the snapshot).  All precomputed quantities are bit-for-bit
+reproductions of the object-path algorithms — parity is enforced to
+1e-9 by ``tests/test_compiled.py``:
+
+* a **PU index space** (every ``ProcessingUnit``, alive or not, in
+  insertion order) with per-PU effective-memory caps, PU-class kinds,
+  tenancy limits and enclosing-device names;
+* per-PU **compute-path membership masks** over the resource
+  (STORAGE/CONTROLLER) index space;
+* the all-pairs **nearest-common-resource matrix** ``ncr_res`` (and its
+  resource-class projection ``ncr_rclass``) replacing pairwise
+  ``shared_resources()`` path scans — entry ``[i, j]`` is the first
+  resource on PU ``i``'s compute path that PU ``j``'s path also visits,
+  i.e. the contention point of the pair (paper Fig. 4);
+* all-pairs **transfer latency / inverse-bandwidth matrices** over the
+  routable (GROUP) nodes, plus the concrete ``EdgeAttr`` route lists so
+  the Traverser's bandwidth-sharing transfer jobs skip per-query
+  Dijkstra runs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .hwgraph import EdgeAttr, HWGraph, NodeKind, ProcessingUnit
+
+
+class CompiledHWGraph:
+    """Immutable array-native snapshot of one topology version."""
+
+    def __init__(self, graph: HWGraph) -> None:
+        self.graph = graph
+        self._build_pus()
+        self._build_ncr()
+        self._build_routes()
+
+    # ------------------------------------------------------------------
+    # build: PU index space
+    # ------------------------------------------------------------------
+    def _build_pus(self) -> None:
+        g = self.graph
+        self.pu_names: list[str] = [n.name for n in g.nodes.values()
+                                    if isinstance(n, ProcessingUnit)]
+        self.pu_index: dict[str, int] = {n: i for i, n in enumerate(self.pu_names)}
+        P = len(self.pu_names)
+        self.pu_alive = np.zeros(P, dtype=bool)
+        self.mem_cap = np.full(P, np.inf)
+        self.max_tenancy = np.zeros(P, dtype=np.int64)
+        self.pu_class_kind: list[str] = []
+        self._pu_device_name: dict[str, str] = {}
+        for i, name in enumerate(self.pu_names):
+            pu = g.nodes[name]
+            self.pu_alive[i] = pu.alive
+            cap = pu.attrs.get("mem_usage_cap")
+            if cap is not None:
+                self.mem_cap[i] = cap
+            self.max_tenancy[i] = pu.max_tenancy
+            self.pu_class_kind.append(
+                pu.attrs.get("pu_class_kind", pu.attrs.get("pu_class", "default")))
+            self._pu_device_name[name] = g.device_of(name).name
+
+    # ------------------------------------------------------------------
+    # build: compute paths + nearest-common-resource matrix
+    # ------------------------------------------------------------------
+    def _build_ncr(self) -> None:
+        g = self.graph
+        P = len(self.pu_names)
+        paths: list[list[str]] = []
+        self.resource_names: list[str] = []
+        self.resource_index: dict[str, int] = {}
+        for name in self.pu_names:
+            node = g.nodes[name]
+            path = (node.get_compute_path() if isinstance(node, ProcessingUnit)
+                    else g.resource_path(name))
+            paths.append(path)
+            for r in path:
+                if r not in self.resource_index:
+                    self.resource_index[r] = len(self.resource_names)
+                    self.resource_names.append(r)
+        self.compute_paths: list[list[str]] = paths
+        R = len(self.resource_names)
+        self.rclass_names: list[str] = []
+        rclass_index: dict[str, int] = {}
+        self.resource_rclass = np.zeros(R, dtype=np.int64)
+        for r, name in enumerate(self.resource_names):
+            rc = g.nodes[name].attrs.get("rclass", "dram")
+            if rc not in rclass_index:
+                rclass_index[rc] = len(self.rclass_names)
+                self.rclass_names.append(rc)
+            self.resource_rclass[r] = rclass_index[rc]
+        # membership mask: does PU j's compute path visit resource r?
+        self.path_mask = np.zeros((P, R), dtype=bool)
+        for j, path in enumerate(paths):
+            for r in path:
+                self.path_mask[j, self.resource_index[r]] = True
+        # ncr_res[i, j] = first resource on i's path that j's path visits
+        self.ncr_res = np.full((P, P), -1, dtype=np.int64)
+        for i, path in enumerate(paths):
+            unset = np.ones(P, dtype=bool)
+            for r in path:
+                hit = unset & self.path_mask[:, self.resource_index[r]]
+                self.ncr_res[i, hit] = self.resource_index[r]
+                unset &= ~hit
+        self.ncr_rclass = np.where(self.ncr_res >= 0,
+                                   self.resource_rclass[self.ncr_res.clip(0)],
+                                   -1)
+
+    # ------------------------------------------------------------------
+    # build: all-pairs transfer over routable (GROUP) nodes
+    # ------------------------------------------------------------------
+    def _build_routes(self) -> None:
+        g = self.graph
+        self.routable_names: list[str] = [n.name for n in g.nodes.values()
+                                          if n.kind is NodeKind.GROUP]
+        self.routable_index: dict[str, int] = {n: i for i, n
+                                               in enumerate(self.routable_names)}
+        D = len(self.routable_names)
+        self.trans_lat = np.full((D, D), np.inf)
+        self.trans_ibw = np.zeros((D, D))
+        np.fill_diagonal(self.trans_lat, 0.0)
+        self._routes: dict[tuple[int, int], list[EdgeAttr]] = {}
+        for i, src in enumerate(self.routable_names):
+            if not g._adj[src]:
+                continue
+            dist, pred = g.sssp(src)
+            for j, dst in enumerate(self.routable_names):
+                if i == j or dst not in dist:
+                    continue
+                seq = [dst]
+                while seq[-1] != src:
+                    seq.append(pred[seq[-1]])
+                seq.reverse()
+                edges: list[EdgeAttr] = []
+                for a, b in zip(seq, seq[1:]):
+                    edges.append(min((e for v, e in g._adj[a] if v == b),
+                                     key=lambda e: e.latency))
+                self._routes[(i, j)] = edges
+                self.trans_lat[i, j] = sum(e.latency for e in edges)
+                bw = min((e.bandwidth for e in edges), default=float("inf"))
+                self.trans_ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+    def device_name(self, name: str) -> str:
+        """Enclosing device-group name (precomputed for PUs)."""
+        dev = self._pu_device_name.get(name)
+        if dev is None:
+            return self.graph.device_of(name).name
+        return dev
+
+    def nearest_common_resource(self, pu_a: str, pu_b: str) -> Optional[str]:
+        """First resource on ``pu_a``'s compute path also on ``pu_b``'s."""
+        i = self.pu_index.get(pu_a)
+        j = self.pu_index.get(pu_b)
+        if i is None or j is None:
+            # non-PU queries keep the object-path semantics
+            g = self.graph
+            pa = self.compute_paths[i] if i is not None else g.resource_path(pu_a)
+            pb = set(self.compute_paths[j] if j is not None
+                     else g.resource_path(pu_b))
+            return next((r for r in pa if r in pb), None)
+        r = self.ncr_res[i, j]
+        return self.resource_names[r] if r >= 0 else None
+
+    def transfer_time(self, src: str, dst: str, nbytes: float) -> float:
+        """Parity twin of ``HWGraph.transfer_time`` (KeyError when no path)."""
+        if src == dst:
+            return 0.0
+        i = self.routable_index.get(src)
+        j = self.routable_index.get(dst)
+        if i is None or j is None:
+            return self.graph.transfer_time(src, dst, nbytes)
+        lat = self.trans_lat[i, j]
+        if not np.isfinite(lat):
+            raise KeyError(f"no path {src} -> {dst}")
+        return float(lat + (nbytes * self.trans_ibw[i, j] if nbytes > 0 else 0.0))
+
+    def route_edges(self, src: str, dst: str) -> list[EdgeAttr]:
+        """The shortest-path interconnects src -> dst (shared EdgeAttr refs,
+        so concurrent transfers keep contending on the same objects)."""
+        i = self.routable_index.get(src)
+        j = self.routable_index.get(dst)
+        if i is None or j is None:
+            return self.graph.route_edges(src, dst)
+        if i == j:
+            return []
+        edges = self._routes.get((i, j))
+        if edges is None:
+            raise KeyError(f"no path {src} -> {dst}")
+        return edges
+
+    def summary(self) -> str:
+        P = len(self.pu_names)
+        return (f"CompiledHWGraph({P} PUs, {len(self.resource_names)} resources, "
+                f"{len(self.rclass_names)} rclasses, "
+                f"{len(self.routable_names)} routable)")

@@ -14,6 +14,16 @@ implements the ``Predictable`` interface: ``predict(task, unit)`` and
 ``get_compute_path()`` (single-source shortest path from the PU to the
 storage/controller resources it relies on — the mechanism by which shared
 resources between concurrently-running PUs are discovered algorithmically).
+
+Two-layer architecture: this module is the mutable **authoring layer** —
+topology builders construct it, and ``mark_dead`` / ``mark_alive`` /
+``set_bandwidth`` mutate it at runtime.  Hot-path consumers (the slowdown
+model, the Traverser's contention repricing, the Orchestrator's candidate
+checks) evaluate against the dense **compiled layer** instead: a
+``core.compiled.CompiledHWGraph`` snapshot obtained via :meth:`HWGraph.compiled`,
+rebuilt lazily whenever ``_invalidate_paths()`` fires on mutation.  Object
+queries here remain the reference semantics the compiled arrays must match
+(parity is tested to 1e-9).
 """
 from __future__ import annotations
 
@@ -134,6 +144,7 @@ class HWGraph:
         # red dashed links in Fig. 4: detailed-node -> abstract-node (and back)
         self.abstraction: dict[str, str] = {}
         self.refinement: dict[str, str] = {}
+        self._compiled = None        # lazy CompiledHWGraph snapshot
 
     # -- construction ------------------------------------------------------
     def add_node(self, node: Node) -> Node:
@@ -146,6 +157,7 @@ class HWGraph:
             self._children.setdefault(node.parent, []).append(node.name)
         if isinstance(node, ProcessingUnit):
             node._graph = self
+        self._compiled = None
         return node
 
     def add_edge(self, u: str, v: str, bandwidth: float = float("inf"),
@@ -158,6 +170,7 @@ class HWGraph:
                      name=name or f"{u}--{v}", attrs=dict(attrs or {}))
         self._adj[u].append((v, e))
         self._adj[v].append((u, e))
+        self._compiled = None
         return e
 
     def add_abstraction_link(self, detailed: str, abstract: str) -> None:
@@ -342,11 +355,24 @@ class HWGraph:
                     found = True
         if not found:
             raise KeyError(f"no edge named {edge_name!r}")
+        self._invalidate_paths()
 
     def _invalidate_paths(self) -> None:
         for n in self.nodes.values():
             if isinstance(n, ProcessingUnit):
                 n.invalidate()
+        self._compiled = None
+
+    def compiled(self):
+        """The array-native snapshot of the current topology version.
+
+        Built lazily on first use and dropped by ``_invalidate_paths()``
+        (mark_dead / mark_alive / set_bandwidth) and by construction-time
+        mutations, so callers may simply re-fetch it per decision."""
+        if self._compiled is None:
+            from .compiled import CompiledHWGraph
+            self._compiled = CompiledHWGraph(self)
+        return self._compiled
 
     # -- convenience ---------------------------------------------------------
     def __contains__(self, name: str) -> bool:

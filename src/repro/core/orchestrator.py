@@ -13,11 +13,16 @@ segregation); a device ORC has full knowledge of the PUs inside its device.
   siblings, then escalates further up (DFS).  Communication latency from the
   task's origin to a remote PU is folded into the constraint check, and every
   remote hop is charged to the *scheduling overhead* ledger (paper Fig. 14).
+
+All candidate PUs of an ORC are scored in one vectorized constraint check
+(``_check_candidates``) against the graph's compiled arrays — slowdown
+factors of the newcomer *and* the Alg. 1 line 15 re-check of every active
+task's constraints come from a single ``factors_with_candidates`` call
+instead of one Traverser query per candidate.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from .hwgraph import HWGraph, ProcessingUnit
@@ -68,10 +73,11 @@ class ActiveLedger:
                 del self.by_pu[pu]
 
     def on_device(self, graph: HWGraph, pu_name: str) -> list[ActiveEntry]:
-        dev = graph.device_of(pu_name).name
+        comp = graph.compiled()
+        dev = comp.device_name(pu_name)
         out: list[ActiveEntry] = []
         for pu, entries in self.by_pu.items():
-            if graph.device_of(pu).name == dev:
+            if comp.device_name(pu) == dev:
                 out.extend(entries)
         return out
 
@@ -144,8 +150,8 @@ class Orchestrator:
         queries = 0
         hops = 0
         overhead = 0.0
-        for pu_name in self.leaf_pus:
-            ok, pred = self._check_constraints(task, pu_name, now)
+        checks = self._check_candidates(task, self.leaf_pus, now)
+        for pu_name, (ok, pred) in zip(self.leaf_pus, checks):
             queries += 1
             if ok:
                 r = MapResult(pu=pu_name, prediction=pred)
@@ -209,57 +215,106 @@ class Orchestrator:
     # CheckTaskConstraints (Alg. 1 line 11)
     def _check_constraints(self, task: Task, pu_name: str,
                            now: float) -> tuple[bool, TaskPrediction]:
-        pu = self.graph.nodes[pu_name]
-        if not isinstance(pu, ProcessingUnit) or not pu.alive:
-            return False, TaskPrediction(float("inf"), 1.0, 0.0)
-        if pu.model is not None and not pu.model.supports(task, pu):
-            return False, TaskPrediction(float("inf"), 1.0, 0.0)
-        # tasks touching device-local peripherals cannot leave their origin
-        if (task.attrs.get("pinned")
-                and self.graph.device_of(pu_name).name != task.origin):
-            return False, TaskPrediction(float("inf"), 1.0, 0.0)
-        pred = self._predict_pipeline_aware(task, pu_name)
-        # tenancy cap: queueing wait behind the earliest finisher
-        entries = self.ledger.by_pu.get(pu_name, [])
-        if len(entries) >= pu.max_tenancy:
-            wait = min(e.est_finish for e in entries) - now
-            pred = TaskPrediction(standalone=pred.standalone,
-                                  factor=pred.factor,
-                                  comm=pred.comm + max(0.0, wait))
-        if task.deadline is not None and pred.total > task.deadline:
-            return False, pred
-        # existing tasks on this device must keep their constraints (Alg. 1 l.15)
-        device_entries = self.ledger.on_device(self.graph, pu_name)
-        if device_entries:
-            new_factors = self.traverser.predict_active_with(
-                task, pu_name, [(e.task, e.pu) for e in device_entries])
-            for e in device_entries:
-                if e.task.deadline is None:
-                    continue
-                rem = e.remaining_standalone(now)
-                new_finish = now + rem * new_factors[e.task.uid]
-                if new_finish - e.task.release_time > e.task.deadline * (1 + 1e-9):
-                    return False, pred
-        return True, pred
+        return self._check_candidates(task, [pu_name], now)[0]
+
+    def _check_candidates(self, task: Task, pu_names: list[str],
+                          now: float) -> list[tuple[bool, TaskPrediction]]:
+        """CheckTaskConstraints over every candidate PU in one shot."""
+        return self._score_candidates(task, pu_names, now,
+                                      with_constraints=True)
 
     # -- helpers --------------------------------------------------------------
-    def _predict_pipeline_aware(self, task: Task, pu_name: str) -> TaskPrediction:
-        """predict_task + the holistic pipeline view: if this task's output
-        must return to a pinned consumer on the origin device, charge that
-        transfer here — otherwise a remote placement looks cheap while the
-        return leg destroys the downstream task's budget (cf. §5.4.1 CloudVR
-        comparison: balance computation AND communication)."""
-        active = self.ledger.pairs_on_device(self.graph, pu_name)
-        pred = self.traverser.predict_task(task, pu_name, active)
+    def _score_candidates(self, task: Task, pu_names: list[str], now: float,
+                          *, with_constraints: bool,
+                          ) -> list[tuple[bool, TaskPrediction]]:
+        """Vectorized candidate scoring against the compiled HW-GRAPH.
+
+        Per candidate: standalone prediction, inbound communication, the
+        newcomer's slowdown factor amid the device's active tasks, and —
+        when ``with_constraints`` — the tenancy queueing wait, the deadline
+        check, and Alg. 1 line 15 (existing tasks keep their constraints).
+        The factor work for all candidates of a device comes from a single
+        ``factors_with_candidates`` call.
+
+        Predictions are *pipeline-aware*: if this task's output must
+        return to a pinned consumer on the origin device, that transfer is
+        charged here — otherwise a remote placement looks cheap while the
+        return leg destroys the downstream task's budget (cf. §5.4.1
+        CloudVR comparison: balance computation AND communication)."""
+        graph = self.graph
+        comp = graph.compiled()
+        infeasible = (False, TaskPrediction(float("inf"), 1.0, 0.0))
+        results: list[Optional[tuple[bool, TaskPrediction]]] = \
+            [None] * len(pu_names)
+        eligible: list[int] = []
+        for i, name in enumerate(pu_names):
+            pu = graph.nodes.get(name)
+            if (not isinstance(pu, ProcessingUnit) or not pu.alive
+                    or (pu.model is not None
+                        and not pu.model.supports(task, pu))
+                    # device-local peripherals pin a task to its origin
+                    or (task.attrs.get("pinned")
+                        and comp.device_name(name) != task.origin)):
+                results[i] = infeasible
+            else:
+                eligible.append(i)
+        if not eligible:
+            return results
+        sd = self.traverser.slowdown
+        batch = getattr(sd, "factors_with_candidates", None)
+        by_dev: dict[str, list[int]] = {}
+        for i in eligible:
+            by_dev.setdefault(comp.device_name(pu_names[i]), []).append(i)
         ret_bytes = task.attrs.get("succ_pinned_bytes", 0.0)
-        if ret_bytes > 0 and task.origin is not None:
-            dev = self.graph.device_of(pu_name).name
-            if dev != task.origin:
-                pred = TaskPrediction(
-                    standalone=pred.standalone, factor=pred.factor,
-                    comm=pred.comm + self.graph.transfer_time(
-                        dev, task.origin, ret_bytes))
-        return pred
+        for dev, idxs in by_dev.items():
+            names = [pu_names[i] for i in idxs]
+            entries = self.ledger.on_device(graph, names[0])
+            pairs = [(e.task, e.pu) for e in entries]
+            if batch is not None:
+                new_f, act_f = batch(task, names, pairs)
+            else:
+                new_f = [sd.factor(task, p, pairs) for p in names]
+                act_f = None
+            comm = self.traverser.comm_time(task, names[0], comp)
+            if ret_bytes > 0 and task.origin is not None and dev != task.origin:
+                comm += comp.transfer_time(dev, task.origin, ret_bytes)
+            for c, i in enumerate(idxs):
+                name = names[c]
+                pu = graph.nodes[name]
+                pred = TaskPrediction(standalone=pu.predict(task),
+                                      factor=float(new_f[c]), comm=comm)
+                if not with_constraints:
+                    results[i] = (True, pred)
+                    continue
+                # tenancy cap: queueing wait behind the earliest finisher
+                on_pu = self.ledger.by_pu.get(name, [])
+                if len(on_pu) >= pu.max_tenancy:
+                    wait = min(e.est_finish for e in on_pu) - now
+                    pred = TaskPrediction(standalone=pred.standalone,
+                                          factor=pred.factor,
+                                          comm=pred.comm + max(0.0, wait))
+                if task.deadline is not None and pred.total > task.deadline:
+                    results[i] = (False, pred)
+                    continue
+                # existing tasks keep their constraints (Alg. 1 l.15)
+                ok = True
+                if entries:
+                    if act_f is None:
+                        new_factors = self.traverser.predict_active_with(
+                            task, name, pairs)
+                    for a, e in enumerate(entries):
+                        if e.task.deadline is None:
+                            continue
+                        f = (float(act_f[c, a]) if act_f is not None
+                             else new_factors[e.task.uid])
+                        rem = e.remaining_standalone(now)
+                        new_finish = now + rem * f
+                        if (new_finish - e.task.release_time
+                                > e.task.deadline * (1 + 1e-9)):
+                            ok = False
+                            break
+                results[i] = (ok, pred)
+        return results
 
     def _select(self, candidates: list[MapResult]) -> MapResult:
         if self.config.objective == "min_load":
@@ -269,7 +324,8 @@ class Orchestrator:
     def _hop_cost(self, other: "Orchestrator") -> float:
         """Round-trip query cost between this ORC's group and another's."""
         try:
-            one_way = self.graph.transfer_time(self.group, other.group, QUERY_BYTES)
+            one_way = self.graph.compiled().transfer_time(
+                self.group, other.group, QUERY_BYTES)
         except KeyError:
             one_way = 0.0
         return 2.0 * one_way
@@ -283,16 +339,13 @@ class Orchestrator:
             root = root.parent
         best: Optional[MapResult] = None
         for orc in root.iter_tree():
-            for pu_name in orc.leaf_pus:
-                pu = self.graph.nodes[pu_name]
-                if not isinstance(pu, ProcessingUnit) or not pu.alive:
+            if not orc.leaf_pus:
+                continue
+            scores = self._score_candidates(task, orc.leaf_pus, now,
+                                            with_constraints=False)
+            for pu_name, (ok, pred) in zip(orc.leaf_pus, scores):
+                if not ok:
                     continue
-                if pu.model is not None and not pu.model.supports(task, pu):
-                    continue
-                if (task.attrs.get("pinned")
-                        and self.graph.device_of(pu_name).name != task.origin):
-                    continue
-                pred = self._predict_pipeline_aware(task, pu_name)
                 if best is None or pred.total < best.prediction.total:
                     best = MapResult(pu=pu_name, prediction=pred)
         return best

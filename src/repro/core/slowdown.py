@@ -31,19 +31,37 @@ The ground-truth simulator uses the same structure with a superlinear term
 and task-kind-specific irregular-access noise (``truth_params``), so that the
 H-EYE predictor (linear, noise-free) exhibits a small but honest error while
 contention-blind baselines (ACE-like) err by the full contention amount.
+
+Batched evaluation: the per-pair helpers (``nearest_shared``, ``factor``)
+now read the ``CompiledHWGraph`` snapshot (nearest-common-resource matrix,
+per-PU caps/classes), and three vectorized entry points evaluate whole
+pools at once over the same arrays — ``factor_batch`` (joint factors of a
+co-running pool, used by the Traverser at contention-interval boundaries),
+``slowdown_matrix`` (all pairwise co-run factors in one shot) and
+``factors_with_candidates`` (the Orchestrator's one-shot constraint check
+over every candidate PU).  The factor-aggregation inner loop dispatches to
+a Pallas kernel on TPU (kernels/slowdown_kernel.py) and to the equivalent
+numpy reference elsewhere.  The numpy path matches the scalar path to
+1e-9; the TPU kernel computes in fp32 (~1e-6 relative) — set
+``REPRO_SLOWDOWN_KERNEL=ref`` to force strict float64 parity on any
+backend, or ``=pallas`` to force the kernel.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
-from .hwgraph import HWGraph, ProcessingUnit
+from .hwgraph import HWGraph
 from .task import Task
 
 # resource classes a STORAGE/CONTROLLER node may declare in attrs["rclass"]
 RCLASSES = ("l2", "l3", "llc", "sram", "dram", "hbm", "vmem", "nic")
+
+# beta for rclasses absent from SlowdownParams.beta (matches the scalar
+# path's ``p.beta.get(rclass, 0.3)``)
+_DEFAULT_BETA = 0.3
 
 
 @dataclass
@@ -88,6 +106,73 @@ def truth_params(noise: float = 0.035, superlinear: float = 0.12) -> SlowdownPar
     return SlowdownParams(superlinear=superlinear, noise=noise)
 
 
+# ---------------------------------------------------------------------------
+# batched factor aggregation: numpy fast path + Pallas kernel on TPU
+# ---------------------------------------------------------------------------
+def _pterm_arr(beta: np.ndarray, x: np.ndarray, kappa: float) -> np.ndarray:
+    """Vectorized ``_pressure_term``: beta*x*(1+kappa*x), 0 where inactive."""
+    return np.where((x > 0.0) & (beta > 0.0),
+                    beta * x * (1.0 + kappa * x), 0.0)
+
+
+def _aggregate_np(x: np.ndarray, beta: np.ndarray, mem: np.ndarray,
+                  mt_term: np.ndarray, kappa: float) -> np.ndarray:
+    """factors[i] = (1+mt_term[i]) * prod_r(1 + pterm(beta[r], x[i,r])*mem[i]).
+
+    Same formula as ``kernels.ref.slowdown_factors_ref`` (the Pallas
+    oracle); kept inline so pure-DES workflows never import jax."""
+    term = _pterm_arr(beta[None, :], x, kappa)
+    return np.maximum(1.0, (1.0 + mt_term)
+                      * np.prod(1.0 + term * mem[:, None], axis=-1))
+
+
+_AGGREGATE = None
+
+
+def _aggregate(x, beta, mem, mt_term, kappa):
+    """Batched factor-aggregation inner loop.
+
+    Selected once: the Pallas kernel when jax is loaded and reports a TPU
+    backend (the same ``on_tpu`` switch the other kernels use), else the
+    numpy reference.  jax is never imported just to make this choice, so
+    CPU-only DES runs stay jax-free.  ``REPRO_SLOWDOWN_KERNEL`` overrides
+    the choice (``ref`` | ``pallas`` | ``auto``): the kernel runs in fp32,
+    so deployments that need bit-stable scheduling across backends pin
+    ``ref``."""
+    global _AGGREGATE
+    if _AGGREGATE is None:
+        _AGGREGATE = _select_aggregate()
+    return _AGGREGATE(x, beta, mem, mt_term, kappa)
+
+
+def _select_aggregate():
+    import os
+    import sys
+    mode = os.environ.get("REPRO_SLOWDOWN_KERNEL", "auto").lower()
+    if mode == "ref":
+        return _aggregate_np
+    if mode == "pallas":
+        from ..kernels.slowdown_kernel import slowdown_factors_pallas
+
+        def _pallas_forced(x, beta, mem, mt_term, kappa):
+            return np.asarray(slowdown_factors_pallas(x, beta, mem, mt_term,
+                                                      kappa))
+        return _pallas_forced
+    if "jax" in sys.modules:
+        try:
+            import jax
+            if jax.default_backend() == "tpu":
+                from ..kernels.slowdown_kernel import slowdown_factors
+
+                def _pallas(x, beta, mem, mt_term, kappa):
+                    return np.asarray(slowdown_factors(x, beta, mem, mt_term,
+                                                       kappa))
+                return _pallas
+        except Exception:       # pragma: no cover - jax probe best-effort
+            pass
+    return _aggregate_np
+
+
 class DecoupledSlowdown:
     """slowdown(task on pu | co-running tasks) -> multiplicative factor >= 1."""
 
@@ -96,26 +181,24 @@ class DecoupledSlowdown:
         self.graph = graph
         self.params = params or heye_params()
         self.rng = rng
-        self._shared_cache: dict[tuple[str, str], Optional[str]] = {}
+        # (snapshot, (beta_vec, mt_vec)) — rebuilt when the graph compiles
+        # a new snapshot; holding the snapshot itself makes the identity
+        # check safe (it cannot be freed and its id reused while cached)
+        self._tables_cache: Optional[tuple] = None
 
     # -- helpers -----------------------------------------------------------
     def nearest_shared(self, pu_a: str, pu_b: str) -> Optional[str]:
         """Nearest common resource on the compute paths of two PUs (or None
-        if the PUs share nothing, e.g. they sit in different devices)."""
-        key = (pu_a, pu_b) if pu_a <= pu_b else (pu_b, pu_a)
-        if key not in self._shared_cache:
-            a = self.graph.nodes[pu_a]
-            pa = (a.get_compute_path() if isinstance(a, ProcessingUnit)
-                  else self.graph.resource_path(pu_a))
-            b = self.graph.nodes[pu_b]
-            pb = set(b.get_compute_path() if isinstance(b, ProcessingUnit)
-                     else self.graph.resource_path(pu_b))
-            hit = next((r for r in pa if r in pb), None)
-            self._shared_cache[key] = hit
-        return self._shared_cache[key]
+        if the PUs share nothing, e.g. they sit in different devices).
+
+        Reads the compiled nearest-common-resource matrix, which tracks
+        topology mutations automatically (no manual cache invalidation)."""
+        return self.graph.compiled().nearest_common_resource(pu_a, pu_b)
 
     def invalidate(self) -> None:
-        self._shared_cache.clear()
+        """Kept for API compatibility: the compiled snapshot invalidates
+        itself on topology mutation, so there is no cache to clear."""
+        self._tables_cache = None
 
     def _pressure_term(self, beta: float, x: float) -> float:
         if x <= 0.0 or beta <= 0.0:
@@ -129,7 +212,43 @@ class DecoupledSlowdown:
         cap = self.graph.nodes[pu_name].attrs.get("mem_usage_cap")
         return min(u, cap) if cap is not None else u
 
-    # -- the model ---------------------------------------------------------
+    # -- per-snapshot model tables ----------------------------------------
+    def _tables(self, comp) -> tuple[np.ndarray, np.ndarray]:
+        """(beta per compiled rclass, mt-beta per compiled PU); cached per
+        snapshot identity, so a topology mutation (new snapshot) rebuilds
+        them and stale coefficients can never leak across versions."""
+        cached = self._tables_cache
+        if cached is None or cached[0] is not comp:
+            p = self.params
+            beta_vec = np.array([p.beta.get(rc, _DEFAULT_BETA)
+                                 for rc in comp.rclass_names])
+            mt_vec = np.array([p.mt_beta.get(cls, p.mt_beta["default"])
+                               for cls in comp.pu_class_kind])
+            cached = (comp, (beta_vec, mt_vec))
+            self._tables_cache = cached
+        return cached[1]
+
+    def _pool_arrays(self, comp, pool: Sequence[tuple[Task, str]]):
+        n = len(pool)
+        P = np.fromiter((comp.pu_index[p] for _, p in pool),
+                        dtype=np.int64, count=n)
+        U = np.fromiter((t.usage.get("pu", 1.0) for t, _ in pool),
+                        dtype=np.float64, count=n)
+        mem = np.fromiter((t.usage.get("mem", 1.0) for t, _ in pool),
+                          dtype=np.float64, count=n)
+        M = np.minimum(mem, comp.mem_cap[P])
+        uid = np.fromiter((t.uid for t, _ in pool), dtype=np.int64, count=n)
+        return P, U, M, uid
+
+    def _noisy(self) -> bool:
+        return self.params.noise > 0.0 and self.rng is not None
+
+    def _apply_noise(self, task: Task, f: float) -> float:
+        irregularity = task.attrs.get("irregularity", 1.0)
+        return f * float(np.exp(self.rng.normal(
+            0.0, self.params.noise * irregularity)))
+
+    # -- the model (scalar reference path) ---------------------------------
     def factor(self, task: Task, pu_name: str,
                coruns: list[tuple[Task, str]]) -> float:
         """Multiplicative slowdown of ``task`` running on ``pu_name`` while
@@ -157,12 +276,140 @@ class DecoupledSlowdown:
             f *= 1.0 + self._pressure_term(p.mt(pu_class), mt_pressure
                                            ) * task.usage.get("pu", 1.0)
         for rclass, x in res_pressure.items():
-            f *= 1.0 + self._pressure_term(p.beta.get(rclass, 0.3), x
+            f *= 1.0 + self._pressure_term(p.beta.get(rclass, _DEFAULT_BETA), x
                                            ) * self._mem_usage(task, pu_name)
         if p.noise > 0.0 and self.rng is not None and f > 1.0:
-            irregularity = task.attrs.get("irregularity", 1.0)
-            f *= float(np.exp(self.rng.normal(0.0, p.noise * irregularity)))
+            f = self._apply_noise(task, f)
         return max(1.0, f)
+
+    # -- vectorized entry points -------------------------------------------
+    def factor_batch(self, pool: Sequence[tuple[Task, str]]) -> np.ndarray:
+        """Joint slowdown factor of every (task, pu) in ``pool`` given all
+        the others — the quantity the Traverser recomputes at each
+        contention-interval boundary, in one shot instead of O(n^2) Python
+        pair loops.  Matches ``factor(t, p, pool)`` per entry to 1e-9."""
+        n = len(pool)
+        if n == 0:
+            return np.ones(0)
+        if self._noisy():
+            # the scalar path draws rng noise per factor call in pool
+            # order; preserve the exact stream
+            return np.array([self.factor(t, p, list(pool)) for t, p in pool])
+        comp = self.graph.compiled()
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        P, U, M, uid = self._pool_arrays(comp, pool)
+        diff_uid = uid[:, None] != uid[None, :]
+        same_pu = (P[:, None] == P[None, :]) & diff_uid
+        mtp = same_pu.astype(np.float64) @ U
+        r = comp.ncr_rclass[P[:, None], P[None, :]]
+        valid = diff_uid & (P[:, None] != P[None, :]) & (r >= 0)
+        X = np.zeros((n, len(comp.rclass_names)))
+        ii, jj = np.nonzero(valid)
+        np.add.at(X, (ii, r[ii, jj]), M[jj])
+        mt_term = _pterm_arr(mt_vec[P], mtp, kappa) * U
+        return _aggregate(X, beta_vec, M, mt_term, kappa)
+
+    def slowdown_matrix(self, pool: Sequence[tuple[Task, str]]) -> np.ndarray:
+        """All pairwise co-run factors in one shot: entry [i, j] is the
+        factor of pool[i] when co-running with pool[j] alone (1.0 on the
+        diagonal / for non-interfering pairs)."""
+        n = len(pool)
+        if n == 0:
+            return np.ones((0, 0))
+        if self._noisy():
+            return np.array([[self.factor(ti, pi, [(tj, pj)])
+                              for tj, pj in pool] for ti, pi in pool])
+        comp = self.graph.compiled()
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        P, U, M, uid = self._pool_arrays(comp, pool)
+        diff_uid = uid[:, None] != uid[None, :]
+        same_pu = (P[:, None] == P[None, :]) & diff_uid
+        r = comp.ncr_rclass[P[:, None], P[None, :]]
+        cross = diff_uid & (P[:, None] != P[None, :]) & (r >= 0)
+        mt_f = 1.0 + _pterm_arr(mt_vec[P][:, None],
+                                np.where(same_pu, U[None, :], 0.0),
+                                kappa) * U[:, None]
+        res_term = np.where(cross,
+                            _pterm_arr(beta_vec[r.clip(0)],
+                                       np.broadcast_to(M[None, :], (n, n)),
+                                       kappa),
+                            0.0)
+        return np.maximum(1.0, mt_f * (1.0 + res_term * M[:, None]))
+
+    def factors_with_candidates(
+            self, task: Task, candidate_pus: Sequence[str],
+            active: Sequence[tuple[Task, str]],
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One-shot Orchestrator constraint check over candidate PUs.
+
+        Returns ``(new_f, act_f)`` where ``new_f[c]`` is the factor of
+        ``task`` placed on ``candidate_pus[c]`` amid ``active``, and
+        ``act_f[c, a]`` is the updated factor of ``active[a]`` if the task
+        joins on candidate ``c`` (Alg. 1 line 15's "existing tasks keep
+        their constraints" re-check, for every candidate at once)."""
+        C = len(candidate_pus)
+        A = len(active)
+        comp = self.graph.compiled()
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        R = len(comp.rclass_names)
+        if self._noisy() or C == 0:
+            new_f = np.array([self.factor(task, p, list(active))
+                              for p in candidate_pus])
+            act_f = np.empty((C, A))
+            for c, p in enumerate(candidate_pus):
+                pool = list(active) + [(task, p)]
+                for a, (t, q) in enumerate(active):
+                    act_f[c, a] = self.factor(t, q, pool)
+            return new_f, act_f
+        Pc = np.fromiter((comp.pu_index[p] for p in candidate_pus),
+                         dtype=np.int64, count=C)
+        u_new = task.usage.get("pu", 1.0)
+        mem_new = task.usage.get("mem", 1.0)
+        Mc = np.minimum(mem_new, comp.mem_cap[Pc])
+        if A == 0:
+            return np.ones(C), np.ones((C, 0))
+        Pa, Ua, Ma, uid_a = self._pool_arrays(comp, active)
+        # co-runners sharing the placed task's uid never interact with it
+        # (the scalar path skips them); mask them out of its pressures and
+        # never add its contribution to theirs
+        live = uid_a != task.uid
+
+        # --- the new task's factor under each candidate -------------------
+        same_ca = (Pc[:, None] == Pa[None, :]) & live[None, :]     # (C, A)
+        mt_c = same_ca.astype(np.float64) @ Ua
+        r_ca = comp.ncr_rclass[Pc[:, None], Pa[None, :]]
+        valid_ca = live[None, :] & (Pc[:, None] != Pa[None, :]) & (r_ca >= 0)
+        Xc = np.zeros((C, R))
+        ci, ai = np.nonzero(valid_ca)
+        np.add.at(Xc, (ci, r_ca[ci, ai]), Ma[ai])
+        mt_term_c = _pterm_arr(mt_vec[Pc], mt_c, kappa) * u_new
+        new_f = _aggregate(Xc, beta_vec, Mc, mt_term_c, kappa)
+
+        # --- each active's factor if the task joins on candidate c --------
+        diff_aa = uid_a[:, None] != uid_a[None, :]
+        same_aa = (Pa[:, None] == Pa[None, :]) & diff_aa
+        mt_base = same_aa.astype(np.float64) @ Ua                  # (A,)
+        r_aa = comp.ncr_rclass[Pa[:, None], Pa[None, :]]
+        valid_aa = diff_aa & (Pa[:, None] != Pa[None, :]) & (r_aa >= 0)
+        Xa = np.zeros((A, R))
+        i2, j2 = np.nonzero(valid_aa)
+        np.add.at(Xa, (i2, r_aa[i2, j2]), Ma[j2])
+        join_same = (Pa[None, :] == Pc[:, None]) & live[None, :]   # (C, A)
+        mt_ca = mt_base[None, :] + np.where(join_same, u_new, 0.0)
+        r_ac = comp.ncr_rclass[Pa[None, :], Pc[:, None]]           # (C, A)
+        join_cross = live[None, :] & (Pa[None, :] != Pc[:, None]) & (r_ac >= 0)
+        X_full = np.repeat(Xa[None, :, :], C, axis=0)              # (C, A, R)
+        c3, a3 = np.nonzero(join_cross)
+        X_full[c3, a3, r_ac[c3, a3]] += Mc[c3]
+        mt_term_a = _pterm_arr(np.broadcast_to(mt_vec[Pa][None, :], (C, A)),
+                               mt_ca, kappa) * Ua[None, :]
+        act_f = _aggregate(X_full.reshape(C * A, R), beta_vec,
+                           np.tile(Ma, C), mt_term_a.reshape(C * A),
+                           kappa).reshape(C, A)
+        return new_f, act_f
 
 
 class NoSlowdown:
@@ -174,6 +421,16 @@ class NoSlowdown:
     def factor(self, task: Task, pu_name: str,
                coruns: list[tuple[Task, str]]) -> float:
         return 1.0
+
+    def factor_batch(self, pool) -> np.ndarray:
+        return np.ones(len(pool))
+
+    def slowdown_matrix(self, pool) -> np.ndarray:
+        return np.ones((len(pool), len(pool)))
+
+    def factors_with_candidates(self, task, candidate_pus, active):
+        return np.ones(len(candidate_pus)), np.ones((len(candidate_pus),
+                                                     len(active)))
 
     def invalidate(self) -> None:
         pass

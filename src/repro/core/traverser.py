@@ -6,7 +6,10 @@ The Traverser walks the CFG in time order and splits execution into
 co-running tasks is constant.  Within an interval each task progresses at
 ``1 / slowdown_factor`` of its standalone speed; at interval boundaries the
 factors are recomputed.  This is implemented as an event-driven simulation
-with virtual-work bookkeeping so rate changes are O(affected jobs).
+with virtual-work bookkeeping so rate changes are O(affected jobs); the
+factor recomputation itself is one vectorized ``factor_batch`` call over
+the compiled HW-GRAPH arrays (core/compiled.py), and transfer routes come
+from the compiled all-pairs tables instead of per-query Dijkstra runs.
 
 The same engine serves two roles:
 
@@ -131,25 +134,38 @@ class Traverser:
                      active: list[tuple[Task, str]] = ()) -> TaskPrediction:
         pu = self.graph.nodes[pu_name]
         assert isinstance(pu, ProcessingUnit)
+        comp = self.graph.compiled()
         standalone = pu.predict(task)
         factor = self.slowdown.factor(task, pu_name, list(active))
-        comm = 0.0
-        if task.input_bytes > 0:
-            # data comes from the producers' devices (set by the runtime once
-            # predecessors are placed), falling back to the task's origin
-            srcs = task.attrs.get("src_devices")
-            if not srcs and task.origin is not None:
-                srcs = [task.origin]
-            dst_dev = self.graph.device_of(pu_name).name
-            for src_dev in srcs or []:
-                if src_dev != dst_dev:
-                    comm = max(comm, self.graph.transfer_time(
-                        src_dev, dst_dev, task.input_bytes))
+        comm = self.comm_time(task, pu_name, comp)
         return TaskPrediction(standalone=standalone, factor=factor, comm=comm)
+
+    def comm_time(self, task: Task, pu_name: str, comp=None) -> float:
+        """Inbound transfer time of ``task``'s input onto ``pu_name``'s device.
+
+        Data comes from the producers' devices (set by the runtime once
+        predecessors are placed), falling back to the task's origin."""
+        if task.input_bytes <= 0:
+            return 0.0
+        comp = comp or self.graph.compiled()
+        srcs = task.attrs.get("src_devices")
+        if not srcs and task.origin is not None:
+            srcs = [task.origin]
+        dst_dev = comp.device_name(pu_name)
+        comm = 0.0
+        for src_dev in srcs or []:
+            if src_dev != dst_dev:
+                comm = max(comm, comp.transfer_time(
+                    src_dev, dst_dev, task.input_bytes))
+        return comm
 
     def predict_active_with(self, new_task: Task, new_pu: str,
                             active: list[tuple[Task, str]]) -> dict[int, float]:
         """Updated slowdown factor of each active task if new_task joins."""
+        batch = getattr(self.slowdown, "factors_with_candidates", None)
+        if batch is not None:
+            _, act_f = batch(new_task, [new_pu], list(active))
+            return {t.uid: float(f) for (t, _), f in zip(active, act_f[0])}
         out: dict[int, float] = {}
         pool = list(active) + [(new_task, new_pu)]
         for t, p in active:
@@ -172,6 +188,8 @@ class Traverser:
         heap: list[tuple[float, int, str, Any]] = []
         seq = itertools.count()
         time = 0.0
+        comp = self.graph.compiled()      # topology is frozen during a traverse
+        factor_batch = getattr(self.slowdown, "factor_batch", None)
 
         # --- state ---
         compute: dict[int, _ComputeJob] = {}               # task.uid -> job
@@ -195,13 +213,20 @@ class Traverser:
             job.t_last = time
 
         def reprice_device(dev: str) -> None:
+            """Contention-interval boundary: recompute every member's rate.
+
+            The whole pool is evaluated in one vectorized shot against the
+            compiled arrays instead of O(n^2) Python pair loops."""
             members = [compute[u] for u in dev_members[dev]]
             pool = [(j.task, j.pu) for j in members]
-            for j in members:
+            if factor_batch is not None:
+                factors = factor_batch(pool)
+            else:
+                factors = [self.slowdown.factor(j.task, j.pu, pool)
+                           for j in members]
+            for j, f in zip(members, factors):
                 settle(j)
-                others = [(t, p) for t, p in pool if t.uid != j.task.uid]
-                f = self.slowdown.factor(j.task, j.pu, others)
-                j.rate = 1.0 / f
+                j.rate = 1.0 / float(f)
                 j.version += 1
                 push(time + j.W / j.rate, "cdone", (j.task.uid, j.version))
             tl.n_intervals += 1
@@ -234,7 +259,7 @@ class Traverser:
             if self.noise > 0.0:
                 irr = task.attrs.get("irregularity", 1.0)
                 work = sa * float(np.exp(self.rng.normal(0.0, self.noise * irr)))
-            dev = self.graph.device_of(pu_name).name
+            dev = comp.device_name(pu_name)
             job = _ComputeJob(task, pu_name, dev, work, time)
             compute[task.uid] = job
             dev_members[dev].add(task.uid)
@@ -248,7 +273,7 @@ class Traverser:
             """Returns True if a transfer was started (False = local/no data)."""
             if src_dev == dst_dev or nbytes <= 0:
                 return False
-            edges = self.graph.route_edges(src_dev, dst_dev)
+            edges = comp.route_edges(src_dev, dst_dev)
             lat = sum(e.latency for e in edges)
             key = next(xfer_seq)
             x = _TransferJob(key, consumer.uid, edges, nbytes, lat, time)
@@ -282,7 +307,7 @@ class Traverser:
             t = task_by_uid.get(uid)
             if t is not None:
                 for s in cfg.succs(t):
-                    dst_dev = self.graph.device_of(mapping[s.uid]).name
+                    dst_dev = comp.device_name(mapping[s.uid])
                     if launch_transfer(s, job.device, dst_dev, t.output_bytes):
                         pass  # data_arrived fires on xdone
                     else:
@@ -299,7 +324,7 @@ class Traverser:
                 raise KeyError(f"{t} has no mapping")
             waiting[t.uid] = len(cfg.preds(t)) + 1     # +1 for the release event
         for bt, bpu, brem in background:
-            dev = self.graph.device_of(bpu).name
+            dev = comp.device_name(bpu)
             job = _ComputeJob(bt, bpu, dev, brem, 0.0)
             compute[bt.uid] = job
             dev_members[dev].add(bt.uid)
@@ -353,7 +378,7 @@ class Traverser:
                 uid = payload
                 t = task_by_uid[uid]
                 # initial input payload from the origin device
-                pu_dev = self.graph.device_of(mapping[uid]).name
+                pu_dev = comp.device_name(mapping[uid])
                 if (t.origin is not None and t.input_bytes > 0
                         and not cfg.preds(t)):
                     if launch_transfer(t, t.origin, pu_dev, t.input_bytes):

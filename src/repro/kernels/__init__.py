@@ -1,1 +1,18 @@
-from . import ops, ref
+"""Pallas kernels + pure-jnp references.
+
+Compat shim: JAX renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams`` across 0.4.x releases.  The kernels in this
+package use the new spelling; on installs that only ship the old one
+(e.g. 0.4.37) we alias it here so both spellings work.  This runs before
+any kernel module is imported (importing a submodule triggers this
+package ``__init__`` first), so every ``pltpu.CompilerParams(...)`` call
+site resolves regardless of the installed JAX.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+if not hasattr(_pltpu, "CompilerParams"):        # old JAX, new spelling used
+    _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+if not hasattr(_pltpu, "TPUCompilerParams"):     # new JAX, old spelling used
+    _pltpu.TPUCompilerParams = _pltpu.CompilerParams
+
+from . import ops, ref, slowdown_kernel

@@ -7,8 +7,28 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -2.0 ** 30
+
+
+def slowdown_factors_ref(x, beta, mem, mt_term, kappa: float) -> np.ndarray:
+    """NumPy oracle for kernels/slowdown_kernel.py (H-EYE §3.4).
+
+    factors[i] = max(1, (1 + mt_term[i])
+                        * prod_r(1 + beta[r]*x[i,r]*(1+kappa*x[i,r]) * mem[i]))
+
+    ``x``: (N, R) per-rclass co-runner pressure; ``beta``: (R,) resource
+    sensitivities; ``mem``: (N,) the task's own effective memory usage;
+    ``mt_term``: (N,) the precomputed multi-tenancy pressure term."""
+    x = np.asarray(x, dtype=np.float64)
+    beta = np.asarray(beta, dtype=np.float64)
+    mem = np.asarray(mem, dtype=np.float64)
+    mt_term = np.asarray(mt_term, dtype=np.float64)
+    term = np.where((x > 0.0) & (beta[None, :] > 0.0),
+                    beta[None, :] * x * (1.0 + kappa * x), 0.0)
+    return np.maximum(1.0, (1.0 + mt_term)
+                      * np.prod(1.0 + term * mem[:, None], axis=-1))
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

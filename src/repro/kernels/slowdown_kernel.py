@@ -1,0 +1,94 @@
+"""Pallas kernel for the batched slowdown factor-aggregation inner loop.
+
+The vectorized slowdown model (core/slowdown.py) reduces every co-run
+pool to dense per-rclass pressure arrays; the remaining inner loop is a
+pure map over pool members:
+
+    factor[i] = max(1, (1 + mt_term[i])
+                       * prod_r(1 + beta[r]*x[i,r]*(1+kappa*x[i,r]) * mem[i]))
+
+On a TPU backend this lowers natively (rows tile the sublanes, the tiny
+rclass axis pads the lanes).  Everywhere else ``slowdown_factors``
+selects the numpy reference (``ref.slowdown_factors_ref``) — the same
+``on_tpu`` switch the other kernels use, except that here the CPU
+fallback is the oracle itself rather than interpret mode: this runs per
+contention interval inside the DES hot loop, where interpret-mode
+execution would defeat the point of the batching.  Interpret mode stays
+available through ``slowdown_factors_pallas(interpret=True)`` for the
+parity tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+_LANES = 128
+
+
+def _factors_kernel(x_ref, beta_ref, mem_ref, mt_ref, o_ref, *, kappa):
+    x = x_ref[...].astype(jnp.float32)           # (bn, R)
+    beta = beta_ref[...].astype(jnp.float32)     # (1, R)
+    mem = mem_ref[...].astype(jnp.float32)       # (bn, 1)
+    mt = mt_ref[...].astype(jnp.float32)         # (bn, 1)
+    term = jnp.where((x > 0.0) & (beta > 0.0),
+                     beta * x * (1.0 + kappa * x), 0.0)
+    f = (1.0 + mt) * jnp.prod(1.0 + term * mem, axis=-1, keepdims=True)
+    o_ref[...] = jnp.maximum(f, 1.0)
+
+
+def slowdown_factors_pallas(x: jax.Array, beta: jax.Array, mem: jax.Array,
+                            mt_term: jax.Array, kappa: float, *,
+                            block_n: int = 256,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """(N, R) pressures -> (N,) factors via pl.pallas_call."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x = jnp.asarray(x, jnp.float32)
+    N, R = x.shape
+    pad_r = (-R) % _LANES
+    bn = min(block_n, max(N, 1))
+    pad_n = (-N) % bn
+    # zero rclass padding contributes a factor-term of exactly 1.0; padded
+    # rows are dropped after the call
+    xp = jnp.pad(x, ((0, pad_n), (0, pad_r)))
+    betap = jnp.pad(jnp.asarray(beta, jnp.float32), (0, pad_r))[None, :]
+    memp = jnp.pad(jnp.asarray(mem, jnp.float32), (0, pad_n))[:, None]
+    mtp = jnp.pad(jnp.asarray(mt_term, jnp.float32), (0, pad_n))[:, None]
+    Np, Rp = N + pad_n, R + pad_r
+    out = pl.pallas_call(
+        functools.partial(_factors_kernel, kappa=kappa),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, Rp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Rp), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xp, betap, memp, mtp)
+    return out[:N, 0]
+
+
+def slowdown_factors(x, beta, mem, mt_term, kappa: float) -> np.ndarray:
+    """Backend-selected batched factor aggregation.
+
+    TPU: Pallas kernel (native lowering).  CPU/GPU: the numpy reference —
+    bit-identical formula, no interpret-mode overhead in the DES hot loop.
+    """
+    if jax.default_backend() == "tpu":
+        return np.asarray(slowdown_factors_pallas(x, beta, mem, mt_term,
+                                                  kappa, interpret=False),
+                          dtype=np.float64)
+    return ref.slowdown_factors_ref(x, beta, mem, mt_term, kappa)

@@ -1,0 +1,247 @@
+"""CompiledHWGraph: exact parity with the object-graph reference path.
+
+The compiled arrays (core/compiled.py) must reproduce the authoring-layer
+algorithms bit-for-bit (tolerance 1e-9): nearest common resources, transfer
+times over the routable nodes, pairwise and pooled slowdown factors, and
+the Orchestrator's batched candidate checks — plus snapshot invalidation
+on every topology mutation hook.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DecoupledSlowdown, Traverser, build_testbed,
+                        heye_params, truth_params)
+from repro.core.hwgraph import ProcessingUnit
+from repro.core.topology import make_task
+
+TOL = 1e-9
+
+
+@pytest.fixture(autouse=True)
+def _strict_f64_aggregation():
+    """1e-9 parity is a float64 contract: pin the numpy aggregation path so
+    these tests hold even on a TPU host (where the fp32 Pallas kernel would
+    otherwise be auto-selected; its own tolerance is tested separately)."""
+    from repro.core import slowdown as sdmod
+    prev = sdmod._AGGREGATE
+    sdmod._AGGREGATE = sdmod._aggregate_np
+    yield
+    sdmod._AGGREGATE = prev
+
+
+@pytest.fixture(scope="module")
+def tb():
+    # the paper's Orin/Xavier testbed: every edge kind + all three servers
+    return build_testbed(edge_counts={"orin_agx": 1, "xavier_agx": 1,
+                                      "orin_nano": 1, "xavier_nx": 2},
+                         server_counts={"server1": 1, "server2": 1,
+                                        "server3": 1})
+
+
+def _pus(g):
+    return [n.name for n in g.nodes.values() if isinstance(n, ProcessingUnit)]
+
+
+def _pool(tb, n_servers=True):
+    kinds = ("dnn", "mm", "knn", "svm", "render", "encode", "reproject")
+    pool = []
+    for i, e in enumerate(tb.edges):
+        for short in ("cpu0", "cpu1", "gpu", "dla", "pva", "vic"):
+            pool.append((make_task(kinds[(i + len(pool)) % len(kinds)]),
+                         f"{e}.{short}"))
+    if n_servers:
+        for s in tb.servers:
+            pool.append((make_task("knn"), f"{s}.gpu"))
+            pool.append((make_task("mlp"), f"{s}.cpu"))
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# nearest common resource
+# ---------------------------------------------------------------------------
+def test_ncr_matrix_matches_object_paths(tb):
+    g = tb.graph
+    comp = g.compiled()
+    pus = _pus(g)
+    for a in pus:
+        pa = g.nodes[a].get_compute_path()
+        for b in pus:
+            pb = set(g.nodes[b].get_compute_path())
+            expected = next((r for r in pa if r in pb), None)
+            assert comp.nearest_common_resource(a, b) == expected, (a, b)
+
+
+def test_ncr_known_contention_points(tb):
+    comp = tb.graph.compiled()
+    e = tb.edges[0]
+    # Fig. 4: DLA and PVA meet at the vision SRAM; same-device CPU clusters
+    # meet at L3; CPU and GPU meet at the LLC; cross-device pairs share nothing
+    assert comp.nearest_common_resource(f"{e}.dla", f"{e}.pva") == f"{e}.sram"
+    assert comp.nearest_common_resource(f"{e}.cpu0", f"{e}.cpu1") == f"{e}.l3"
+    assert comp.nearest_common_resource(f"{e}.cpu0", f"{e}.gpu") == f"{e}.llc"
+    e2 = tb.edges[1]
+    assert comp.nearest_common_resource(f"{e}.gpu", f"{e2}.gpu") is None
+
+
+# ---------------------------------------------------------------------------
+# transfer matrices
+# ---------------------------------------------------------------------------
+def test_transfer_time_parity(tb):
+    g = tb.graph
+    comp = g.compiled()
+    names = tb.edges + tb.servers
+    for nbytes in (0.0, 1e3, 5e6):
+        for s in names:
+            for d in names:
+                assert comp.transfer_time(s, d, nbytes) == pytest.approx(
+                    g.transfer_time(s, d, nbytes), abs=TOL, rel=TOL)
+
+
+def test_transfer_unreachable_raises_like_object_path(tb):
+    g = tb.graph
+    comp = g.compiled()
+    # cluster GROUPs have no interconnects: both layers must raise
+    with pytest.raises(KeyError):
+        g.transfer_time(tb.edges[0], "edge_cluster", 1.0)
+    with pytest.raises(KeyError):
+        comp.transfer_time(tb.edges[0], "edge_cluster", 1.0)
+
+
+def test_route_edges_identity(tb):
+    g = tb.graph
+    comp = g.compiled()
+    e, s = tb.edges[0], tb.servers[0]
+    # the Traverser's bandwidth sharing keys transfers by id(edge): the
+    # compiled routes must hand out the *same* EdgeAttr objects
+    assert [id(x) for x in comp.route_edges(e, s)] == \
+        [id(x) for x in g.route_edges(e, s)]
+
+
+# ---------------------------------------------------------------------------
+# slowdown factors
+# ---------------------------------------------------------------------------
+def test_factor_batch_parity(tb):
+    sd = DecoupledSlowdown(tb.graph, heye_params())
+    pool = _pool(tb)
+    got = sd.factor_batch(pool)
+    want = np.array([sd.factor(t, p, pool) for t, p in pool])
+    np.testing.assert_allclose(got, want, atol=TOL, rtol=TOL)
+
+
+def test_slowdown_matrix_pairwise_parity(tb):
+    sd = DecoupledSlowdown(tb.graph, truth_params(noise=0.0))
+    pool = _pool(tb, n_servers=False)
+    mat = sd.slowdown_matrix(pool)
+    assert mat.shape == (len(pool), len(pool))
+    for i, (ti, pi) in enumerate(pool):
+        for j, (tj, pj) in enumerate(pool):
+            assert mat[i, j] == pytest.approx(
+                sd.factor(ti, pi, [(tj, pj)]), abs=TOL, rel=TOL)
+    np.testing.assert_allclose(np.diag(mat), 1.0)
+
+
+def test_factors_with_candidates_parity(tb):
+    sd = DecoupledSlowdown(tb.graph, heye_params())
+    task = make_task("render", origin=tb.edges[0])
+    active = _pool(tb)[:14]
+    cands = [f"{tb.edges[0]}.{s}" for s in ("cpu0", "cpu1", "gpu", "vic")] \
+        + [f"{tb.servers[0]}.gpu"]
+    new_f, act_f = sd.factors_with_candidates(task, cands, active)
+    for c, p in enumerate(cands):
+        assert new_f[c] == pytest.approx(sd.factor(task, p, list(active)),
+                                         abs=TOL, rel=TOL)
+        pool_c = list(active) + [(task, p)]
+        for a, (t, q) in enumerate(active):
+            assert act_f[c, a] == pytest.approx(sd.factor(t, q, pool_c),
+                                                abs=TOL, rel=TOL)
+
+
+def test_predict_active_with_parity(tb):
+    trav = Traverser(tb.graph)
+    active = _pool(tb)[:10]
+    new = make_task("dnn", origin=tb.edges[0])
+    pu = f"{tb.edges[0]}.gpu"
+    got = trav.predict_active_with(new, pu, active)
+    pool = list(active) + [(new, pu)]
+    for t, p in active:
+        others = [(t2, p2) for t2, p2 in pool if t2.uid != t.uid]
+        assert got[t.uid] == pytest.approx(
+            trav.slowdown.factor(t, p, others), abs=TOL, rel=TOL)
+
+
+def test_noisy_truth_model_still_batches_deterministically(tb):
+    """The ground-truth params carry noise>0 but no rng: the batch path must
+    stay on the vectorized branch and match the scalar path exactly."""
+    sd = DecoupledSlowdown(tb.graph, truth_params())
+    assert sd.rng is None
+    pool = _pool(tb, n_servers=False)[:12]
+    got = sd.factor_batch(pool)
+    want = np.array([sd.factor(t, p, pool) for t, p in pool])
+    np.testing.assert_allclose(got, want, atol=TOL, rtol=TOL)
+
+
+# ---------------------------------------------------------------------------
+# invalidation on topology mutation
+# ---------------------------------------------------------------------------
+def test_mark_dead_invalidates_and_reconverges():
+    tb = build_testbed(edge_counts={"orin_agx": 2},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    e = tb.edges[0]
+    before = g.compiled()
+    assert g.compiled() is before           # snapshot is reused while valid
+    g.mark_dead(e)
+    after = g.compiled()
+    assert after is not before
+    assert not after.pu_alive[after.pu_index[f"{e}.gpu"]]
+    g.mark_alive(e)
+    revived = g.compiled()
+    assert revived is not after
+    assert revived.pu_alive[revived.pu_index[f"{e}.gpu"]]
+    # parity holds against the freshly mutated object graph
+    sd = DecoupledSlowdown(g, heye_params())
+    a, b = make_task("dnn"), make_task("dnn")
+    pool = [(a, f"{e}.gpu"), (b, f"{e}.dla")]
+    np.testing.assert_allclose(
+        sd.factor_batch(pool),
+        [sd.factor(a, f"{e}.gpu", pool), sd.factor(b, f"{e}.dla", pool)],
+        atol=TOL, rtol=TOL)
+
+
+def test_slowdown_kernel_matches_numpy_oracle():
+    """Pallas factor-aggregation kernel (interpret mode) vs ref oracle."""
+    pytest.importorskip("jax")
+    from repro.kernels.ref import slowdown_factors_ref
+    from repro.kernels.slowdown_kernel import (slowdown_factors,
+                                               slowdown_factors_pallas)
+    rng = np.random.default_rng(0)
+    for n, r in ((1, 3), (5, 8), (130, 6)):
+        x = rng.uniform(0.0, 3.0, (n, r)) * (rng.random((n, r)) > 0.4)
+        beta = rng.uniform(0.0, 0.5, r)
+        beta[0] = 0.0                       # inactive-resource branch
+        mem = rng.uniform(0.0, 1.0, n)
+        mt = rng.uniform(0.0, 1.0, n) * (rng.random(n) > 0.5)
+        ref = slowdown_factors_ref(x, beta, mem, mt, 0.12)
+        pal = np.asarray(slowdown_factors_pallas(x, beta, mem, mt, 0.12,
+                                                 interpret=True))
+        np.testing.assert_allclose(pal, ref, rtol=2e-5, atol=2e-5)  # fp32
+        # the backend selector must agree with the oracle exactly off-TPU
+        sel = slowdown_factors(x, beta, mem, mt, 0.12)
+        import jax
+        if jax.default_backend() != "tpu":
+            np.testing.assert_array_equal(sel, ref)
+
+
+def test_set_bandwidth_invalidates_transfer_matrices():
+    tb = build_testbed(edge_counts={"orin_agx": 1},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    e, s = tb.edges[0], tb.servers[0]
+    before = g.compiled()
+    t0 = before.transfer_time(e, s, 10e6)
+    g.set_bandwidth(f"link_{e}", 1e6)
+    after = g.compiled()
+    assert after is not before
+    t1 = after.transfer_time(e, s, 10e6)
+    assert t1 > t0
+    assert t1 == pytest.approx(g.transfer_time(e, s, 10e6), abs=TOL, rel=TOL)

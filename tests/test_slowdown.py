@@ -1,6 +1,8 @@
 """Decoupled slowdown model (paper §3.4 + Fig. 2 calibration)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DecoupledSlowdown, NoSlowdown, SlowdownParams,
