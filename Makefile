@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-compile
+.PHONY: test bench bench-compile bench-session
 
 # tier-1 verification (see ROADMAP.md)
 test:
@@ -14,3 +14,9 @@ bench:
 # object-path vs compiled-path engine throughput; writes BENCH_graph_compile.json
 bench-compile:
 	python -m benchmarks.graph_compile
+
+# frontier-batched vs sequential mapping + mult=64 delta-churn run; writes
+# BENCH_session.json and fails on a >20% mapped-tasks/sec regression vs the
+# checked-in baseline
+bench-session:
+	python -m benchmarks.graph_compile session --check

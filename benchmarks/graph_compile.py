@@ -14,24 +14,46 @@ weak-scaling mining row at mult=8, the paper's real 100-sensor/80-edge/
 
 Emits ``BENCH_graph_compile.json`` next to the repo root so the perf
 trajectory is tracked from PR to PR.
+
+``bench-session`` mode (``python -m benchmarks.graph_compile session``)
+measures the batch-first scheduling surface instead:
+
+* mapped-tasks/sec of ``Orchestrator.map_batch`` frontier waves vs the
+  seed's sequential per-task mapping stack (object-list ledger, per-device
+  scoring loops, Python Alg. 1 l.15 re-checks — replicated verbatim below,
+  like ``ObjectPathSlowdown`` replicates the seed slowdown), with an
+  assignment-parity check between the two;
+* the Fig. 13 weak-scaling mining row at mult=64 driven through a
+  ``SchedulerSession`` with mark_dead/mark_alive churn mid-run — possible
+  only because topology churn is absorbed by ``apply_delta`` snapshot
+  patches (the run asserts zero full recompiles after the initial build).
+
+Emits ``BENCH_session.json``; ``--check`` fails (exit 1) when batched
+mapped-tasks/sec regresses >20% vs the checked-in baseline.
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
 from repro.core import (ActiveLedger, DecoupledSlowdown, Runtime,
-                        build_orchestrators, build_testbed, heye_params,
-                        heye_traverser, mining_workload)
+                        SchedulerSession, build_orchestrators, build_testbed,
+                        ground_truth_traverser, heye_params, heye_traverser,
+                        mining_workload)
+from repro.core.orchestrator import MapResult, Orchestrator
 from repro.core.topology import make_task
+from repro.core.traverser import TaskPrediction
 
 from .common import Table, make_policy
 from .scaling import _mining_completion, mining_counts
 
 _JSON = Path(__file__).resolve().parent.parent / "BENCH_graph_compile.json"
+_SESSION_JSON = Path(__file__).resolve().parent.parent / "BENCH_session.json"
 
 
 class ObjectPathSlowdown:
@@ -195,5 +217,346 @@ def run() -> Table:
     return t
 
 
+# ---------------------------------------------------------------------------
+# bench-session: frontier-batched vs the seed's sequential mapping stack
+# ---------------------------------------------------------------------------
+class SeedLedger:
+    """The seed's object-list ActiveLedger, kept verbatim as the baseline."""
+
+    def __init__(self) -> None:
+        self.by_pu: dict[str, list] = {}
+
+    def add(self, task, pu, pred, now):
+        from repro.core.orchestrator import ActiveEntry
+        e = ActiveEntry(task=task, pu=pu, est_finish=now + pred.total,
+                        factor=pred.factor)
+        self.by_pu.setdefault(pu, []).append(e)
+        return e
+
+    def prune(self, now):
+        for pu in list(self.by_pu):
+            self.by_pu[pu] = [e for e in self.by_pu[pu] if e.est_finish > now]
+            if not self.by_pu[pu]:
+                del self.by_pu[pu]
+
+    def on_device(self, graph, pu_name):
+        comp = graph.compiled()
+        dev = comp.device_name(pu_name)
+        out = []
+        for pu, entries in self.by_pu.items():
+            if comp.device_name(pu) == dev:
+                out.extend(entries)
+        return out
+
+    def count(self, pu):
+        return len(self.by_pu.get(pu, []))
+
+
+class SeedOrchestrator(Orchestrator):
+    """The seed's per-task mapping flow, replicated verbatim: per-device
+    scoring loops over object ledger entries, per-candidate predict calls,
+    and a Python Alg. 1 l.15 loop — no frontier batching, no fused
+    cross-device kernel, no struct-of-arrays ledger."""
+
+    def map_task(self, task, now=0.0, commit=True):
+        self.ledger.prune(now)
+        res = self._traverse_children(task, now)
+        if res is None:
+            res = self._ask_parent(task, now, origin=self)
+        if res is None and self.config.allow_best_effort:
+            res = self._best_effort(task, now)
+        if res is not None and commit:
+            self.ledger.add(task, res.pu, res.prediction, now)
+            task.assigned_pu = res.pu
+        return res
+
+    def _traverse_children(self, task, now, ctx=None, scored=None, pre=None):
+        candidates = []
+        queries = 0
+        hops = 0
+        overhead = 0.0
+        checks = self._check_candidates(task, self.leaf_pus, now)
+        for pu_name, (ok, pred) in zip(self.leaf_pus, checks):
+            queries += 1
+            if ok:
+                r = MapResult(pu=pu_name, prediction=pred)
+                if self.config.objective == "first_fit":
+                    r.queries = queries
+                    r.overhead = overhead + queries * self.config.local_query_cost
+                    r.hops = hops
+                    return r
+                candidates.append(r)
+        for child in self.children:
+            hops += 1
+            overhead += self._hop_cost(child)
+            sub = child._traverse_children(task, now)
+            if sub is not None:
+                queries += sub.queries
+                hops += sub.hops
+                overhead += sub.overhead
+                if self.config.objective == "first_fit":
+                    sub.queries = queries
+                    sub.hops = hops
+                    sub.overhead = overhead + queries * self.config.local_query_cost
+                    return sub
+                candidates.append(sub)
+        if not candidates:
+            return None
+        best = self._select(candidates)
+        best.queries = queries
+        best.hops = hops
+        best.overhead = overhead + queries * self.config.local_query_cost
+        return best
+
+    def _ask_parent(self, task, now, origin, ctx=None, scored=None):
+        if self.parent is None:
+            return None
+        parent = self.parent
+        results = []
+        hops = 1
+        overhead = self._hop_cost(parent)
+        for sibling in parent.children:
+            if sibling is self:
+                continue
+            hops += 1
+            overhead += parent._hop_cost(sibling)
+            sub = sibling._traverse_children(task, now)
+            if sub is not None:
+                sub.hops += hops
+                sub.overhead += overhead
+                if parent.config.objective == "first_fit":
+                    return sub
+                results.append(sub)
+        if results:
+            return self._select(results)
+        return parent._ask_parent(task, now, origin=origin)
+
+    def _best_effort(self, task, now, ctx=None, scored=None):
+        root = self
+        while root.parent is not None:
+            root = root.parent
+        best = None
+        for orc in root.iter_tree():
+            if not orc.leaf_pus:
+                continue
+            scores = self._score_candidates(task, orc.leaf_pus, now,
+                                            with_constraints=False)
+            for pu_name, (ok, pred) in zip(orc.leaf_pus, scores):
+                if not ok:
+                    continue
+                if best is None or pred.total < best.prediction.total:
+                    best = MapResult(pu=pu_name, prediction=pred)
+        return best
+
+    def _score_candidates(self, task, pu_names, now, *, with_constraints,
+                          ctx=None):
+        from repro.core.hwgraph import ProcessingUnit
+        graph = self.graph
+        comp = graph.compiled()
+        infeasible = (False, TaskPrediction(float("inf"), 1.0, 0.0))
+        results = [None] * len(pu_names)
+        eligible = []
+        for i, name in enumerate(pu_names):
+            pu = graph.nodes.get(name)
+            if (not isinstance(pu, ProcessingUnit) or not pu.alive
+                    or (pu.model is not None
+                        and not pu.model.supports(task, pu))
+                    or (task.attrs.get("pinned")
+                        and comp.device_name(name) != task.origin)):
+                results[i] = infeasible
+            else:
+                eligible.append(i)
+        if not eligible:
+            return results
+        sd = self.traverser.slowdown
+        batch = getattr(sd, "factors_with_candidates", None)
+        by_dev = {}
+        for i in eligible:
+            by_dev.setdefault(comp.device_name(pu_names[i]), []).append(i)
+        ret_bytes = task.attrs.get("succ_pinned_bytes", 0.0)
+        for dev, idxs in by_dev.items():
+            names = [pu_names[i] for i in idxs]
+            entries = self.ledger.on_device(graph, names[0])
+            pairs = [(e.task, e.pu) for e in entries]
+            if batch is not None:
+                new_f, act_f = batch(task, names, pairs)
+            else:
+                new_f = [sd.factor(task, p, pairs) for p in names]
+                act_f = None
+            comm = self.traverser.comm_time(task, names[0], comp)
+            if ret_bytes > 0 and task.origin is not None and dev != task.origin:
+                comm += comp.transfer_time(dev, task.origin, ret_bytes)
+            for c, i in enumerate(idxs):
+                name = names[c]
+                pu = graph.nodes[name]
+                pred = TaskPrediction(standalone=pu.predict(task),
+                                      factor=float(new_f[c]), comm=comm)
+                if not with_constraints:
+                    results[i] = (True, pred)
+                    continue
+                on_pu = self.ledger.by_pu.get(name, [])
+                if len(on_pu) >= pu.max_tenancy:
+                    wait = min(e.est_finish for e in on_pu) - now
+                    pred = TaskPrediction(standalone=pred.standalone,
+                                          factor=pred.factor,
+                                          comm=pred.comm + max(0.0, wait))
+                if task.deadline is not None and pred.total > task.deadline:
+                    results[i] = (False, pred)
+                    continue
+                ok = True
+                if entries:
+                    if act_f is None:
+                        new_factors = self.traverser.predict_active_with(
+                            task, name, pairs)
+                    for a, e in enumerate(entries):
+                        if e.task.deadline is None:
+                            continue
+                        f = (float(act_f[c, a]) if act_f is not None
+                             else new_factors[e.task.uid])
+                        rem = e.remaining_standalone(now)
+                        new_finish = now + rem * f
+                        if (new_finish - e.task.release_time
+                                > e.task.deadline * (1 + 1e-9)):
+                            ok = False
+                            break
+                results[i] = (ok, pred)
+        return results
+
+
+def _session_workload(mult: int, n_readings: int, seed_cls=None,
+                      n_sensors: Optional[int] = None):
+    ec, sc = mining_counts(mult)
+    tb = build_testbed(edge_counts=ec, server_counts=sc)
+    kwargs = {}
+    if seed_cls is not None:
+        kwargs = {"cls": seed_cls, "ledger": SeedLedger()}
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph), **kwargs)
+    cfg = mining_workload(tb, n_sensors=n_sensors or 12 * mult,
+                          n_readings=n_readings)
+    waves: dict[float, list] = {}
+    for t in cfg:
+        waves.setdefault(round(t.release_time, 9), []).append(t)
+    tb.graph.compiled()                       # warm the snapshot
+    return tb, root, [waves[k] for k in sorted(waves)]
+
+
+def _mapped_per_sec(mult: int, n_sensors: int):
+    """(sequential seed-stack rate, frontier-batched rate) in tasks/s,
+    with an assignment-parity assert between the two."""
+    tb1, root1, waves1 = _session_workload(mult, 2, seed_cls=SeedOrchestrator,
+                                           n_sensors=n_sensors)
+    n = sum(len(w) for w in waves1)
+    t0 = time.perf_counter()
+    seq_assign = []
+    for w in waves1:
+        now = w[0].release_time
+        for task in w:
+            res = root1._entry_orc(task).map_task(task, now)
+            seq_assign.append(res.pu if res else None)
+    seq_s = time.perf_counter() - t0
+
+    tb2, root2, waves2 = _session_workload(mult, 2, n_sensors=n_sensors)
+    t0 = time.perf_counter()
+    bat_assign = []
+    for w in waves2:
+        for res in root2.map_batch(w, w[0].release_time, route=True):
+            bat_assign.append(res.pu if res else None)
+    bat_s = time.perf_counter() - t0
+    mismatch = sum(1 for a, b in zip(seq_assign, bat_assign) if a != b)
+    if mismatch:
+        raise AssertionError(
+            f"batched assignments diverged from sequential: {mismatch}/{n}")
+    return n, n / seq_s, n / bat_s
+
+
+def run_session(check: bool = False) -> Table:
+    t = Table("session", "frontier-batched vs sequential mapping")
+    baseline = None
+    if _SESSION_JSON.exists():
+        baseline = json.loads(_SESSION_JSON.read_text())
+
+    # --- mapped-tasks/sec at mult=8 (two release waves: cold + warm) -------
+    # nominal = the Fig. 13 weak-scaling sensor ratio; loaded = 3x that
+    # (the oversubscribed regime where per-task Python dispatch and the
+    # object-ledger scans of the sequential stack dominate)
+    n, seq_r, bat_r = _mapped_per_sec(8, 12 * 8)
+    t.add("mapped_per_sec_sequential", seq_r, "tasks/s", n=n)
+    t.add("mapped_per_sec_batched", bat_r, "tasks/s", n=n)
+    t.add("map_batch_speedup", bat_r / seq_r, "x")
+    n, seq_r, bat_r = _mapped_per_sec(8, 36 * 8)
+    t.add("mapped_per_sec_sequential_loaded", seq_r, "tasks/s", n=n)
+    t.add("mapped_per_sec_batched_loaded", bat_r, "tasks/s", n=n)
+    t.add("map_batch_speedup_loaded", bat_r / seq_r, "x")
+
+    # --- Fig. 13 weak scaling at mult=64 through a SchedulerSession --------
+    # with topology churn absorbed by apply_delta (no full recompiles)
+    t0 = time.perf_counter()
+    ec, sc = mining_counts(64)
+    tb = build_testbed(edge_counts=ec, server_counts=sc)
+    g = tb.graph
+    g.compiled()
+    build_s = time.perf_counter() - t0
+    root = build_orchestrators(g, heye_traverser(g))
+    session = SchedulerSession(g, root, truth=ground_truth_traverser(g, 0))
+    cfg = mining_workload(tb, n_sensors=12 * 64, n_readings=1)
+    rebuilds0 = g.recompile_count
+    t0 = time.perf_counter()
+    session.submit(cfg)
+    session.map_pending()
+    # mid-run churn: an edge dies and rejoins; the next frontier maps
+    # against delta-patched snapshots
+    g.mark_dead(tb.edges[0])
+    churn = mining_workload(tb, n_sensors=16, n_readings=1)
+    for task in churn:
+        task.release_time = 1.0
+    session.submit(churn)
+    session.map_pending()
+    g.mark_alive(tb.edges[0])
+    map_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stats = session.execute()
+    exec_s = time.perf_counter() - t0
+    per_reading: dict[tuple, float] = {}
+    for task in cfg:
+        key = (task.attrs["sensor"], round(task.release_time, 6))
+        per_reading[key] = max(per_reading.get(key, 0.0),
+                               stats.timeline.latency(task))
+    rebuilds = g.recompile_count - rebuilds0
+    if rebuilds:
+        raise AssertionError(f"topology churn forced {rebuilds} full "
+                             "recompiles; apply_delta should absorb it")
+    t.add("weak_mining_x64_completion",
+          float(np.mean(list(per_reading.values()))) * 1e3, "ms",
+          devices=sum(mining_counts(64)[0].values())
+          + sum(mining_counts(64)[1].values()),
+          tasks=len(cfg) + len(churn))
+    t.add("x64_build_s", build_s, "s")
+    t.add("x64_map_s", map_s, "s")
+    t.add("x64_exec_s", exec_s, "s")
+    t.add("x64_full_recompiles", rebuilds)
+    t.add("x64_snapshot_deltas", g.delta_count)
+
+    payload = {
+        "figure": t.figure,
+        "rows": {r.name: {"value": r.value, "unit": r.unit, **r.extra}
+                 for r in t.rows},
+    }
+    _SESSION_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    if check and baseline is not None:
+        for row in ("mapped_per_sec_batched", "mapped_per_sec_batched_loaded"):
+            old = baseline["rows"].get(row, {}).get("value")
+            new = t.get(row)
+            if old is not None and new < 0.8 * old:
+                t.print_csv()
+                print(f"REGRESSION: {row} {new:.0f} < 80% of "
+                      f"baseline {old:.0f}")
+                sys.exit(1)
+    return t
+
+
 if __name__ == "__main__":
-    run().print_csv()
+    args = sys.argv[1:]
+    if args and args[0] == "session":
+        run_session(check="--check" in args).print_csv()
+    else:
+        run().print_csv()

@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a small edge-cloud system, models it with the HW-GRAPH, predicts
-task performance with the Traverser (contention included), maps tasks with
-the hierarchical Orchestrator, and runs one VR pipeline end to end.
+task performance with the Traverser (contention included), maps task
+batches with the hierarchical Orchestrator, and runs one VR pipeline end
+to end through a SchedulerSession.
 """
 import sys
 
@@ -12,8 +13,8 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import (Runtime, build_orchestrators, build_testbed,
-                        heye_traverser, OrchestratorPolicy, vr_workload)
+from repro.core import (SchedulerSession, build_orchestrators, build_testbed,
+                        heye_traverser, ground_truth_traverser, vr_workload)
 from repro.core.topology import make_task
 from repro.core.workloads import vr_frame_latencies, vr_frame_qos_failure
 
@@ -39,18 +40,26 @@ print(f"dnn on {edge}.gpu: alone {alone.total * 1e3:.1f} ms, "
       f"next to another dnn {busy.total * 1e3:.1f} ms "
       f"(slowdown {busy.factor:.2f}x)")
 
-# --- 3. hierarchical task mapping (Orchestrator, §3.5 Alg. 1) --------------
+# --- 3. batch-first task mapping (Orchestrator, §3.5 Alg. 1) ----------------
+# a whole frontier of ready tasks maps in ONE call; map_task still exists
+# as a deprecated one-element shim for exploratory use
 root = build_orchestrators(g, trav)
-render = make_task("render", origin=tb.edges[1], deadline=0.020,
-                   input_bytes=4e3)
-res = root.find_device_orc(tb.edges[1]).map_task(render)
-print(f"render (20 ms deadline) from {tb.edges[1]} -> {res.pu} "
-      f"(predicted {res.prediction.total * 1e3:.1f} ms, "
-      f"{res.hops} ORC hops, {res.overhead * 1e6:.0f} us overhead)")
+frontier = [make_task("render", origin=tb.edges[1], deadline=0.020,
+                      input_bytes=4e3),
+            make_task("pose_pred", origin=tb.edges[1], deadline=0.010),
+            make_task("dnn", origin=tb.edges[0], deadline=0.100)]
+for t, res in zip(frontier, root.map_batch(frontier, now=0.0, route=True)):
+    print(f"{t.kind} from {t.origin} -> {res.pu} "
+          f"(predicted {res.prediction.total * 1e3:.1f} ms, "
+          f"{res.hops} ORC hops, {res.overhead * 1e6:.0f} us overhead)")
 
 # --- 4. a full application run (VR pipeline, §4.1) --------------------------
+# SchedulerSession drives dependency-frontier waves through map_batch and
+# then executes the frozen mapping on the ground-truth engine
+session = SchedulerSession(g, build_orchestrators(g, heye_traverser(g)),
+                           truth=ground_truth_traverser(g, seed=0))
 cfg = vr_workload(tb, n_frames=8)
-stats = Runtime(g, seed=0).run(cfg, OrchestratorPolicy(root))
+stats = session.run(cfg)
 lats = vr_frame_latencies(cfg, stats.timeline)
 print(f"VR: {len(lats)} frames, mean latency "
       f"{np.mean(list(lats.values())) * 1e3:.1f} ms, "

@@ -5,9 +5,11 @@
 The paper's mechanism, transplanted to the hardware-adaptation target:
 request streams with latency SLOs arrive at a two-pod fleet; each pod-level
 ORC only sees its own hosts (resource segregation), the fleet ORC only sees
-pod aggregates.  The Traverser's multi-tenancy slowdown keeps co-located
-streams within SLO, and a host failure (mark_dead) triggers re-mapping —
-the dynamic-adaptability path of §5.4 driving elastic serving.
+pod aggregates.  Whole admission waves place in one ``map_batch`` call, the
+Traverser's multi-tenancy slowdown keeps co-located streams within SLO, and
+a host failure (mark_dead — absorbed by an incremental snapshot delta, no
+recompile) triggers a batched re-map via the FT manager — the
+dynamic-adaptability path of §5.4 driving elastic serving.
 One stream is then actually executed with the continuous-batching engine.
 """
 import sys
@@ -23,6 +25,7 @@ from repro.configs import get_config
 from repro.core import (Task, build_orchestrators, heye_traverser)
 from repro.core.predict import CallableModel
 from repro.core.topology import build_tpu_fleet
+from repro.ft.manager import FTManager
 from repro.models import ParallelCtx, build_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -38,35 +41,36 @@ trav = heye_traverser(g)
 root = build_orchestrators(g, trav)
 print("fleet:", g.summary())
 
-# --- place 12 streams with a 50 ms SLO --------------------------------------
-def place(n, origin_host):
-    placed = {}
-    orc = root.find_device_orc(origin_host)
-    for i in range(n):
-        t = Task(kind="stream", deadline=0.050, usage={"pu": 1.0, "mem": 0.7})
-        t.origin = origin_host
-        res = orc.map_task(t, now=0.0)
-        placed[i] = (res.pu if res else None, res.hops if res else 0)
-    return placed
+# --- place a whole admission wave (one map_batch call) ----------------------
+def stream(origin_host):
+    t = Task(kind="stream", deadline=0.050, usage={"pu": 1.0, "mem": 0.7})
+    t.origin = origin_host
+    return t
 
 N = 28     # pod0 holds 8 chips x 3 tenants = 24; the rest must spill to pod1
-placed = place(N, "pod0.host0")
+wave = [stream("pod0.host0") for _ in range(N)]
+results = root.map_batch(wave, now=0.0, route=True)
 by_chip: dict[str, int] = {}
-for pu, hops in placed.values():
-    by_chip[pu] = by_chip.get(pu, 0) + 1
-print(f"placed {N} streams on {len(by_chip)} chips "
+for res in results:
+    by_chip[res.pu] = by_chip.get(res.pu, 0) + 1
+print(f"placed {N} streams on {len(by_chip)} chips in one batch "
       f"(max {max(by_chip.values())} tenants/chip; SLO-bounded)")
-cross_pod = sum(1 for pu, _ in placed.values() if pu and "pod1" in pu)
+cross_pod = sum(1 for res in results if res and "pod1" in res.pu)
 print(f"{cross_pod} streams escalated to pod1 via the fleet ORC "
       "(pod0's ORC never saw pod1's internals)")
 
-# --- a host fails: re-map its streams ----------------------------------------
-victims = [i for i, (pu, _) in placed.items() if pu and "pod0.host0" in pu]
-g.mark_dead("pod0.host0")
-trav.slowdown.invalidate()
-re_placed = place(len(victims), "pod0.host1")
-print(f"host failure: {len(victims)} streams re-mapped, new chips:",
-      sorted({pu for pu, _ in re_placed.values()}))
+# --- a host fails: batched re-map of its streams ------------------------------
+ft = FTManager(g)
+victims = [t for t, res in zip(wave, results) if res and "pod0.host0" in res.pu]
+ft.on_failure(["pod0.host0"])           # mark_dead -> incremental delta patch
+for t in victims:
+    root.ledger.remove(t)
+    t.origin = "pod0.host1"
+re_placed = ft.remap(root, victims, now=0.0)
+print(f"host failure: {len(victims)} streams re-mapped in one batch "
+      f"(snapshot deltas: {g.delta_count}, full recompiles: "
+      f"{g.recompile_count}), new chips:",
+      sorted({res.pu for res in re_placed}))
 
 # --- actually run one stream with continuous batching ------------------------
 cfg = get_config("gemma3-1b").smoke()

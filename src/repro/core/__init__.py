@@ -8,6 +8,7 @@ Public surface:
   DecoupledSlowdown / SlowdownParams             — decoupled slowdown (§3.4)
   Traverser / Timeline / TaskPrediction          — contention intervals (§3.4)
   Orchestrator / build_orchestrators / ActiveLedger — Alg. 1 (§3.5)
+  SchedulerSession                               — batch-first mapping API
   build_testbed / build_tpu_fleet                — topologies (Fig. 4, TPU)
   Runtime / policies                             — experiment harness (§5)
 """
@@ -17,7 +18,8 @@ from .hwgraph import (EdgeAttr, HWGraph, Node, NodeKind, Predictable,
 from .orchestrator import (ActiveLedger, MapResult, OrcConfig, Orchestrator,
                            build_orchestrators)
 from .predict import CallableModel, PerfModel, ProfiledModel, RooflineModel
-from .simulator import (AcePolicy, LatsPolicy, OrchestratorPolicy, RunStats,
+from .session import RunStats, SchedulerSession
+from .simulator import (AcePolicy, LatsPolicy, OrchestratorPolicy,
                         Runtime, ground_truth_traverser, heye_traverser)
 from .slowdown import (DecoupledSlowdown, NoSlowdown, SlowdownParams,
                        heye_params, truth_params)

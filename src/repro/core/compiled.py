@@ -15,11 +15,20 @@ The HW-GRAPH lives in two layers:
   the Traverser's contention-interval repricing, and the Orchestrator's
   batched candidate constraint checks.
 
-``HWGraph.compiled()`` returns the current snapshot and rebuilds it
-lazily after any topology mutation (the existing ``_invalidate_paths()``
-hook drops the snapshot).  All precomputed quantities are bit-for-bit
-reproductions of the object-path algorithms — parity is enforced to
-1e-9 by ``tests/test_compiled.py``:
+``HWGraph.compiled()`` returns the current snapshot.  Construction-time
+mutations (``add_node`` / ``add_edge``) drop it for a full lazy rebuild;
+the *runtime* mutations (``mark_dead`` / ``mark_alive`` /
+``set_bandwidth``) instead go through :meth:`CompiledHWGraph.apply_delta`,
+which produces a cheap copy-on-write clone with only the affected arrays
+patched — dead/revived PU masks, the transfer rows whose routes touch the
+mutated subtree, the inverse-bandwidth entries of routes crossing a
+re-provisioned link — so large fleets survive topology churn without
+re-running the all-pairs builds.  ``apply_delta`` returns ``None`` when a
+mutation's effects exceed what can be patched (e.g. a cache dying under
+still-alive PUs), and the graph falls back to the full rebuild.  All
+precomputed quantities are bit-for-bit reproductions of the object-path
+algorithms — parity is enforced to 1e-9 by ``tests/test_compiled.py``
+and ``tests/test_session.py`` (delta vs. fresh recompile under churn):
 
 * a **PU index space** (every ``ProcessingUnit``, alive or not, in
   insertion order) with per-PU effective-memory caps, PU-class kinds,
@@ -46,10 +55,14 @@ from .hwgraph import EdgeAttr, HWGraph, NodeKind, ProcessingUnit
 
 
 class CompiledHWGraph:
-    """Immutable array-native snapshot of one topology version."""
+    """Immutable array-native snapshot of one topology version.
+
+    ``version`` increases monotonically across ``apply_delta`` clones so
+    downstream caches can key on snapshot identity or version."""
 
     def __init__(self, graph: HWGraph) -> None:
         self.graph = graph
+        self.version = 0
         self._build_pus()
         self._build_ncr()
         self._build_routes()
@@ -78,6 +91,21 @@ class CompiledHWGraph:
             self.pu_class_kind.append(
                 pu.attrs.get("pu_class_kind", pu.attrs.get("pu_class", "default")))
             self._pu_device_name[name] = g.device_of(name).name
+        # enclosing-device name per PU index (vectorized pinned-task masks)
+        self.pu_device = np.array(
+            [self._pu_device_name[n] for n in self.pu_names], dtype=object)
+        # dense device ordinals (block-diagonal slowdown pairing, comm LUTs)
+        self.dev_ord: dict[str, int] = {}
+        self.dev_ord_names: list[str] = []
+        ords = np.empty(P, dtype=np.int64)
+        for i, name in enumerate(self.pu_names):
+            dev = self._pu_device_name[name]
+            o = self.dev_ord.get(dev)
+            if o is None:
+                o = self.dev_ord[dev] = len(self.dev_ord_names)
+                self.dev_ord_names.append(dev)
+            ords[i] = o
+        self.pu_dev_ord = ords
 
     # ------------------------------------------------------------------
     # build: compute paths + nearest-common-resource matrix
@@ -114,16 +142,19 @@ class CompiledHWGraph:
             for r in path:
                 self.path_mask[j, self.resource_index[r]] = True
         # ncr_res[i, j] = first resource on i's path that j's path visits
-        self.ncr_res = np.full((P, P), -1, dtype=np.int64)
+        # (int32/int16 keep the P x P matrices compact at fleet scale)
+        self.ncr_res = np.full((P, P), -1, dtype=np.int32)
         for i, path in enumerate(paths):
             unset = np.ones(P, dtype=bool)
             for r in path:
                 hit = unset & self.path_mask[:, self.resource_index[r]]
                 self.ncr_res[i, hit] = self.resource_index[r]
                 unset &= ~hit
-        self.ncr_rclass = np.where(self.ncr_res >= 0,
-                                   self.resource_rclass[self.ncr_res.clip(0)],
-                                   -1)
+        self.ncr_rclass = self._rclass_of(self.ncr_res)
+
+    def _rclass_of(self, ncr: np.ndarray) -> np.ndarray:
+        return np.where(ncr >= 0, self.resource_rclass[ncr.clip(0)],
+                        -1).astype(np.int16)
 
     # ------------------------------------------------------------------
     # build: all-pairs transfer over routable (GROUP) nodes
@@ -138,26 +169,46 @@ class CompiledHWGraph:
         self.trans_lat = np.full((D, D), np.inf)
         self.trans_ibw = np.zeros((D, D))
         np.fill_diagonal(self.trans_lat, 0.0)
+        # min-latency edge per ordered node pair: O(1) per reconstruction hop
+        # instead of scanning the full adjacency of high-degree hubs
+        self._best_edge: dict[tuple[str, str], EdgeAttr] = {}
+        for a, adj in g._adj.items():
+            for b, e in adj:
+                cur = self._best_edge.get((a, b))
+                if cur is None or e.latency < cur.latency:
+                    self._best_edge[(a, b)] = e
         self._routes: dict[tuple[int, int], list[EdgeAttr]] = {}
-        for i, src in enumerate(self.routable_names):
-            if not g._adj[src]:
+        # ids of every EdgeAttr any route crosses (delta-patch prefilter)
+        self._routed_edge_ids: set[int] = set()
+        for i in range(D):
+            self._rebuild_route_row(i)
+
+    def _rebuild_route_row(self, i: int) -> None:
+        """(Re)compute all routes from source ``i`` against the current
+        authoring graph — the unit of repair ``apply_delta`` uses."""
+        g = self.graph
+        src = self.routable_names[i]
+        self.trans_lat[i, :] = np.inf
+        self.trans_lat[i, i] = 0.0
+        self.trans_ibw[i, :] = 0.0
+        for j in range(len(self.routable_names)):
+            self._routes.pop((i, j), None)
+        if not g._adj[src]:
+            return
+        dist, pred = g.sssp(src)
+        for j, dst in enumerate(self.routable_names):
+            if i == j or dst not in dist:
                 continue
-            dist, pred = g.sssp(src)
-            for j, dst in enumerate(self.routable_names):
-                if i == j or dst not in dist:
-                    continue
-                seq = [dst]
-                while seq[-1] != src:
-                    seq.append(pred[seq[-1]])
-                seq.reverse()
-                edges: list[EdgeAttr] = []
-                for a, b in zip(seq, seq[1:]):
-                    edges.append(min((e for v, e in g._adj[a] if v == b),
-                                     key=lambda e: e.latency))
-                self._routes[(i, j)] = edges
-                self.trans_lat[i, j] = sum(e.latency for e in edges)
-                bw = min((e.bandwidth for e in edges), default=float("inf"))
-                self.trans_ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+            seq = [dst]
+            while seq[-1] != src:
+                seq.append(pred[seq[-1]])
+            seq.reverse()
+            edges = [self._best_edge[(a, b)] for a, b in zip(seq, seq[1:])]
+            self._routes[(i, j)] = edges
+            self._routed_edge_ids.update(id(e) for e in edges)
+            self.trans_lat[i, j] = sum(e.latency for e in edges)
+            bw = min((e.bandwidth for e in edges), default=float("inf"))
+            self.trans_ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
 
     # ------------------------------------------------------------------
     # queries
@@ -210,8 +261,236 @@ class CompiledHWGraph:
             raise KeyError(f"no path {src} -> {dst}")
         return edges
 
+    # ------------------------------------------------------------------
+    # incremental snapshot deltas (mark_dead / mark_alive / set_bandwidth)
+    # ------------------------------------------------------------------
+    def apply_delta(self, kind: str, names=(), edge_name: Optional[str] = None,
+                    ) -> Optional["CompiledHWGraph"]:
+        """Patch this snapshot into a *new* snapshot reflecting one
+        authoring-layer mutation (already applied to ``self.graph``),
+        without a full recompile.
+
+        Returns a copy-on-write clone — only the arrays the mutation
+        touches are copied — or ``None`` when the mutation's effects
+        exceed what can be patched (the caller then rebuilds from
+        scratch).  Route repair note: where several equal-latency
+        shortest paths exist, a patched route may legitimately differ
+        from the one a fresh Dijkstra would pick; latency parity is
+        exact either way.
+        """
+        if kind == "set_bandwidth":
+            return self._delta_bandwidth(edge_name)
+        if kind in ("mark_dead", "mark_alive"):
+            return self._delta_alive(kind == "mark_alive", set(names))
+        return None
+
+    def _clone(self) -> "CompiledHWGraph":
+        c = object.__new__(CompiledHWGraph)
+        c.__dict__.update(self.__dict__)
+        c.version = self.version + 1
+        return c
+
+    def _delta_bandwidth(self, edge_name: str) -> "CompiledHWGraph":
+        # Shortest-path selection weighs latency only, so routes never
+        # change with bandwidth; the EdgeAttr objects are shared with the
+        # authoring layer, so route_edges already sees the new value.
+        # Only the inverse-bandwidth entries of routes crossing the edge
+        # need repair.
+        c = self._clone()
+        c.trans_ibw = self.trans_ibw.copy()
+        for (i, j), edges in self._routes.items():
+            if any(e.name == edge_name for e in edges):
+                bw = min((e.bandwidth for e in edges), default=float("inf"))
+                c.trans_ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+        return c
+
+    def _delta_alive(self, alive: bool,
+                     names: set) -> Optional["CompiledHWGraph"]:
+        g = self.graph
+        c = self._clone()
+        # -- PU aliveness ------------------------------------------------
+        rows = [self.pu_index[n] for n in names if n in self.pu_index]
+        c.pu_alive = self.pu_alive.copy()
+        if rows:
+            c.pu_alive[rows] = alive
+        # -- compute-path effects of dead/revived resources --------------
+        # (ABSTRACT nodes are included conservatively: they could sit on
+        # an intra-device shortest path even though they never appear in
+        # the STORAGE/CONTROLLER path lists themselves)
+        res_nodes = [n for n in names if g.nodes[n].kind in
+                     (NodeKind.STORAGE, NodeKind.CONTROLLER, NodeKind.ABSTRACT)]
+        if res_nodes:
+            res_devs = {self.device_name(n) for n in res_nodes}
+            stale = [i for i, p in enumerate(self.pu_names)
+                     if self._pu_device_name[p] in res_devs]
+            if not alive:
+                # a resource dying under still-alive PUs re-routes their
+                # compute paths: only the whole-subtree case is patchable
+                # (the stale NCR entries then belong to dead PUs, which
+                # eligibility masks filter; revival recomputes them)
+                if any(c.pu_alive[i] for i in stale):
+                    return None
+            elif stale:
+                c._refresh_ncr(stale)
+        # -- transfer routes --------------------------------------------
+        if not c._patch_routes(alive, names):
+            return None
+        return c
+
+    def _refresh_ncr(self, rows: list) -> None:
+        """Recompute compute paths + NCR rows/columns for ``rows`` (PUs of
+        devices whose resources were revived), extending the resource
+        space when the snapshot was first built while they were dead."""
+        g = self.graph
+        new_paths: dict[int, list[str]] = {}
+        for i in rows:
+            node = g.nodes[self.pu_names[i]]
+            new_paths[i] = (node.get_compute_path()
+                            if isinstance(node, ProcessingUnit)
+                            else g.resource_path(self.pu_names[i]))
+        # copy-on-write for everything this repair mutates
+        self.compute_paths = list(self.compute_paths)
+        self.resource_names = list(self.resource_names)
+        self.resource_index = dict(self.resource_index)
+        self.rclass_names = list(self.rclass_names)
+        rclass_index = {rc: k for k, rc in enumerate(self.rclass_names)}
+        fresh = [r for p in new_paths.values() for r in p
+                 if r not in self.resource_index]
+        res_rclass = list(self.resource_rclass)
+        for r in dict.fromkeys(fresh):
+            self.resource_index[r] = len(self.resource_names)
+            self.resource_names.append(r)
+            rc = g.nodes[r].attrs.get("rclass", "dram")
+            if rc not in rclass_index:
+                rclass_index[rc] = len(self.rclass_names)
+                self.rclass_names.append(rc)
+            res_rclass.append(rclass_index[rc])
+        self.resource_rclass = np.asarray(res_rclass, dtype=np.int64)
+        P = len(self.pu_names)
+        R = len(self.resource_names)
+        mask = np.zeros((P, R), dtype=bool)
+        mask[:, :self.path_mask.shape[1]] = self.path_mask
+        self.path_mask = mask
+        self.ncr_res = self.ncr_res.copy()
+        for i, path in new_paths.items():
+            self.compute_paths[i] = path
+            self.path_mask[i, :] = False
+            for r in path:
+                self.path_mask[i, self.resource_index[r]] = True
+        rowset = set(rows)
+        for i in rows:                       # rows of the refreshed PUs
+            self.ncr_res[i, :] = -1
+            unset = np.ones(P, dtype=bool)
+            for r in new_paths[i]:
+                ri = self.resource_index[r]
+                hit = unset & self.path_mask[:, ri]
+                self.ncr_res[i, hit] = ri
+                unset &= ~hit
+        cols = np.asarray(rows, dtype=np.int64)
+        for j in range(P):                   # columns of the refreshed PUs
+            if j in rowset:
+                continue
+            self.ncr_res[j, cols] = -1
+            unset = np.ones(len(cols), dtype=bool)
+            for r in self.compute_paths[j]:
+                ri = self.resource_index[r]
+                hit = unset & self.path_mask[cols, ri]
+                self.ncr_res[j, cols[hit]] = ri
+                unset &= ~hit
+        self.ncr_rclass = self._rclass_of(self.ncr_res)
+
+    def _patch_routes(self, alive: bool, names: set) -> bool:
+        """Repair the transfer tables after an aliveness flip of ``names``.
+
+        Route rows are rebuilt (one Dijkstra each) only where the stored
+        routes actually cross the mutated subtree; leaf-device churn on
+        tree-like fabrics patches endpoints without any Dijkstra."""
+        g = self.graph
+        # eid -> the subtree endpoints of that edge: a route *transits* the
+        # subtree iff it crosses an edge owned by a node that is not one of
+        # the route's own endpoints
+        eid_owners: dict[int, set] = {}
+        for n in names:
+            for _, e in g._adj.get(n, ()):
+                eid_owners.setdefault(id(e), set()).add(n)
+        touched = set(eid_owners) & self._routed_edge_ids
+        r_s = {self.routable_index[n] for n in names
+               if n in self.routable_index}
+        if not alive and not touched and not r_s:
+            return True      # a node no route crosses died: nothing changes
+        if alive and not r_s and not eid_owners:
+            return True      # revived node with no interconnects at all
+        self.trans_lat = self.trans_lat.copy()
+        self.trans_ibw = self.trans_ibw.copy()
+        self._routes = dict(self._routes)
+        self._routed_edge_ids = set(self._routed_edge_ids)
+        D = len(self.routable_names)
+        if not alive:
+            # endpoints into the dead subtree become unroutable (the
+            # object path raises KeyError); routes *from* dead sources
+            # stay valid — Dijkstra explores outward from a dead source
+            stale: set[int] = set()
+            for (i, j), edges in list(self._routes.items()):
+                if j in r_s:
+                    del self._routes[(i, j)]
+                    continue
+                si, sj = self.routable_names[i], self.routable_names[j]
+                for e in edges:
+                    owners = eid_owners.get(id(e))
+                    if owners and not owners <= {si, sj}:
+                        stale.add(i)
+                        break
+            if r_s:
+                cols = sorted(r_s)
+                self.trans_lat[:, cols] = np.inf
+                self.trans_ibw[:, cols] = 0.0
+                for r in cols:
+                    self.trans_lat[r, r] = 0.0
+            for i in stale:
+                self._rebuild_route_row(i)
+        else:
+            for r in sorted(r_s):            # rows of revived sources
+                self._rebuild_route_row(r)
+            for r in sorted(r_s):            # mirror into their columns
+                for j in range(D):
+                    if j == r or j in r_s:
+                        continue
+                    lat = self.trans_lat[r, j]
+                    if np.isfinite(lat) and j != r:
+                        self._routes[(j, r)] = list(
+                            reversed(self._routes[(r, j)]))
+                        self.trans_lat[j, r] = lat
+                        self.trans_ibw[j, r] = self.trans_ibw[r, j]
+                    else:
+                        self._routes.pop((j, r), None)
+                        self.trans_lat[j, r] = np.inf
+                        self.trans_ibw[j, r] = 0.0
+            # transit improvements: a new shortest path through the revived
+            # subtree must pass one of its boundary nodes — one Dijkstra per
+            # boundary node flags exactly the rows that can improve
+            boundary = [n for n in names
+                        if any(v not in names and g.nodes[v].alive
+                               for v, _ in g._adj.get(n, ()))]
+            improved: set[int] = set()
+            for b in boundary:
+                dist, _ = g.sssp(b)
+                d = np.array([dist.get(nm, np.inf)
+                              for nm in self.routable_names])
+                thru = d[:, None] + d[None, :]
+                imp = np.nonzero((thru < self.trans_lat).any(axis=1))[0]
+                improved.update(int(i) for i in imp if i not in r_s)
+            # rows of still-dead sources are invisible to the boundary scan
+            # (a dead node is unreachable as a destination but still routes
+            # outward as a source) — recompute them directly
+            for j, nm in enumerate(self.routable_names):
+                if j not in r_s and not g.nodes[nm].alive:
+                    improved.add(j)
+            for i in sorted(improved):
+                self._rebuild_route_row(i)
+        return True
+
     def summary(self) -> str:
         P = len(self.pu_names)
         return (f"CompiledHWGraph({P} PUs, {len(self.resource_names)} resources, "
                 f"{len(self.rclass_names)} rclasses, "
-                f"{len(self.routable_names)} routable)")
+                f"{len(self.routable_names)} routable, v{self.version})")

@@ -145,6 +145,8 @@ class HWGraph:
         self.abstraction: dict[str, str] = {}
         self.refinement: dict[str, str] = {}
         self._compiled = None        # lazy CompiledHWGraph snapshot
+        self.recompile_count = 0     # full snapshot builds
+        self.delta_count = 0         # incremental apply_delta patches
 
     # -- construction ------------------------------------------------------
     def add_node(self, node: Node) -> Node:
@@ -328,22 +330,27 @@ class HWGraph:
         return sorted(shared)
 
     # -- dynamic adaptability ------------------------------------------------
+    def _subtree(self, name: str) -> list[str]:
+        out: list[str] = []
+        stack = [name]
+        while stack:
+            cur = stack.pop()
+            out.append(cur)
+            stack.extend(self._children.get(cur, []))
+        return out
+
     def mark_dead(self, name: str) -> None:
         """Node failure: the node (and its subtree) stops being schedulable."""
-        stack = [name]
-        while stack:
-            cur = stack.pop()
+        names = self._subtree(name)
+        for cur in names:
             self.nodes[cur].alive = False
-            stack.extend(self._children.get(cur, []))
-        self._invalidate_paths()
+        self._after_mutation("mark_dead", names=names)
 
     def mark_alive(self, name: str) -> None:
-        stack = [name]
-        while stack:
-            cur = stack.pop()
+        names = self._subtree(name)
+        for cur in names:
             self.nodes[cur].alive = True
-            stack.extend(self._children.get(cur, []))
-        self._invalidate_paths()
+        self._after_mutation("mark_alive", names=names)
 
     def set_bandwidth(self, edge_name: str, bandwidth: float) -> None:
         """Dynamic network conditions (paper §5.4.1)."""
@@ -355,7 +362,24 @@ class HWGraph:
                     found = True
         if not found:
             raise KeyError(f"no edge named {edge_name!r}")
-        self._invalidate_paths()
+        self._after_mutation("set_bandwidth", edge_name=edge_name)
+
+    def _after_mutation(self, kind: str, names=(), edge_name=None) -> None:
+        """Invalidate object-layer caches, then delta-patch the compiled
+        snapshot instead of dropping it (full rebuild only when the delta
+        engine declines — see ``CompiledHWGraph.apply_delta``)."""
+        for n in self.nodes.values():
+            if isinstance(n, ProcessingUnit):
+                n.invalidate()
+        if self._compiled is not None:
+            try:
+                patched = self._compiled.apply_delta(kind, names=names,
+                                                     edge_name=edge_name)
+            except Exception:
+                patched = None
+            self._compiled = patched
+            if patched is not None:
+                self.delta_count += 1
 
     def _invalidate_paths(self) -> None:
         for n in self.nodes.values():
@@ -366,12 +390,15 @@ class HWGraph:
     def compiled(self):
         """The array-native snapshot of the current topology version.
 
-        Built lazily on first use and dropped by ``_invalidate_paths()``
-        (mark_dead / mark_alive / set_bandwidth) and by construction-time
-        mutations, so callers may simply re-fetch it per decision."""
+        Built lazily on first use.  Construction-time mutations drop the
+        snapshot entirely; runtime mutations (mark_dead / mark_alive /
+        set_bandwidth) patch it incrementally via ``apply_delta`` so
+        callers may simply re-fetch it per decision.  ``recompile_count``
+        / ``delta_count`` record which path each topology version took."""
         if self._compiled is None:
             from .compiled import CompiledHWGraph
             self._compiled = CompiledHWGraph(self)
+            self.recompile_count += 1
         return self._compiled
 
     # -- convenience ---------------------------------------------------------

@@ -16,19 +16,24 @@ test (H-EYE / ACE-like / LaTS-like) never see these parameters.
 
   phase 2 (execution): the full workload with the frozen mapping runs
   through the ground-truth engine, yielding real latencies / QoS failures.
+
+Both phases are driven by :class:`core.session.SchedulerSession`:
+``Runtime.run`` is a thin delegate that keeps the seed's strict per-task
+release-order semantics by default and exposes the frontier-batched wave
+discipline via ``frontier=True``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import numpy as np
 
 from .hwgraph import HWGraph, ProcessingUnit
 from .orchestrator import ActiveLedger, MapResult, Orchestrator
+from .session import RunStats, SchedulerSession, _any_supporting
 from .slowdown import DecoupledSlowdown, SlowdownParams, heye_params, truth_params
 from .task import Task, TaskGraph
-from .traverser import Timeline, Traverser
+from .traverser import Traverser
 
 
 def ground_truth_traverser(graph: HWGraph, seed: int = 0,
@@ -43,37 +48,12 @@ def heye_traverser(graph: HWGraph) -> Traverser:
     return Traverser(graph, slowdown=DecoupledSlowdown(graph, heye_params()))
 
 
-@dataclass
-class RunStats:
-    timeline: Timeline
-    mapping: dict[int, str]
-    overhead: dict[int, float] = field(default_factory=dict)   # uid -> seconds
-    queries: dict[int, int] = field(default_factory=dict)
-    hops: dict[int, int] = field(default_factory=dict)
-    unmapped: list[int] = field(default_factory=list)
-
-    def qos_failures(self, cfg: TaskGraph) -> int:
-        return sum(0 if self.timeline.deadline_met(t) else 1 for t in cfg)
-
-    def qos_failure_rate(self, cfg: TaskGraph) -> float:
-        dl = [t for t in cfg if t.deadline is not None]
-        if not dl:
-            return 0.0
-        return sum(0 if self.timeline.deadline_met(t) else 1
-                   for t in dl) / len(dl)
-
-    def mean_overhead_ratio(self, cfg: TaskGraph) -> float:
-        """Fig. 14 metric: scheduling overhead / task execution time."""
-        ratios = []
-        for t in cfg:
-            exec_t = (self.timeline.finish[t.uid] - self.timeline.start[t.uid])
-            if exec_t > 0 and t.uid in self.overhead:
-                ratios.append(self.overhead[t.uid] / exec_t)
-        return float(np.mean(ratios)) if ratios else 0.0
-
-
 class Runtime:
-    """Drives (policy -> mapping) then (ground truth -> outcomes)."""
+    """Drives (policy -> mapping) then (ground truth -> outcomes).
+
+    Thin delegate over :class:`SchedulerSession`: the default keeps the
+    seed's strict per-task release-order semantics; ``frontier=True``
+    switches to dependency-frontier batching (``map_batch`` waves)."""
 
     def __init__(self, graph: HWGraph, seed: int = 0,
                  truth: Optional[Traverser] = None) -> None:
@@ -82,48 +62,12 @@ class Runtime:
 
     def run(self, cfg: TaskGraph,
             assign: Callable[[Task, float], Optional[MapResult]],
-            charge_overhead: bool = True) -> RunStats:
+            charge_overhead: bool = True, frontier: bool = False) -> RunStats:
         """``assign(task, now)`` returns a MapResult (policy decision)."""
-        mapping: dict[int, str] = {}
-        stats_overhead: dict[int, float] = {}
-        stats_q: dict[int, int] = {}
-        stats_h: dict[int, int] = {}
-        unmapped: list[int] = []
-        for t in sorted(cfg, key=lambda t: (t.release_time, t.uid)):
-            preds = cfg.preds(t)
-            placed = [p.assigned_pu for p in preds if p.assigned_pu]
-            if placed:
-                t.attrs["src_devices"] = sorted(
-                    {self.graph.device_of(pu).name for pu in placed})
-            res = assign(t, t.release_time)
-            if res is None:
-                unmapped.append(t.uid)
-                # fall back to any supporting PU so execution remains defined
-                res = _any_supporting(self.graph, t)
-                if res is None:
-                    raise RuntimeError(f"no PU supports {t}")
-            mapping[t.uid] = res.pu
-            stats_overhead[t.uid] = res.overhead
-            stats_q[t.uid] = res.queries
-            stats_h[t.uid] = res.hops
-            if charge_overhead:
-                t.release_time += res.overhead
-        tl = self.truth.traverse(cfg, mapping)
-        return RunStats(timeline=tl, mapping=mapping, overhead=stats_overhead,
-                        queries=stats_q, hops=stats_h, unmapped=unmapped)
-
-
-def _any_supporting(graph: HWGraph, task: Task) -> Optional[MapResult]:
-    from .traverser import TaskPrediction
-    for pu in graph.pus():
-        if pu.model is None or not pu.model.supports(task, pu):
-            continue
-        if (task.attrs.get("pinned") and
-                graph.device_of(pu.name).name != task.origin):
-            continue
-        return MapResult(pu=pu.name,
-                         prediction=TaskPrediction(pu.predict(task), 1.0, 0.0))
-    return None
+        session = SchedulerSession(self.graph, assign, truth=self.truth,
+                                   charge_overhead=charge_overhead,
+                                   frontier=frontier)
+        return session.run(cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +86,11 @@ class AcePolicy:
         self.graph = graph
         self.trav = blind_traverser
         self.static_choice: dict[tuple[str, str], str] = {}   # (origin, kind) -> pu
+
+    def map_batch(self, tasks, now: float):
+        """Baseline batch entry: per-task decisions in order (this policy
+        carries no batchable state beyond its static-choice cache)."""
+        return [self(t, now) for t in tasks]
 
     def __call__(self, task: Task, now: float) -> Optional[MapResult]:
         key = (task.origin or "", task.kind)
@@ -200,6 +149,11 @@ class LatsPolicy:
             self.ledger.add(task, best.pu, best.prediction, now)
         return best
 
+    def map_batch(self, tasks, now: float):
+        """Baseline batch entry: per-task decisions in order (availability
+        monitoring reads its own ledger between decisions)."""
+        return [self(t, now) for t in tasks]
+
 
 class OrchestratorPolicy:
     """H-EYE: route each task to its origin device's ORC (paper §3.2)."""
@@ -215,3 +169,12 @@ class OrchestratorPolicy:
             orc = next((o for o in self.root.iter_tree() if o.is_device_orc()),
                        self.root)
         return orc.map_task(task, now)
+
+    def map_batch(self, tasks, now: float):
+        """Frontier entry: the whole batch goes through the root ORC's
+        ``map_batch`` (origin-routed).  Subclasses that customize per-task
+        ``__call__`` (sticky / grouped / direct-server strategies) keep
+        their semantics — the batch falls back to per-task calls for them."""
+        if type(self).__call__ is not OrchestratorPolicy.__call__:
+            return [self(t, now) for t in tasks]
+        return self.root.map_batch(tasks, now, route=True)

@@ -352,9 +352,6 @@ class DecoupledSlowdown:
         C = len(candidate_pus)
         A = len(active)
         comp = self.graph.compiled()
-        beta_vec, mt_vec = self._tables(comp)
-        kappa = self.params.superlinear
-        R = len(comp.rclass_names)
         if self._noisy() or C == 0:
             new_f = np.array([self.factor(task, p, list(active))
                               for p in candidate_pus])
@@ -366,12 +363,32 @@ class DecoupledSlowdown:
             return new_f, act_f
         Pc = np.fromiter((comp.pu_index[p] for p in candidate_pus),
                          dtype=np.int64, count=C)
+        Pa, Ua, Ma, uid_a = self._pool_arrays(comp, active)
+        return self.factors_with_candidates_idx(comp, task, Pc,
+                                                Pa, Ua, Ma, uid_a)
+
+    def factors_with_candidates_idx(
+            self, comp, task: Task, Pc: np.ndarray, Pa: np.ndarray,
+            Ua: np.ndarray, Ma: np.ndarray, uid_a: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Array-native core of :meth:`factors_with_candidates`.
+
+        Candidates arrive as compiled PU indices and the active set as
+        struct-of-arrays ledger columns (PU index, pu-usage, capped
+        mem-usage, uid), so the Orchestrator's batched constraint checks
+        feed the ledger straight in without building object tuples.
+        Noise-free path only — callers with a noisy model use the tuple
+        entry point, which preserves the scalar rng stream."""
+        C = len(Pc)
+        A = len(Pa)
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        R = len(comp.rclass_names)
         u_new = task.usage.get("pu", 1.0)
         mem_new = task.usage.get("mem", 1.0)
         Mc = np.minimum(mem_new, comp.mem_cap[Pc])
         if A == 0:
             return np.ones(C), np.ones((C, 0))
-        Pa, Ua, Ma, uid_a = self._pool_arrays(comp, active)
         # co-runners sharing the placed task's uid never interact with it
         # (the scalar path skips them); mask them out of its pressures and
         # never add its contribution to theirs
@@ -411,6 +428,98 @@ class DecoupledSlowdown:
                            kappa).reshape(C, A)
         return new_f, act_f
 
+    def factors_same_device(
+            self, comp, task: Task, Pc: np.ndarray, Dc: np.ndarray,
+            Pa: np.ndarray, Ua: np.ndarray, Ma: np.ndarray,
+            uid_a: np.ndarray, Da: np.ndarray, astart: np.ndarray,
+            na: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Block-diagonal constraint-check kernel over *many devices* at once.
+
+        Compute paths never cross device boundaries, so PUs on different
+        devices share no resources and a candidate only interacts with the
+        actives of its own device.  One call scores every candidate of an
+        arbitrary mixed-device set against a device-sorted active ledger
+        (``Da`` ascending, ``astart``/``na`` the per-device-ordinal segment
+        offsets/lengths), materializing only the same-device
+        (candidate, active) pairs instead of a dense C x A block.
+
+        Returns ``(new_f, ci, ai, act_pf)``: the newcomer's factor per
+        candidate, and flat same-device pair arrays where ``act_pf[k]`` is
+        the updated factor of active ``ai[k]`` if the task joins candidate
+        ``ci[k]`` (the Alg. 1 l.15 inputs).  Noise-free path only.
+        """
+        C = len(Pc)
+        A = len(Pa)
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        R = len(comp.rclass_names)
+        u_new = task.usage.get("pu", 1.0)
+        mem_new = task.usage.get("mem", 1.0)
+        Mc = np.minimum(mem_new, comp.mem_cap[Pc])
+        empty = np.zeros(0, dtype=np.int64)
+        if C == 0 or A == 0:
+            return np.ones(C), empty, empty, np.ones(0)
+
+        def segment_pairs(left_ids, left_dev):
+            """(li, ri): cross product of each left element with the active
+            rows of its device (actives contiguous per device ordinal)."""
+            rep = na[left_dev]
+            K = int(rep.sum())
+            if K == 0:
+                return empty, empty
+            li = np.repeat(left_ids, rep)
+            within = np.arange(K) - np.repeat(np.cumsum(rep) - rep, rep)
+            ri = np.repeat(astart[left_dev], rep) + within
+            return li, ri
+
+        # --- the new task's factor per candidate --------------------------
+        ci, ai = segment_pairs(np.arange(C), Dc)
+        if not len(ci):
+            # no active shares a device with any candidate: all factors 1
+            return np.ones(C), empty, empty, np.ones(0)
+        live = uid_a[ai] != task.uid
+        Pci, Pai = Pc[ci], Pa[ai]
+        same = (Pci == Pai) & live
+        r_ca = np.asarray(comp.ncr_rclass[Pci, Pai], dtype=np.int64)
+        validc = live & (Pci != Pai) & (r_ca >= 0)
+        Xc = np.zeros((C, R))
+        np.add.at(Xc, (ci[validc], r_ca[validc]), Ma[ai[validc]])
+        mt_c = np.zeros(C)
+        np.add.at(mt_c, ci[same], Ua[ai[same]])
+        mt_term_c = _pterm_arr(mt_vec[Pc], mt_c, kappa) * u_new
+
+        # --- each same-device active's factor if the task joins -----------
+        # base pressures only for actives on candidate devices: the rest
+        # never appear in a (candidate, active) pair
+        d0 = int(Dc[0])
+        if bool((Dc == d0).all()):           # single-device candidate set
+            act_sel = np.arange(astart[d0], astart[d0] + na[d0])
+        else:
+            act_sel = np.nonzero(np.isin(Da, np.unique(Dc)))[0]
+        a1, a2 = segment_pairs(act_sel, Da[act_sel])
+        diff = uid_a[a1] != uid_a[a2]
+        sameP = (Pa[a1] == Pa[a2]) & diff
+        r_aa = np.asarray(comp.ncr_rclass[Pa[a1], Pa[a2]], dtype=np.int64)
+        valida = diff & (Pa[a1] != Pa[a2]) & (r_aa >= 0)
+        Xa = np.zeros((A, R))
+        np.add.at(Xa, (a1[valida], r_aa[valida]), Ma[a2[valida]])
+        mt_base = np.zeros(A)
+        np.add.at(mt_base, a1[sameP], Ua[a2[sameP]])
+        Xp = Xa[ai]                            # (K, R): base + join term
+        r_ac = np.asarray(comp.ncr_rclass[Pai, Pci], dtype=np.int64)
+        jc = live & (Pai != Pci) & (r_ac >= 0)
+        kk = np.nonzero(jc)[0]
+        Xp[kk, r_ac[kk]] += Mc[ci[kk]]
+        mt_p = mt_base[ai] + np.where(same, u_new, 0.0)
+        mt_term_p = _pterm_arr(mt_vec[Pai], mt_p, kappa) * Ua[ai]
+        # one aggregation over the stacked (candidate; pair) rows — the
+        # kernel is elementwise per row, so splitting back is exact
+        f = _aggregate(np.concatenate([Xc, Xp]), beta_vec,
+                       np.concatenate([Mc, Ma[ai]]),
+                       np.concatenate([mt_term_c, mt_term_p]), kappa)
+        return f[:C], ci, ai, f[C:]
+
 
 class NoSlowdown:
     """Contention-blind model (what ACE-like baselines assume)."""
@@ -431,6 +540,14 @@ class NoSlowdown:
     def factors_with_candidates(self, task, candidate_pus, active):
         return np.ones(len(candidate_pus)), np.ones((len(candidate_pus),
                                                      len(active)))
+
+    def factors_with_candidates_idx(self, comp, task, Pc, Pa, Ua, Ma, uid_a):
+        return np.ones(len(Pc)), np.ones((len(Pc), len(Pa)))
+
+    def factors_same_device(self, comp, task, Pc, Dc, Pa, Ua, Ma, uid_a,
+                            Da, astart, na):
+        e = np.zeros(0, dtype=np.int64)
+        return np.ones(len(Pc)), e, e, np.ones(0)
 
     def invalidate(self) -> None:
         pass

@@ -141,7 +141,12 @@ class Traverser:
         return TaskPrediction(standalone=standalone, factor=factor, comm=comm)
 
     def comm_time(self, task: Task, pu_name: str, comp=None) -> float:
-        """Inbound transfer time of ``task``'s input onto ``pu_name``'s device.
+        """Inbound transfer time of ``task``'s input onto ``pu_name``'s device."""
+        comp = comp or self.graph.compiled()
+        return self.comm_time_dev(task, comp.device_name(pu_name), comp)
+
+    def comm_time_dev(self, task: Task, dst_dev: str, comp=None) -> float:
+        """Inbound transfer time of ``task``'s input onto device ``dst_dev``.
 
         Data comes from the producers' devices (set by the runtime once
         predecessors are placed), falling back to the task's origin."""
@@ -151,7 +156,6 @@ class Traverser:
         srcs = task.attrs.get("src_devices")
         if not srcs and task.origin is not None:
             srcs = [task.origin]
-        dst_dev = comp.device_name(pu_name)
         comm = 0.0
         for src_dev in srcs or []:
             if src_dev != dst_dev:
@@ -208,6 +212,17 @@ class Traverser:
             heapq.heappush(heap, (t, next(seq), kind, payload))
 
         # --- rate maintenance -------------------------------------------
+        # Repricing is *frontier-batched*: handlers only mark devices/edges
+        # dirty, and one flush per distinct event timestamp reprices each
+        # dirty device pool and the union of touched links once — a
+        # producer fanning out K transfers (or a release wave starting K
+        # tasks) costs one repricing call, not K.  Rates are piecewise
+        # constant and settle() at an unchanged timestamp is a no-op, so
+        # the deferred flush computes exactly the rates the per-change
+        # repricing would have.
+        dirty_devs: set[str] = set()
+        dirty_edges: dict[int, EdgeAttr] = {}
+
         def settle(job) -> None:
             job.W = max(0.0, job.W - job.rate * (time - job.t_last))
             job.t_last = time
@@ -245,6 +260,15 @@ class Traverser:
                 eta = time + (x.W / x.rate if x.rate > 0 else float("inf"))
                 push(eta, "xdone", (x.key, x.version))
 
+        def flush() -> None:
+            if dirty_devs:
+                for dev in dirty_devs:
+                    reprice_device(dev)
+                dirty_devs.clear()
+            if dirty_edges:
+                reprice_edges(list(dirty_edges.values()))
+                dirty_edges.clear()
+
         # --- job lifecycle ----------------------------------------------
         def start_compute(task: Task) -> None:
             pu_name = mapping[task.uid]
@@ -266,7 +290,7 @@ class Traverser:
             tl.start[task.uid] = time
             tl.standalone[task.uid] = sa
             tl.queue_wait[task.uid] = time - ready_at.get(task.uid, task.release_time)
-            reprice_device(dev)
+            dirty_devs.add(dev)
 
         def launch_transfer(consumer: Task, src_dev: str, dst_dev: str,
                             nbytes: float) -> bool:
@@ -280,7 +304,7 @@ class Traverser:
             transfers[key] = x
             for e in edges:
                 edge_members[id(e)].add(key)
-            reprice_edges(edges)
+                dirty_edges[id(e)] = e
             return True
 
         def data_arrived(uid: int) -> None:
@@ -316,7 +340,7 @@ class Traverser:
             q = pu_queue[job.pu]
             if q:
                 start_compute(q.popleft())
-            reprice_device(job.device)
+            dirty_devs.add(job.device)
 
         # --- initialization ----------------------------------------------
         for t in cfg:
@@ -331,8 +355,8 @@ class Traverser:
             pu_running[bpu] += 1
             tl.start[bt.uid] = 0.0
             tl.standalone[bt.uid] = brem
-        for dev in list(dev_members):
-            reprice_device(dev)
+            dirty_devs.add(dev)
+        flush()
         for t in cfg:
             if not cfg.preds(t):
                 push(t.release_time, "release", t.uid)
@@ -340,52 +364,53 @@ class Traverser:
                 push(t.release_time, "release", t.uid)
 
         # --- event loop ---------------------------------------------------
+        # all events sharing one timestamp drain before a single flush
+        # reprices the devices/links they touched (frontier batching)
         while heap:
-            ev_t, _, kind, payload = heapq.heappop(heap)
-            if kind == "cdone":
-                uid, ver = payload
-                job = compute.get(uid)
-                if job is None or job.version != ver:
-                    continue
-                time = max(time, ev_t)
-                settle(job)
-                if job.W > 1e-15:   # stale estimate; a fresh one is queued
-                    continue
-                finish_compute(uid)
-            elif kind == "xdone":
-                key, ver = payload
-                x = transfers.get(key)
-                if x is None or x.version != ver:
-                    continue
-                time = max(time, ev_t)
-                settle(x)
-                if x.W > 1e-6:
-                    continue
-                # latency tail: propagate arrival after fixed route latency
-                transfers.pop(key)
-                for e in x.edges:
-                    edge_members[id(e)].discard(key)
-                reprice_edges(x.edges)
-                if x.latency > 0:
-                    push(time + x.latency, "arrive", x.consumer_uid)
-                else:
-                    data_arrived(x.consumer_uid)
-            elif kind == "arrive":
-                time = max(time, ev_t)
-                data_arrived(payload)
-            elif kind == "release":
-                time = max(time, ev_t)
-                uid = payload
-                t = task_by_uid[uid]
-                # initial input payload from the origin device
-                pu_dev = comp.device_name(mapping[uid])
-                if (t.origin is not None and t.input_bytes > 0
-                        and not cfg.preds(t)):
-                    if launch_transfer(t, t.origin, pu_dev, t.input_bytes):
+            time = max(time, heap[0][0])
+            while heap and heap[0][0] <= time:
+                _, _, kind, payload = heapq.heappop(heap)
+                if kind == "cdone":
+                    uid, ver = payload
+                    job = compute.get(uid)
+                    if job is None or job.version != ver:
                         continue
-                data_arrived(uid)
-            else:  # pragma: no cover
-                raise AssertionError(kind)
+                    settle(job)
+                    if job.W > 1e-15:   # stale estimate; a fresh one is queued
+                        continue
+                    finish_compute(uid)
+                elif kind == "xdone":
+                    key, ver = payload
+                    x = transfers.get(key)
+                    if x is None or x.version != ver:
+                        continue
+                    settle(x)
+                    if x.W > 1e-6:
+                        continue
+                    # latency tail: propagate arrival after fixed route latency
+                    transfers.pop(key)
+                    for e in x.edges:
+                        edge_members[id(e)].discard(key)
+                        dirty_edges[id(e)] = e
+                    if x.latency > 0:
+                        push(time + x.latency, "arrive", x.consumer_uid)
+                    else:
+                        data_arrived(x.consumer_uid)
+                elif kind == "arrive":
+                    data_arrived(payload)
+                elif kind == "release":
+                    uid = payload
+                    t = task_by_uid[uid]
+                    # initial input payload from the origin device
+                    pu_dev = comp.device_name(mapping[uid])
+                    if (t.origin is not None and t.input_bytes > 0
+                            and not cfg.preds(t)):
+                        if launch_transfer(t, t.origin, pu_dev, t.input_bytes):
+                            continue
+                    data_arrived(uid)
+                else:  # pragma: no cover
+                    raise AssertionError(kind)
+            flush()
 
         missing = [u for u in task_by_uid if u not in tl.finish]
         if missing:

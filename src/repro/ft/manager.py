@@ -3,10 +3,14 @@
 The same dynamic-adaptability machinery the paper demonstrates on edge
 fleets (§5.4: bandwidth drops, nodes joining) handles TPU-fleet failures:
 
-* a failed host is ``mark_dead`` in the HW-GRAPH; the manager recomputes the
-  largest healthy mesh (elastic rescale) and replays from the last committed
-  checkpoint, resharded onto the surviving mesh (checkpoint/store.restore
-  takes a per-leaf sharding_fn);
+* a failed host is ``mark_dead`` in the HW-GRAPH — the compiled scheduling
+  snapshot absorbs this via ``CompiledHWGraph.apply_delta`` (no full
+  recompile), and ``remap`` pushes the orphaned work back through the
+  batch-first scheduling surface (``Orchestrator.map_batch`` /
+  ``SchedulerSession``) in one frontier instead of task-by-task;
+* the manager recomputes the largest healthy mesh (elastic rescale) and
+  replays from the last committed checkpoint, resharded onto the surviving
+  mesh (checkpoint/store.restore takes a per-leaf sharding_fn);
 * stragglers are detected as step-time outliers vs the fleet median — the
   H-EYE slowdown model's inverse: an unexplained slowdown on one host means
   contention we did not schedule, so the Orchestrator re-maps work off it;
@@ -90,6 +94,17 @@ class FTManager:
     def on_join(self, host: str) -> RecoveryPlan:
         self.graph.mark_alive(host)
         return self.plan_mesh()
+
+    def remap(self, scheduler, tasks, now: float = 0.0):
+        """Re-place orphaned tasks after ``on_failure`` in one batch.
+
+        ``scheduler`` is an Orchestrator root (or anything exposing
+        ``map_batch(tasks, now)``); the dead hosts are already invisible
+        to its eligibility masks via the delta-patched snapshot."""
+        from repro.core.orchestrator import Orchestrator
+        if isinstance(scheduler, Orchestrator):
+            return scheduler.map_batch(tasks, now, route=True)
+        return scheduler.map_batch(tasks, now)
 
     def plan_mesh(self, model_parallel: int = 16) -> RecoveryPlan:
         """Largest (data, model) grid over surviving chips, keeping the model

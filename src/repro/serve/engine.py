@@ -1,11 +1,12 @@
 """Serving engine: continuous batching over a fixed slot pool.
 
 ``ServeEngine`` keeps a (max_slots, max_len) KV cache; requests claim free
-slots, are prefillled (per-request), then advance together in batched decode
-steps; finished slots are recycled mid-flight (continuous batching).  The
-multi-tenant *placement* of engines onto pod slices — with SLO-aware
-contention checks — is handled by the H-EYE Orchestrator (see
-examples/serve_fleet.py).
+slots via the batch-first ``admit_many`` (all newly admitted prompts
+prefill together, one decode step per prompt position across the wave),
+then advance together in batched decode steps; finished slots are recycled
+mid-flight (continuous batching).  The multi-tenant *placement* of engines
+onto pod slices — with SLO-aware contention checks — is handled by the
+H-EYE scheduling session (see examples/serve_fleet.py).
 """
 from __future__ import annotations
 
@@ -46,28 +47,44 @@ class ServeEngine:
 
     # -- slot management ------------------------------------------------------
     def admit(self, req: Request) -> bool:
-        if not self.free:
-            return False
-        req.slot = self.free.pop()
-        self.active[req.slot] = req
-        # per-request prefill: feed prompt tokens through decode steps for the
-        # claimed slot (batched single-token steps keep the cache layout
-        # uniform across slots; bulk prefill is an optimization knob)
-        for t, tok in enumerate(req.prompt):
-            logits = self._step_slot(req.slot, int(tok), t)
-        self.pos[req.slot] = len(req.prompt)
-        req.out.append(int(np.argmax(logits)))
-        return True
+        """One-request shim over :meth:`admit_many` (kept for compatibility)."""
+        return bool(self.admit_many([req]))
 
-    def _step_slot(self, slot: int, token: int, position: int):
-        toks = np.zeros((self.max_slots, 1), np.int32)
-        poss = self.pos.copy()
-        toks[slot, 0] = token
-        poss[slot] = position
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks), jnp.asarray(poss))
-        self._tokens_decoded += 1
-        return np.asarray(logits[slot])
+    def admit_many(self, reqs: list[Request]) -> list[Request]:
+        """Batch-first admission: claim free slots for as many requests as
+        fit, then prefill *all* claimed slots together — one decode step
+        per prompt position across the batch instead of one per token per
+        request (mirrors the scheduler's frontier batching).  Returns the
+        admitted requests; the rest stay with the caller."""
+        admitted: list[Request] = []
+        for req in reqs:
+            if not self.free:
+                break
+            req.slot = self.free.pop()
+            self.active[req.slot] = req
+            admitted.append(req)
+        if not admitted:
+            return admitted
+        last: dict[int, np.ndarray] = {}
+        for t in range(max(len(r.prompt) for r in admitted)):
+            toks = np.zeros((self.max_slots, 1), np.int32)
+            poss = self.pos.copy()
+            stepped = [r for r in admitted if t < len(r.prompt)]
+            for r in stepped:
+                toks[r.slot, 0] = int(r.prompt[t])
+                poss[r.slot] = t
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(poss))
+            self._tokens_decoded += len(stepped)
+            logits = np.asarray(logits)
+            for r in stepped:
+                if t == len(r.prompt) - 1:
+                    last[r.slot] = logits[r.slot]
+        for r in admitted:
+            self.pos[r.slot] = len(r.prompt)
+            r.out.append(int(np.argmax(last[r.slot])))
+        return admitted
 
     # -- batched decode ------------------------------------------------------
     def step(self) -> list[Request]:
@@ -96,11 +113,13 @@ class ServeEngine:
         return finished
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Continuous batching: admit whenever a slot frees up."""
+        """Continuous batching: admit whenever slots free up, in one
+        batched prefill per admission wave."""
         pending = list(requests)
         done: list[Request] = []
         while pending or self.active:
-            while pending and self.free:
-                self.admit(pending.pop(0))
+            if pending and self.free:
+                admitted = self.admit_many(pending[:len(self.free)])
+                del pending[:len(admitted)]
             done.extend(self.step())
         return done

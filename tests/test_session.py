@@ -1,0 +1,418 @@
+"""Batch-first scheduling API: parity + behavior suites.
+
+* ``map_batch`` over a frontier must yield the *same* assignments,
+  predictions and overhead accounting as N sequential ``map_task`` calls
+  (tolerance 1e-9) — including when commits land on devices later tasks
+  score (the optimistic-rescore path).
+* ``CompiledHWGraph.apply_delta`` must match a full recompile under
+  mark_dead / mark_alive / set_bandwidth churn, on both the edge testbed
+  (tree routing) and the TPU fleet (host-ring transit routes), without
+  ever triggering a full rebuild.
+* ``SchedulerSession`` drives dependency-frontier waves with exact
+  producer->consumer provenance, and its sequential mode reproduces the
+  seed ``Runtime.run`` semantics.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (ActiveLedger, OrchestratorPolicy, Runtime,
+                        SchedulerSession, build_orchestrators, build_testbed,
+                        ground_truth_traverser, heye_traverser,
+                        mining_workload, vr_workload)
+from repro.core.compiled import CompiledHWGraph
+from repro.core.topology import build_tpu_fleet, make_task
+import repro.core.task as task_mod
+
+TOL = 1e-9
+
+
+def _testbed(mult=1):
+    return build_testbed(
+        edge_counts={"orin_agx": 2 * mult, "xavier_agx": mult,
+                     "orin_nano": mult, "xavier_nx": mult},
+        server_counts={"server1": 1, "server2": 1})
+
+
+def _frontier(tb, n=36, seed_uid=50_000):
+    """A mixed frontier: local-feasible ML tasks (several per device, so
+    commits dirty later siblings) plus escalating renders."""
+    task_mod._task_counter = itertools.count(seed_uid)
+    tasks = []
+    for i in range(n):
+        e = tb.edges[i % len(tb.edges)]
+        kind = ("svm", "knn", "mlp")[i % 3]
+        tasks.append(make_task(kind, origin=e, deadline=0.1,
+                               input_bytes=64e3, output_bytes=1e3))
+    for i in range(5):
+        e = tb.edges[i % len(tb.edges)]
+        tasks.append(make_task("render", origin=e, deadline=0.03,
+                               input_bytes=4e3))
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# map_batch vs sequential map_task
+# ---------------------------------------------------------------------------
+def test_map_batch_matches_sequential_map_task():
+    tb1, tb2 = _testbed(), _testbed()
+    w1, w2 = _frontier(tb1), _frontier(tb2)
+    root1 = build_orchestrators(tb1.graph, heye_traverser(tb1.graph))
+    root2 = build_orchestrators(tb2.graph, heye_traverser(tb2.graph))
+    seq = [root1._entry_orc(t).map_task(t, 0.0) for t in w1]
+    bat = root2.map_batch(w2, 0.0, route=True)
+    assert len(seq) == len(bat)
+    for i, (a, b) in enumerate(zip(seq, bat)):
+        assert (a is None) == (b is None), i
+        if a is None:
+            continue
+        assert a.pu == b.pu, i
+        assert a.prediction.total == pytest.approx(b.prediction.total,
+                                                   abs=TOL, rel=TOL)
+        assert a.prediction.factor == pytest.approx(b.prediction.factor,
+                                                    abs=TOL, rel=TOL)
+        assert a.overhead == pytest.approx(b.overhead, abs=TOL, rel=TOL)
+        assert (a.queries, a.hops) == (b.queries, b.hops), i
+    # the ledgers end in the same state
+    assert {t.uid: t.assigned_pu for t in w1} == \
+        {t.uid: t.assigned_pu for t in w2}
+
+
+def test_map_batch_same_device_cascade_parity():
+    """Many tasks of one origin device: every later task must see the
+    earlier commits (the dirty-rescore path), exactly as sequential."""
+    tb1, tb2 = _testbed(), _testbed()
+    e1, e2 = tb1.edges[0], tb2.edges[0]
+    task_mod._task_counter = itertools.count(60_000)
+    w1 = [make_task(("dnn", "svm", "mlp", "knn")[i % 4], origin=e1,
+                    deadline=0.2) for i in range(12)]
+    task_mod._task_counter = itertools.count(60_000)
+    w2 = [make_task(("dnn", "svm", "mlp", "knn")[i % 4], origin=e2,
+                    deadline=0.2) for i in range(12)]
+    root1 = build_orchestrators(tb1.graph, heye_traverser(tb1.graph))
+    root2 = build_orchestrators(tb2.graph, heye_traverser(tb2.graph))
+    seq = [root1.find_device_orc(e1).map_task(t, 0.0) for t in w1]
+    bat = root2.find_device_orc(e2).map_batch(w2, 0.0)
+    assert [r.pu.split(".")[-1] for r in seq] == \
+        [r.pu.split(".")[-1] for r in bat]
+    for a, b in zip(seq, bat):
+        assert a.prediction.total == pytest.approx(b.prediction.total,
+                                                   abs=TOL, rel=TOL)
+    # the cascade actually spread load (not all on one PU)
+    assert len({r.pu for r in bat}) > 1
+
+
+def test_map_batch_commit_false_leaves_ledger_untouched():
+    tb = _testbed()
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    w = _frontier(tb, n=9)
+    res = root.map_batch(w, 0.0, commit=False, route=True)
+    assert all(r is not None for r in res)
+    assert len(root.ledger) == 0
+    assert all(t.assigned_pu is None for t in w)
+
+
+def test_map_task_shim_still_commits():
+    tb = _testbed()
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    t = make_task("dnn", origin=tb.edges[0], deadline=1.0)
+    res = root.find_device_orc(tb.edges[0]).map_task(t)
+    assert res is not None and t.assigned_pu == res.pu
+    assert root.ledger.count(res.pu) == 1
+
+
+# ---------------------------------------------------------------------------
+# struct-of-arrays ActiveLedger
+# ---------------------------------------------------------------------------
+def test_soa_ledger_compat_views():
+    tb = _testbed()
+    g = tb.graph
+    trav = heye_traverser(g)
+    led = ActiveLedger()
+    e = tb.edges[0]
+    ts = [make_task("dnn", origin=e, deadline=0.5) for _ in range(4)]
+    for i, t in enumerate(ts):
+        pu = f"{e}.gpu" if i % 2 == 0 else f"{e}.dla"
+        led.add(t, pu, trav.predict_task(t, pu, []), now=0.0)
+    assert len(led) == 4
+    assert led.count(f"{e}.gpu") == 2
+    by_pu = led.by_pu
+    assert sorted(by_pu) == sorted({f"{e}.gpu", f"{e}.dla"})
+    on_dev = led.on_device(g, f"{e}.gpu")
+    assert len(on_dev) == 4
+    assert {x.task.uid for x in on_dev} == {t.uid for t in ts}
+    view = led.device_view(g.compiled(), e)
+    assert len(view) == 4
+    np.testing.assert_array_equal(np.sort(view.uid),
+                                  np.sort([t.uid for t in ts]))
+    led.remove(ts[0])
+    assert led.count(f"{e}.gpu") == 1
+    led.prune(now=1e9)
+    assert len(led) == 0 and led.count(f"{e}.dla") == 0
+
+
+def test_soa_ledger_prune_keeps_future_entries():
+    tb = _testbed()
+    trav = heye_traverser(tb.graph)
+    led = ActiveLedger()
+    e = tb.edges[0]
+    t = make_task("dnn", origin=e)
+    entry = led.add(t, f"{e}.gpu", trav.predict_task(t, f"{e}.gpu", []), 0.0)
+    led.prune(now=entry.est_finish * 0.5)
+    assert led.count(f"{e}.gpu") == 1
+    led.prune(now=entry.est_finish + 1.0)
+    assert led.count(f"{e}.gpu") == 0
+
+
+def test_factors_same_device_matches_scalar_reference():
+    """Independent pin of the block-diagonal kernel against the scalar
+    slowdown model (not via map_batch, which would be self-referential):
+    candidates spread over several devices, actives on those devices and
+    elsewhere."""
+    from repro.core import DecoupledSlowdown, heye_params
+    tb = _testbed()
+    g = tb.graph
+    comp = g.compiled()
+    sd = DecoupledSlowdown(g, heye_params())
+    task_mod._task_counter = itertools.count(80_000)
+    # actives: several per device across three edges + a server
+    active = []
+    for e in tb.edges[:3]:
+        for short in ("gpu", "dla", "cpu0"):
+            active.append((make_task("dnn"), f"{e}.{short}"))
+    active.append((make_task("knn"), f"{tb.servers[0]}.gpu"))
+    newcomer = make_task("render", origin=tb.edges[0])
+    cands = ([f"{tb.edges[0]}.{s}" for s in ("gpu", "vic", "cpu1")]
+             + [f"{tb.edges[1]}.gpu", f"{tb.servers[0]}.gpu",
+                f"{tb.servers[1]}.gpu"])
+    # device-sorted active arrays, exactly as a ledger view would hand over
+    Pa = np.array([comp.pu_index[p] for _, p in active])
+    Da = comp.pu_dev_ord[Pa]
+    order = np.argsort(Da, kind="stable")
+    active = [active[i] for i in order]
+    Pa, Da = Pa[order], Da[order]
+    Ua = np.array([t.usage.get("pu", 1.0) for t, _ in active])
+    Ma = np.minimum(np.array([t.usage.get("mem", 1.0) for t, _ in active]),
+                    comp.mem_cap[Pa])
+    uid_a = np.array([t.uid for t, _ in active])
+    na = np.bincount(Da, minlength=len(comp.dev_ord_names))
+    astart = np.cumsum(na) - na
+    Pc = np.array([comp.pu_index[p] for p in cands])
+    Dc = comp.pu_dev_ord[Pc]
+    new_f, ci, ai, act_pf = sd.factors_same_device(
+        comp, newcomer, Pc, Dc, Pa, Ua, Ma, uid_a, Da, astart, na)
+    # scalar reference: newcomer amid the same-device actives only
+    for c, pu in enumerate(cands):
+        dev = comp.device_name(pu)
+        local = [(t, p) for t, p in active if comp.device_name(p) == dev]
+        assert new_f[c] == pytest.approx(sd.factor(newcomer, pu, local),
+                                         abs=TOL, rel=TOL), pu
+    # pair factors: each same-device active if the newcomer joins
+    for k in range(len(ci)):
+        c, a = int(ci[k]), int(ai[k])
+        t, p = active[a]
+        dev = comp.device_name(cands[c])
+        local = [(t2, p2) for t2, p2 in active
+                 if comp.device_name(p2) == dev]
+        want = sd.factor(t, p, local + [(newcomer, cands[c])])
+        assert act_pf[k] == pytest.approx(want, abs=TOL, rel=TOL), (c, a)
+    # every same-device (candidate, active) pair is present exactly once
+    expect_pairs = sum(int(na[d]) for d in Dc)
+    assert len(ci) == expect_pairs
+
+
+# ---------------------------------------------------------------------------
+# apply_delta vs full recompile
+# ---------------------------------------------------------------------------
+def _assert_snapshot_parity(g, devs, label):
+    comp = g.compiled()
+    fresh = CompiledHWGraph(g)
+    np.testing.assert_array_equal(comp.pu_alive, fresh.pu_alive,
+                                  err_msg=label)
+    for s in devs:
+        for d in devs:
+            for nb in (0.0, 5e6):
+                try:
+                    a = comp.transfer_time(s, d, nb)
+                except KeyError:
+                    a = None
+                try:
+                    b = fresh.transfer_time(s, d, nb)
+                except KeyError:
+                    b = None
+                assert (a is None) == (b is None), (label, s, d)
+                if a is not None:
+                    assert a == pytest.approx(b, abs=TOL, rel=TOL), \
+                        (label, s, d)
+    alive = [n for i, n in enumerate(comp.pu_names) if comp.pu_alive[i]]
+    for a in alive[:24]:
+        for b in alive[:24]:
+            assert comp.nearest_common_resource(a, b) == \
+                fresh.nearest_common_resource(a, b), (label, a, b)
+
+
+def test_apply_delta_parity_testbed_churn():
+    tb = build_testbed(edge_counts={"orin_agx": 2, "orin_nano": 1},
+                       server_counts={"server1": 1, "server2": 1})
+    g = tb.graph
+    devs = tb.edges + tb.servers
+    g.compiled()
+    rebuilds0 = g.recompile_count
+    e = tb.edges[0]
+    for step, mutate in (
+            ("dead pu", lambda: g.mark_dead(f"{e}.gpu")),
+            ("alive pu", lambda: g.mark_alive(f"{e}.gpu")),
+            ("dead device", lambda: g.mark_dead(e)),
+            ("bandwidth", lambda: g.set_bandwidth(f"link_{tb.edges[1]}", 1e6)),
+            ("alive device", lambda: g.mark_alive(e)),
+            ("bandwidth back", lambda: g.set_bandwidth(f"link_{tb.edges[1]}",
+                                                       1e9))):
+        mutate()
+        _assert_snapshot_parity(g, devs, step)
+    assert g.recompile_count == rebuilds0          # deltas only
+    assert g.delta_count >= 6
+
+
+def test_apply_delta_parity_tpu_ring_transit():
+    """Host-ring routes transit other hosts: killing one re-routes pairs
+    that never touch it as an endpoint."""
+    fl = build_tpu_fleet(n_pods=2, hosts_per_pod=4, chips_per_host=2)
+    g = fl.graph
+    hosts = [n.name for n in g.nodes.values()
+             if n.attrs.get("orc_level") == "device"]
+    g.compiled()
+    rebuilds0 = g.recompile_count
+    g.mark_dead("pod0.host1")
+    _assert_snapshot_parity(g, hosts, "dead host")
+    g.mark_dead("pod0.host2")
+    _assert_snapshot_parity(g, hosts, "dead host2")
+    g.mark_alive("pod0.host1")
+    _assert_snapshot_parity(g, hosts, "alive host (other still dead)")
+    g.mark_alive("pod0.host2")
+    _assert_snapshot_parity(g, hosts, "alive host2")
+    assert g.recompile_count == rebuilds0
+
+
+def test_apply_delta_slowdown_factors_match_fresh():
+    tb = build_testbed(edge_counts={"orin_agx": 2},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    g.compiled()
+    g.mark_dead(tb.edges[1])
+    g.mark_alive(tb.edges[1])
+    from repro.core import DecoupledSlowdown, heye_params
+    sd = DecoupledSlowdown(g, heye_params())
+    e = tb.edges[1]
+    pool = [(make_task("dnn"), f"{e}.gpu"), (make_task("dnn"), f"{e}.dla"),
+            (make_task("svm"), f"{e}.cpu0")]
+    got = sd.factor_batch(pool)
+    # fresh recompile reference
+    g._compiled = None
+    sd2 = DecoupledSlowdown(g, heye_params())
+    np.testing.assert_allclose(got, sd2.factor_batch(pool),
+                               atol=TOL, rtol=TOL)
+
+
+def test_mutation_before_first_compile_still_works():
+    tb = build_testbed(edge_counts={"orin_agx": 1},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    g.mark_dead(tb.edges[0])               # no snapshot yet: no delta
+    comp = g.compiled()
+    assert not comp.pu_alive[comp.pu_index[f"{tb.edges[0]}.gpu"]]
+    assert g.delta_count == 0 and g.recompile_count == 1
+
+
+# ---------------------------------------------------------------------------
+# SchedulerSession
+# ---------------------------------------------------------------------------
+def test_session_sequential_mode_matches_runtime():
+    tb1, tb2 = _testbed(), _testbed()
+    task_mod._task_counter = itertools.count(70_000)
+    cfg1 = mining_workload(tb1, n_sensors=8, n_readings=2)
+    task_mod._task_counter = itertools.count(70_000)
+    cfg2 = mining_workload(tb2, n_sensors=8, n_readings=2)
+    st1 = Runtime(tb1.graph, seed=0).run(
+        cfg1, OrchestratorPolicy(
+            build_orchestrators(tb1.graph, heye_traverser(tb1.graph))))
+    sess = SchedulerSession(
+        tb2.graph,
+        OrchestratorPolicy(
+            build_orchestrators(tb2.graph, heye_traverser(tb2.graph))),
+        truth=ground_truth_traverser(tb2.graph, seed=0), frontier=False)
+    st2 = sess.run(cfg2)
+    assert st1.mapping == st2.mapping
+    assert st1.timeline.makespan == pytest.approx(st2.timeline.makespan,
+                                                  abs=TOL, rel=TOL)
+    assert st1.overhead == st2.overhead
+
+
+def test_session_frontier_respects_dependencies():
+    tb = _testbed()
+    cfg = vr_workload(tb, n_frames=3)
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    sess = SchedulerSession(tb.graph, root,
+                            truth=ground_truth_traverser(tb.graph, seed=0))
+    stats = sess.run(cfg)
+    assert not stats.unmapped
+    # producers were always placed before consumers: every non-root task
+    # carries exact src_devices provenance
+    for t in cfg:
+        if cfg.preds(t):
+            assert t.attrs.get("src_devices"), t
+    for t in cfg:
+        for p in cfg.preds(t):
+            assert stats.timeline.start[t.uid] >= \
+                stats.timeline.finish[p.uid] - TOL
+
+
+def test_session_streaming_submit_and_churn():
+    """Streaming batches across topology churn: mapping continues on
+    delta-patched snapshots, never a full recompile."""
+    tb = _testbed()
+    g = tb.graph
+    root = build_orchestrators(g, heye_traverser(g))
+    sess = SchedulerSession(g, root,
+                            truth=ground_truth_traverser(g, seed=0))
+    sess.submit([make_task("svm", origin=e, deadline=0.2)
+                 for e in tb.edges])
+    sess.map_pending()
+    rebuilds = g.recompile_count
+    g.mark_dead(tb.edges[0])
+    late = [make_task("knn", origin=tb.edges[1], deadline=0.2,
+                      release_time=0.5) for _ in range(4)]
+    sess.submit(late)
+    sess.map_pending()
+    g.mark_alive(tb.edges[0])
+    assert g.recompile_count == rebuilds
+    # nothing was placed on the dead edge
+    for t in late:
+        assert not sess.mapping[t.uid].startswith(tb.edges[0] + ".")
+    stats = sess.execute()
+    assert stats.timeline.makespan > 0
+
+
+def test_session_frontier_waves_group_by_release():
+    tb = _testbed()
+    cfg = mining_workload(tb, n_sensors=6, n_readings=3)
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    sess = SchedulerSession(tb.graph, root)
+    sess.submit(cfg)
+    waves = list(sess._waves())
+    # 3 readings -> 3 waves, each holding every sensor's 3 ML tasks
+    assert len(waves) == 3
+    assert all(len(w) == 18 for _, w in waves)
+    nows = [now for now, _ in waves]
+    assert nows == sorted(nows)
+
+
+def test_runtime_frontier_flag_matches_policy_batching():
+    """Runtime(frontier=True) drives map_batch waves; outcomes stay within
+    QoS on a light workload."""
+    tb = _testbed()
+    cfg = mining_workload(tb, n_sensors=6, n_readings=2)
+    pol = OrchestratorPolicy(
+        build_orchestrators(tb.graph, heye_traverser(tb.graph)))
+    stats = Runtime(tb.graph, seed=0).run(cfg, pol, frontier=True)
+    assert stats.qos_failure_rate(cfg) < 0.05
