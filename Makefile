@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-compile bench-session
+.PHONY: test bench bench-compile bench-session bench-des bench-des-smoke
 
 # tier-1 verification (see ROADMAP.md)
 test:
@@ -20,3 +20,13 @@ bench-compile:
 # checked-in baseline
 bench-session:
 	python -m benchmarks.graph_compile session --check
+
+# array-native DES engine vs the seed heapq loop at mult=8 oversubscribed,
+# plus the mult=128 lazy snapshot build; writes BENCH_des.json and fails on
+# a >20% events/sec regression or a <3x speedup vs the seed loop
+bench-des:
+	python -m benchmarks.des --check
+
+# seconds-scale DES parity + throughput smoke (CI)
+bench-des-smoke:
+	python -m benchmarks.des --smoke

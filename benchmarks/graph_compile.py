@@ -139,6 +139,10 @@ def run() -> Table:
     ec, sc = mining_counts(4)
     tb = build_testbed(edge_counts=ec, server_counts=sc)
     g = tb.graph
+    t0 = time.perf_counter()
+    g.compiled()
+    t.add("snapshot_build_s", time.perf_counter() - t0, "s",
+          pus=len(g.compiled().pu_names))
     obj = ObjectPathSlowdown(g)
     sd = DecoupledSlowdown(g, heye_params())
     pool = _fleet_pool(tb)
@@ -207,6 +211,14 @@ def run() -> Table:
         t.add(f"weak_mining_x{mult}_completion", comp * 1e3, "ms",
               devices=sum(ecm.values()) + sum(scm.values()),
               wall_s=round(wall[mult], 2))
+
+    # snapshot lifecycle of the bench graph: full rebuilds vs incremental
+    # deltas vs lazily materialized route rows (laziness = route Dijkstras
+    # happen per *touched* source, not per routable node at build)
+    t.add("recompile_count", g.recompile_count)
+    t.add("delta_count", g.delta_count)
+    t.add("route_rows_built", g.route_row_builds,
+          routable=len(g.compiled().routable_names))
 
     payload = {
         "figure": t.figure,
@@ -535,6 +547,8 @@ def run_session(check: bool = False) -> Table:
     t.add("x64_exec_s", exec_s, "s")
     t.add("x64_full_recompiles", rebuilds)
     t.add("x64_snapshot_deltas", g.delta_count)
+    t.add("x64_route_rows_built", g.route_row_builds,
+          routable=len(g.compiled().routable_names))
 
     payload = {
         "figure": t.figure,

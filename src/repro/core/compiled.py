@@ -39,11 +39,17 @@ and ``tests/test_session.py`` (delta vs. fresh recompile under churn):
   resource-class projection ``ncr_rclass``) replacing pairwise
   ``shared_resources()`` path scans — entry ``[i, j]`` is the first
   resource on PU ``i``'s compute path that PU ``j``'s path also visits,
-  i.e. the contention point of the pair (paper Fig. 4);
-* all-pairs **transfer latency / inverse-bandwidth matrices** over the
-  routable (GROUP) nodes, plus the concrete ``EdgeAttr`` route lists so
-  the Traverser's bandwidth-sharing transfer jobs skip per-query
-  Dijkstra runs.
+  i.e. the contention point of the pair (paper Fig. 4).  Compute paths
+  never cross device boundaries, so the matrix is block-diagonal by
+  device and is built per-device-block instead of scanning P x P;
+* **transfer latency / inverse-bandwidth tables** over the routable
+  (GROUP) nodes, plus the concrete ``EdgeAttr`` route lists so the
+  Traverser's bandwidth-sharing transfer jobs skip per-query Dijkstra
+  runs.  Route rows are **lazily materialized** (one Dijkstra on first
+  access per source; ``ensure_routes`` batch-warms a working set), so
+  snapshot construction is O(touched routes) and fleet-scale builds
+  (mult=128 weak scaling) stay under a second — see ``docs/timeline.md``
+  for the full lifecycle under ``apply_delta`` churn.
 """
 from __future__ import annotations
 
@@ -52,6 +58,37 @@ from typing import Optional
 import numpy as np
 
 from .hwgraph import EdgeAttr, HWGraph, NodeKind, ProcessingUnit
+
+
+class _RouteTable:
+    """The route layer of one snapshot: dense latency / inverse-bandwidth
+    matrices over the routable nodes, the concrete ``EdgeAttr`` route
+    lists, and the per-row materialization state.
+
+    The holder is the copy-on-write unit: snapshots either share one
+    table entirely (identical route state) or own a private copy —
+    mixing copied matrices with a shared route dict is what this type
+    exists to prevent."""
+
+    __slots__ = ("lat", "ibw", "routes", "built", "edge_ids")
+
+    def __init__(self, D: int) -> None:
+        self.lat = np.full((D, D), np.inf)
+        np.fill_diagonal(self.lat, 0.0)
+        self.ibw = np.zeros((D, D))
+        self.routes: dict[tuple[int, int], list[EdgeAttr]] = {}
+        self.built = np.zeros(D, dtype=bool)
+        # ids of every EdgeAttr any built route crosses (delta prefilter)
+        self.edge_ids: set[int] = set()
+
+    def copy(self) -> "_RouteTable":
+        c = object.__new__(_RouteTable)
+        c.lat = self.lat.copy()
+        c.ibw = self.ibw.copy()
+        c.routes = dict(self.routes)
+        c.built = self.built.copy()
+        c.edge_ids = set(self.edge_ids)
+        return c
 
 
 class CompiledHWGraph:
@@ -141,16 +178,28 @@ class CompiledHWGraph:
         for j, path in enumerate(paths):
             for r in path:
                 self.path_mask[j, self.resource_index[r]] = True
-        # ncr_res[i, j] = first resource on i's path that j's path visits
+        # ncr_res[i, j] = first resource on i's path that j's path visits.
+        # Compute paths never cross device boundaries (within-device SSSP),
+        # so the matrix is block-diagonal by enclosing device: build each
+        # device's tiny block independently instead of scanning the full
+        # P x P space — O(sum_d p_d^2) work, and the cross-device entries
+        # stay at the -1 the full scan would produce.
         # (int32/int16 keep the P x P matrices compact at fleet scale)
         self.ncr_res = np.full((P, P), -1, dtype=np.int32)
-        for i, path in enumerate(paths):
-            unset = np.ones(P, dtype=bool)
-            for r in path:
-                hit = unset & self.path_mask[:, self.resource_index[r]]
-                self.ncr_res[i, hit] = self.resource_index[r]
-                unset &= ~hit
-        self.ncr_rclass = self._rclass_of(self.ncr_res)
+        self.ncr_rclass = np.full((P, P), -1, dtype=np.int16)
+        by_dev: dict[str, list[int]] = {}
+        for i, name in enumerate(self.pu_names):
+            by_dev.setdefault(self._pu_device_name[name], []).append(i)
+        for rows in by_dev.values():
+            idx = np.asarray(rows, dtype=np.int64)
+            for i in rows:
+                unset = np.ones(len(rows), dtype=bool)
+                for r in paths[i]:
+                    ri = self.resource_index[r]
+                    hit = unset & self.path_mask[idx, ri]
+                    self.ncr_res[i, idx[hit]] = ri
+                    self.ncr_rclass[i, idx[hit]] = self.resource_rclass[ri]
+                    unset &= ~hit
 
     def _rclass_of(self, ncr: np.ndarray) -> np.ndarray:
         return np.where(ncr >= 0, self.resource_rclass[ncr.clip(0)],
@@ -159,16 +208,25 @@ class CompiledHWGraph:
     # ------------------------------------------------------------------
     # build: all-pairs transfer over routable (GROUP) nodes
     # ------------------------------------------------------------------
+    # Route rows are **lazily materialized**: construction only sets up the
+    # index space and the min-latency edge lookup (O(E)); a source's routes
+    # are computed by one Dijkstra on first access (``_ensure_row``) and
+    # batch-warmed via ``ensure_routes``.  Snapshot construction therefore
+    # costs O(touched routes), not O(all pairs) — the all-pairs build was
+    # the mult>=64 bottleneck (ROADMAP).  The route state lives in a
+    # ``_RouteTable`` holder that ``apply_delta`` either shares untouched
+    # (mutations provably not crossing any built route) or replaces with a
+    # patched/fresh copy, so clones never see half-patched rows.  A row
+    # built lazily always reflects the authoring graph *at build time*; a
+    # stale snapshot kept across topology churn (e.g. a frozen traverse)
+    # resolves unbuilt rows against the post-churn graph.
+
     def _build_routes(self) -> None:
         g = self.graph
         self.routable_names: list[str] = [n.name for n in g.nodes.values()
                                           if n.kind is NodeKind.GROUP]
         self.routable_index: dict[str, int] = {n: i for i, n
                                                in enumerate(self.routable_names)}
-        D = len(self.routable_names)
-        self.trans_lat = np.full((D, D), np.inf)
-        self.trans_ibw = np.zeros((D, D))
-        np.fill_diagonal(self.trans_lat, 0.0)
         # min-latency edge per ordered node pair: O(1) per reconstruction hop
         # instead of scanning the full adjacency of high-degree hubs
         self._best_edge: dict[tuple[str, str], EdgeAttr] = {}
@@ -177,22 +235,38 @@ class CompiledHWGraph:
                 cur = self._best_edge.get((a, b))
                 if cur is None or e.latency < cur.latency:
                     self._best_edge[(a, b)] = e
-        self._routes: dict[tuple[int, int], list[EdgeAttr]] = {}
-        # ids of every EdgeAttr any route crosses (delta-patch prefilter)
-        self._routed_edge_ids: set[int] = set()
-        for i in range(D):
+        self._rt = _RouteTable(len(self.routable_names))
+
+    def _ensure_row(self, i: int) -> None:
+        if not self._rt.built[i]:
             self._rebuild_route_row(i)
+
+    def ensure_routes(self, srcs) -> int:
+        """Batch-materialize the route rows of ``srcs`` (names or indices);
+        returns how many rows were actually built.  Used to warm exactly
+        the rows a workload will touch (e.g. every origin device of a
+        submitted TaskGraph) in one pass."""
+        built = 0
+        for s in srcs:
+            i = self.routable_index.get(s) if isinstance(s, str) else int(s)
+            if i is not None and not self._rt.built[i]:
+                self._rebuild_route_row(i)
+                built += 1
+        return built
 
     def _rebuild_route_row(self, i: int) -> None:
         """(Re)compute all routes from source ``i`` against the current
-        authoring graph — the unit of repair ``apply_delta`` uses."""
+        authoring graph — the unit of repair/materialization."""
         g = self.graph
+        rt = self._rt
         src = self.routable_names[i]
-        self.trans_lat[i, :] = np.inf
-        self.trans_lat[i, i] = 0.0
-        self.trans_ibw[i, :] = 0.0
+        rt.lat[i, :] = np.inf
+        rt.lat[i, i] = 0.0
+        rt.ibw[i, :] = 0.0
         for j in range(len(self.routable_names)):
-            self._routes.pop((i, j), None)
+            rt.routes.pop((i, j), None)
+        rt.built[i] = True
+        g.route_row_builds += 1
         if not g._adj[src]:
             return
         dist, pred = g.sssp(src)
@@ -204,11 +278,11 @@ class CompiledHWGraph:
                 seq.append(pred[seq[-1]])
             seq.reverse()
             edges = [self._best_edge[(a, b)] for a, b in zip(seq, seq[1:])]
-            self._routes[(i, j)] = edges
-            self._routed_edge_ids.update(id(e) for e in edges)
-            self.trans_lat[i, j] = sum(e.latency for e in edges)
+            rt.routes[(i, j)] = edges
+            rt.edge_ids.update(id(e) for e in edges)
+            rt.lat[i, j] = sum(e.latency for e in edges)
             bw = min((e.bandwidth for e in edges), default=float("inf"))
-            self.trans_ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+            rt.ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
 
     # ------------------------------------------------------------------
     # queries
@@ -242,10 +316,11 @@ class CompiledHWGraph:
         j = self.routable_index.get(dst)
         if i is None or j is None:
             return self.graph.transfer_time(src, dst, nbytes)
-        lat = self.trans_lat[i, j]
+        self._ensure_row(i)
+        lat = self._rt.lat[i, j]
         if not np.isfinite(lat):
             raise KeyError(f"no path {src} -> {dst}")
-        return float(lat + (nbytes * self.trans_ibw[i, j] if nbytes > 0 else 0.0))
+        return float(lat + (nbytes * self._rt.ibw[i, j] if nbytes > 0 else 0.0))
 
     def route_edges(self, src: str, dst: str) -> list[EdgeAttr]:
         """The shortest-path interconnects src -> dst (shared EdgeAttr refs,
@@ -256,7 +331,8 @@ class CompiledHWGraph:
             return self.graph.route_edges(src, dst)
         if i == j:
             return []
-        edges = self._routes.get((i, j))
+        self._ensure_row(i)
+        edges = self._rt.routes.get((i, j))
         if edges is None:
             raise KeyError(f"no path {src} -> {dst}")
         return edges
@@ -294,14 +370,15 @@ class CompiledHWGraph:
         # Shortest-path selection weighs latency only, so routes never
         # change with bandwidth; the EdgeAttr objects are shared with the
         # authoring layer, so route_edges already sees the new value.
-        # Only the inverse-bandwidth entries of routes crossing the edge
-        # need repair.
+        # Only the inverse-bandwidth entries of *built* routes crossing
+        # the edge need repair; unbuilt rows read the live bandwidth when
+        # materialized.
         c = self._clone()
-        c.trans_ibw = self.trans_ibw.copy()
-        for (i, j), edges in self._routes.items():
+        c._rt = rt = self._rt.copy()
+        for (i, j), edges in rt.routes.items():
             if any(e.name == edge_name for e in edges):
                 bw = min((e.bandwidth for e in edges), default=float("inf"))
-                c.trans_ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+                rt.ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
         return c
 
     def _delta_alive(self, alive: bool,
@@ -397,15 +474,76 @@ class CompiledHWGraph:
                 hit = unset & self.path_mask[cols, ri]
                 self.ncr_res[j, cols[hit]] = ri
                 unset &= ~hit
-        self.ncr_rclass = self._rclass_of(self.ncr_res)
+        self.ncr_rclass = self.ncr_rclass.copy()
+        self.ncr_rclass[cols, :] = self._rclass_of(self.ncr_res[cols, :])
+        self.ncr_rclass[:, cols] = self._rclass_of(self.ncr_res[:, cols])
 
     def _patch_routes(self, alive: bool, names: set) -> bool:
-        """Repair the transfer tables after an aliveness flip of ``names``.
+        """Repair the route table after an aliveness flip of ``names``.
 
-        Route rows are rebuilt (one Dijkstra each) only where the stored
-        routes actually cross the mutated subtree; leaf-device churn on
-        tree-like fabrics patches endpoints without any Dijkstra."""
+        Death keeps the table warm: built rows are patched in place
+        (endpoints into the dead subtree become unroutable; built routes
+        *transiting* the subtree fall back to lazy) — leaf-device churn on
+        tree-like fabrics costs no Dijkstra at all.  Revival invalidates
+        exactly the built rows whose routes can change: the revived
+        sources themselves, rows a boundary-node scan shows could improve
+        through the revived subtree (which subsumes the old mirror repair
+        — a formerly-unreachable revived destination reads as an
+        improvement over +inf), and rows of still-dead sources the scan
+        cannot see.  Invalidated rows re-derive on demand against the
+        live graph; everything else stays warm."""
         g = self.graph
+        if alive:
+            self._rt = rt = self._rt.copy()
+            r_s = sorted(self.routable_index[n] for n in names
+                         if n in self.routable_index)
+            for r in r_s:                # rows of revived sources (eager:
+                self._rebuild_route_row(r)   # their columns mirror below)
+            # mirror into the revived columns of built rows: undirected
+            # fabric, so the reverse of a fresh shortest path is exact —
+            # no per-row Dijkstra just to re-reach a revived destination
+            built = np.nonzero(rt.built)[0]
+            for r in r_s:
+                for j in built.tolist():
+                    if j == r or j in r_s:
+                        continue
+                    lat = rt.lat[r, j]
+                    if np.isfinite(lat):
+                        rt.routes[(j, r)] = list(
+                            reversed(rt.routes[(r, j)]))
+                        rt.lat[j, r] = lat
+                        rt.ibw[j, r] = rt.ibw[r, j]
+                    else:
+                        rt.routes.pop((j, r), None)
+                        rt.lat[j, r] = np.inf
+                        rt.ibw[j, r] = 0.0
+            # transit improvements: a new shortest path through the
+            # revived subtree must pass one of its boundary nodes — one
+            # Dijkstra per boundary node flags exactly the built rows
+            # that can improve; they fall back to lazy
+            invalid: set[int] = set()
+            boundary = [n for n in names
+                        if any(v not in names and g.nodes[v].alive
+                               for v, _ in g._adj.get(n, ()))]
+            for b in boundary:
+                dist, _ = g.sssp(b)
+                d = np.array([dist.get(nm, np.inf)
+                              for nm in self.routable_names])
+                thru = d[:, None] + d[None, :]
+                with np.errstate(invalid="ignore"):
+                    imp = np.nonzero((thru < rt.lat).any(axis=1))[0]
+                invalid.update(int(i) for i in imp if i not in r_s)
+            # rows of still-dead sources are invisible to the boundary
+            # scan (a dead node is unreachable as a destination but still
+            # routes outward as a source)
+            for j, nm in enumerate(self.routable_names):
+                if j not in r_s and not g.nodes[nm].alive:
+                    invalid.add(j)
+            for i in invalid:
+                if rt.built[i]:
+                    self._invalidate_row(i)
+            return True
+        rt = self._rt
         # eid -> the subtree endpoints of that edge: a route *transits* the
         # subtree iff it crosses an edge owned by a node that is not one of
         # the route's own endpoints
@@ -413,81 +551,45 @@ class CompiledHWGraph:
         for n in names:
             for _, e in g._adj.get(n, ()):
                 eid_owners.setdefault(id(e), set()).add(n)
-        touched = set(eid_owners) & self._routed_edge_ids
+        touched = set(eid_owners) & rt.edge_ids
         r_s = {self.routable_index[n] for n in names
                if n in self.routable_index}
-        if not alive and not touched and not r_s:
-            return True      # a node no route crosses died: nothing changes
-        if alive and not r_s and not eid_owners:
-            return True      # revived node with no interconnects at all
-        self.trans_lat = self.trans_lat.copy()
-        self.trans_ibw = self.trans_ibw.copy()
-        self._routes = dict(self._routes)
-        self._routed_edge_ids = set(self._routed_edge_ids)
-        D = len(self.routable_names)
-        if not alive:
-            # endpoints into the dead subtree become unroutable (the
-            # object path raises KeyError); routes *from* dead sources
-            # stay valid — Dijkstra explores outward from a dead source
-            stale: set[int] = set()
-            for (i, j), edges in list(self._routes.items()):
-                if j in r_s:
-                    del self._routes[(i, j)]
-                    continue
-                si, sj = self.routable_names[i], self.routable_names[j]
-                for e in edges:
-                    owners = eid_owners.get(id(e))
-                    if owners and not owners <= {si, sj}:
-                        stale.add(i)
-                        break
-            if r_s:
-                cols = sorted(r_s)
-                self.trans_lat[:, cols] = np.inf
-                self.trans_ibw[:, cols] = 0.0
-                for r in cols:
-                    self.trans_lat[r, r] = 0.0
-            for i in stale:
-                self._rebuild_route_row(i)
-        else:
-            for r in sorted(r_s):            # rows of revived sources
-                self._rebuild_route_row(r)
-            for r in sorted(r_s):            # mirror into their columns
-                for j in range(D):
-                    if j == r or j in r_s:
-                        continue
-                    lat = self.trans_lat[r, j]
-                    if np.isfinite(lat) and j != r:
-                        self._routes[(j, r)] = list(
-                            reversed(self._routes[(r, j)]))
-                        self.trans_lat[j, r] = lat
-                        self.trans_ibw[j, r] = self.trans_ibw[r, j]
-                    else:
-                        self._routes.pop((j, r), None)
-                        self.trans_lat[j, r] = np.inf
-                        self.trans_ibw[j, r] = 0.0
-            # transit improvements: a new shortest path through the revived
-            # subtree must pass one of its boundary nodes — one Dijkstra per
-            # boundary node flags exactly the rows that can improve
-            boundary = [n for n in names
-                        if any(v not in names and g.nodes[v].alive
-                               for v, _ in g._adj.get(n, ()))]
-            improved: set[int] = set()
-            for b in boundary:
-                dist, _ = g.sssp(b)
-                d = np.array([dist.get(nm, np.inf)
-                              for nm in self.routable_names])
-                thru = d[:, None] + d[None, :]
-                imp = np.nonzero((thru < self.trans_lat).any(axis=1))[0]
-                improved.update(int(i) for i in imp if i not in r_s)
-            # rows of still-dead sources are invisible to the boundary scan
-            # (a dead node is unreachable as a destination but still routes
-            # outward as a source) — recompute them directly
-            for j, nm in enumerate(self.routable_names):
-                if j not in r_s and not g.nodes[nm].alive:
-                    improved.add(j)
-            for i in sorted(improved):
-                self._rebuild_route_row(i)
+        if not touched and not r_s:
+            return True      # a node no built route crosses died
+        self._rt = rt = rt.copy()
+        # endpoints into the dead subtree become unroutable (the object
+        # path raises KeyError); routes *from* dead sources stay valid —
+        # Dijkstra explores outward from a dead source
+        stale: set[int] = set()
+        for (i, j), edges in list(rt.routes.items()):
+            if j in r_s:
+                del rt.routes[(i, j)]
+                continue
+            si, sj = self.routable_names[i], self.routable_names[j]
+            for e in edges:
+                owners = eid_owners.get(id(e))
+                if owners and not owners <= {si, sj}:
+                    stale.add(i)
+                    break
+        if r_s:
+            cols = sorted(r_s)
+            rt.lat[:, cols] = np.inf
+            rt.ibw[:, cols] = 0.0
+            for r in cols:
+                rt.lat[r, r] = 0.0
+        for i in stale:
+            self._invalidate_row(i)
         return True
+
+    def _invalidate_row(self, i: int) -> None:
+        """Return row ``i`` to the unbuilt state (rebuilt on next access)."""
+        rt = self._rt
+        rt.built[i] = False
+        rt.lat[i, :] = np.inf
+        rt.lat[i, i] = 0.0
+        rt.ibw[i, :] = 0.0
+        for j in range(len(self.routable_names)):
+            rt.routes.pop((i, j), None)
 
     def summary(self) -> str:
         P = len(self.pu_names)

@@ -147,6 +147,7 @@ class HWGraph:
         self._compiled = None        # lazy CompiledHWGraph snapshot
         self.recompile_count = 0     # full snapshot builds
         self.delta_count = 0         # incremental apply_delta patches
+        self.route_row_builds = 0    # lazily materialized route rows (Dijkstras)
 
     # -- construction ------------------------------------------------------
     def add_node(self, node: Node) -> Node:

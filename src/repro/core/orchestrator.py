@@ -39,6 +39,7 @@ array ops over the compiled snapshot and the ledger columns.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Iterable, Optional, Sequence
 
@@ -376,6 +377,10 @@ class _BatchContext:
         self._views: dict = {}
         self._static: dict = {}
         self._sigs: dict = {}
+        # phase-1 wave prescore: (task sig, candidate-list id) -> results
+        # computed against the frozen ledger by one multi-newcomer kernel
+        # call; MUST be dropped before phase-2 commits (stale thereafter)
+        self.prescored: dict = {}
 
     def _model_key(self, task: Task) -> tuple:
         return (task.kind, task.size,
@@ -517,6 +522,14 @@ class Orchestrator:
                if len(tasks) > 1 else None)
         sd = self.traverser.slowdown
         noisy = bool(getattr(sd, "_noisy", lambda: False)())
+        # multi-newcomer prescore (ROADMAP phase-1 follow-up): one
+        # block-diagonal kernel call scores the entry-level candidate set
+        # of every distinct task signature in the wave; the walks below
+        # consume the cached results instead of issuing per-signature
+        # kernel calls
+        if (ctx is not None and not noisy
+                and hasattr(sd, "factors_same_device_multi")):
+            self._prescore_wave(tasks, now, ctx, route)
         # phase 1: optimistic walks against the frozen ledger, deduped by
         # task signature (identical tasks walk once; commits are replayed
         # per task in phase 2)
@@ -537,7 +550,11 @@ class Orchestrator:
                     phase1[key] = (res, scored)
             tentative.append((orc, res, scored))
         # phase 2: ordered commit; re-walk when the optimistic result is
-        # stale (an earlier commit landed on a device this walk scored)
+        # stale (an earlier commit landed on a device this walk scored).
+        # The prescore cache reflects the frozen ledger — drop it so
+        # re-walks score against the committed state.
+        if ctx is not None:
+            ctx.prescored = {}
         dirty: set[str] = set()
         out: list[Optional[MapResult]] = []
         for t, (orc, res, scored) in zip(tasks, tentative):
@@ -559,7 +576,58 @@ class Orchestrator:
            frontier, or drive whole TaskGraphs through
            ``core.session.SchedulerSession``.
         """
+        warnings.warn(
+            "Orchestrator.map_task is deprecated: map frontiers with "
+            "map_batch(...) or drive whole TaskGraphs through "
+            "core.session.SchedulerSession",
+            DeprecationWarning, stacklevel=2)
         return self.map_batch([task], now, commit=commit)[0]
+
+    def _prescore_wave(self, tasks: list, now: float, ctx: "_BatchContext",
+                       route: bool) -> None:
+        """Phase-1 multi-newcomer scoring: batch the entry-level
+        constraint check of every distinct task signature in the wave
+        into one ``factors_same_device_multi`` kernel call.
+
+        Each signature's first ``_check_candidates`` call (the fused
+        subtree/device check its Alg. 1 walk opens with) then hits
+        ``ctx.prescored`` instead of running its own kernel call.  The
+        cached results are built by the same ``_score_fused`` logic from
+        the same static inputs and ledger views, so they are
+        bit-identical to what the walk would have computed."""
+        sd = self.traverser.slowdown
+        comp = ctx.comp
+        reps: dict = {}
+        for t in tasks:
+            orc = self._entry_orc(t) if route else self
+            pus = orc._subtree_pus() if orc.children else orc.leaf_pus
+            key = (ctx.task_sig(t), id(pus))
+            if key not in reps and pus:
+                reps[key] = (orc, t, pus)
+        items = []
+        metas = []
+        for key, (orc, t, pus) in reps.items():
+            static = ctx.static_score(orc, t, pus)
+            if not len(static.cols):
+                continue
+            if static.single_dev is not None:
+                view = ctx.view(static.single_dev)
+            else:
+                view = self.ledger.live_view(comp)
+            items.append((t, static.cand_idx, static.cand_dev, view.P,
+                          view.upu, view.Ma, view.uid, view.Da,
+                          view.astart, view.na))
+            metas.append((key, orc, t, pus, static, view))
+        if not items:
+            return
+        outs = sd.factors_same_device_multi(comp, items)
+        infeasible = (False, TaskPrediction(float("inf"), 1.0, 0.0))
+        for (key, orc, t, pus, static, view), fused in zip(metas, outs):
+            results: list = [infeasible] * len(pus)
+            orc._score_fused(t, static, now, results,
+                             with_constraints=True, ctx=ctx,
+                             fused=(fused, view))
+            ctx.prescored[key] = results
 
     @staticmethod
     def _task_signature(orc: "Orchestrator", t: Task) -> tuple:
@@ -726,6 +794,10 @@ class Orchestrator:
         sd = self.traverser.slowdown
         noisy = bool(getattr(sd, "_noisy", lambda: False)())
         if (not noisy) and hasattr(sd, "factors_same_device"):
+            if ctx is not None and with_constraints:
+                hit = ctx.prescored.get((ctx.task_sig(task), id(pu_names)))
+                if hit is not None:
+                    return hit
             static = (ctx.static_score(self, task, pu_names)
                       if ctx is not None
                       else self._static_score(task, pu_names, comp, None))
@@ -807,25 +879,35 @@ class Orchestrator:
 
     def _score_fused(self, task: Task, static: "_StaticScore", now: float,
                      results: list, *, with_constraints: bool,
-                     ctx: Optional[_BatchContext]) -> None:
+                     ctx: Optional[_BatchContext],
+                     fused: Optional[tuple] = None) -> None:
         """One-shot scoring of an arbitrary mixed-device candidate set: a
         single block-diagonal kernel call replaces one slowdown/constraint
-        evaluation per device (the escalation scan's former hot loop)."""
+        evaluation per device (the escalation scan's former hot loop).
+
+        ``fused``: optional ``((new_f, ci, ai, act_pf), view)`` computed
+        by the wave-level multi-newcomer prescore; when given, the kernel
+        call is skipped and the constraint logic runs on the precomputed
+        factors."""
         comp = ctx.comp if ctx is not None else self.graph.compiled()
         sd = self.traverser.slowdown
         cols = static.cols
         cand_idx = static.cand_idx
-        # single-device candidate sets (the common local check) read the
-        # per-device segment view, which commits on *other* devices never
-        # invalidate; mixed-device sets read the global view
-        if ctx is not None and static.single_dev is not None:
-            view = ctx.view(static.single_dev)
+        if fused is not None:
+            (new_f, ci, ai, act_pf), view = fused
         else:
-            view = self.ledger.live_view(comp)
+            # single-device candidate sets (the common local check) read
+            # the per-device segment view, which commits on *other*
+            # devices never invalidate; mixed-device sets read the
+            # global view
+            if ctx is not None and static.single_dev is not None:
+                view = ctx.view(static.single_dev)
+            else:
+                view = self.ledger.live_view(comp)
+            new_f, ci, ai, act_pf = sd.factors_same_device(
+                comp, task, cand_idx, static.cand_dev, view.P, view.upu,
+                view.Ma, view.uid, view.Da, view.astart, view.na)
         A = len(view)
-        new_f, ci, ai, act_pf = sd.factors_same_device(
-            comp, task, cand_idx, static.cand_dev, view.P, view.upu, view.Ma,
-            view.uid, view.Da, view.astart, view.na)
         comm = static.comm
         ok15 = np.ones(len(cols), dtype=bool)
         if with_constraints and A:

@@ -168,7 +168,7 @@ class OrchestratorPolicy:
         if orc is None:
             orc = next((o for o in self.root.iter_tree() if o.is_device_orc()),
                        self.root)
-        return orc.map_task(task, now)
+        return orc.map_batch([task], now)[0]
 
     def map_batch(self, tasks, now: float):
         """Frontier entry: the whole batch goes through the root ORC's

@@ -296,17 +296,84 @@ class DecoupledSlowdown:
             # order; preserve the exact stream
             return np.array([self.factor(t, p, list(pool)) for t, p in pool])
         comp = self.graph.compiled()
+        P, U, M, uid = self._pool_arrays(comp, pool)
+        return self._factor_batch_arrays(comp, P, U, M, uid)
+
+    def factor_batch_idx(self, P: np.ndarray, U: np.ndarray,
+                         mem: np.ndarray, uid: np.ndarray) -> np.ndarray:
+        """Array-native :meth:`factor_batch` over ledger-style columns
+        (compiled PU index, pu-usage, raw mem-usage, uid) — the DES
+        timeline engine reprices every dirty device pool in one call
+        through this entry, with no tuple building.  Because compute
+        paths never cross device boundaries, a pool spanning several
+        devices factors exactly as the per-device pools would
+        (cross-device pairs share nothing by construction).  Noise-free
+        path only (the engine routes noisy models to the tuple surface)."""
+        n = len(P)
+        if n == 0:
+            return np.ones(0)
+        comp = self.graph.compiled()
+        if n == 1:
+            return np.ones(1)          # a lone job has no co-runners
+        M = np.minimum(mem, comp.mem_cap[P])
+        if n == 2:
+            # scalar pair path: light-load DES pools are mostly pairs, and
+            # the float ops replicate the array path bit-for-bit (a row's
+            # product over inactive rclasses multiplies exact 1.0s)
+            return self._factor_pair(comp, P, U, M)
+        # DES pools hold one job per task, so uids are pairwise distinct:
+        # self-interaction reduces to the diagonal and the uid mask work
+        # is skipped entirely
+        return self._factor_batch_arrays(comp, P, U, M, uid, distinct=True)
+
+    def _factor_pair(self, comp, P, U, M) -> np.ndarray:
         beta_vec, mt_vec = self._tables(comp)
         kappa = self.params.superlinear
-        P, U, M, uid = self._pool_arrays(comp, pool)
-        diff_uid = uid[:, None] != uid[None, :]
-        same_pu = (P[:, None] == P[None, :]) & diff_uid
-        mtp = same_pu.astype(np.float64) @ U
+        out = np.empty(2)
+        p0, p1 = int(P[0]), int(P[1])
+        for i, (pi, pj, j) in enumerate(((p0, p1, 1), (p1, p0, 0))):
+            mt_term = 0.0
+            res = 0.0
+            if pi == pj:
+                x = float(U[j])
+                mtb = float(mt_vec[pi])
+                if x > 0.0 and mtb > 0.0:
+                    mt_term = mtb * x * (1.0 + kappa * x) * float(U[i])
+            else:
+                r = int(comp.ncr_rclass[pi, pj])
+                if r >= 0:
+                    x = float(M[j])
+                    b = float(beta_vec[r])
+                    if x > 0.0 and b > 0.0:
+                        res = b * x * (1.0 + kappa * x)
+            f = (1.0 + mt_term) * (1.0 + res * float(M[i]))
+            out[i] = f if f > 1.0 else 1.0
+        return out
+
+    def _factor_batch_arrays(self, comp, P, U, M, uid,
+                             distinct: bool = False) -> np.ndarray:
+        n = len(P)
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        same_pu = P[:, None] == P[None, :]
         r = comp.ncr_rclass[P[:, None], P[None, :]]
-        valid = diff_uid & (P[:, None] != P[None, :]) & (r >= 0)
-        X = np.zeros((n, len(comp.rclass_names)))
+        valid = ~same_pu & (r >= 0)
+        if distinct:
+            np.fill_diagonal(same_pu, False)
+        else:
+            diff_uid = uid[:, None] != uid[None, :]
+            same_pu &= diff_uid
+            valid &= diff_uid
+        mtp = same_pu.astype(np.float64) @ U
+        R = len(comp.rclass_names)
         ii, jj = np.nonzero(valid)
-        np.add.at(X, (ii, r[ii, jj]), M[jj])
+        if len(ii):
+            # bincount over flattened (row, rclass) bins accumulates in
+            # input order, exactly like the add.at it replaces
+            X = np.bincount(ii * R + r[ii, jj], weights=M[jj],
+                            minlength=n * R).reshape(n, R)
+        else:
+            X = np.zeros((n, R))
         mt_term = _pterm_arr(mt_vec[P], mtp, kappa) * U
         return _aggregate(X, beta_vec, M, mt_term, kappa)
 
@@ -448,18 +515,79 @@ class DecoupledSlowdown:
         candidate, and flat same-device pair arrays where ``act_pf[k]`` is
         the updated factor of active ``ai[k]`` if the task joins candidate
         ``ci[k]`` (the Alg. 1 l.15 inputs).  Noise-free path only.
+
+        Structured as a pure row builder (:meth:`_same_device_rows`) plus
+        one aggregation, so :meth:`factors_same_device_multi` can stack
+        the rows of every distinct task signature in a mapping wave and
+        aggregate the whole frontier in a single kernel call.
         """
+        empty = np.zeros(0, dtype=np.int64)
+        if len(Pc) == 0 or len(Pa) == 0:
+            return np.ones(len(Pc)), empty, empty, np.ones(0)
+        rows = self._same_device_rows(comp, task, Pc, Dc, Pa, Ua, Ma,
+                                      uid_a, Da, astart, na)
+        if rows is None:
+            # no active shares a device with any candidate: all factors 1
+            return np.ones(len(Pc)), empty, empty, np.ones(0)
+        X, mem, mt_term, ci, ai = rows
+        beta_vec, _ = self._tables(comp)
+        C = len(Pc)
+        f = _aggregate(X, beta_vec, mem, mt_term, self.params.superlinear)
+        return f[:C], ci, ai, f[C:]
+
+    def factors_same_device_multi(self, comp, items: Sequence[tuple]):
+        """Score many newcomers (one per distinct wave signature) in one
+        aggregation call.  ``items`` holds the positional argument tuples
+        of :meth:`factors_same_device`; the result list holds that
+        method's return tuple per item, bit-for-bit identical to calling
+        it per item (the kernel is elementwise per row, so stacking and
+        splitting is exact)."""
+        empty = np.zeros(0, dtype=np.int64)
+        built: list = []
+        blocks: list = []
+        for it in items:
+            if len(it[1]) == 0 or len(it[3]) == 0:
+                built.append(None)
+                continue
+            rows = self._same_device_rows(comp, *it)
+            built.append(rows)
+            if rows is not None:
+                blocks.append(rows)
+        if blocks:
+            beta_vec, _ = self._tables(comp)
+            f = _aggregate(np.concatenate([b[0] for b in blocks]),
+                           beta_vec,
+                           np.concatenate([b[1] for b in blocks]),
+                           np.concatenate([b[2] for b in blocks]),
+                           self.params.superlinear)
+        pos = 0
+        out = []
+        for it, rows in zip(items, built):
+            C = len(it[1])
+            if rows is None:
+                out.append((np.ones(C), empty, empty, np.ones(0)))
+                continue
+            k = len(rows[1])
+            fi = f[pos:pos + k]
+            pos += k
+            out.append((fi[:C], rows[3], rows[4], fi[C:]))
+        return out
+
+    def _same_device_rows(self, comp, task: Task, Pc, Dc, Pa, Ua, Ma,
+                          uid_a, Da, astart, na):
+        """Aggregation inputs of one newcomer's same-device constraint
+        check: ``(X, mem, mt_term, ci, ai)`` with the candidate rows
+        first and the (candidate, active) pair rows after, or ``None``
+        when no active shares a device with any candidate."""
         C = len(Pc)
         A = len(Pa)
-        beta_vec, mt_vec = self._tables(comp)
+        _, mt_vec = self._tables(comp)
         kappa = self.params.superlinear
         R = len(comp.rclass_names)
         u_new = task.usage.get("pu", 1.0)
         mem_new = task.usage.get("mem", 1.0)
         Mc = np.minimum(mem_new, comp.mem_cap[Pc])
         empty = np.zeros(0, dtype=np.int64)
-        if C == 0 or A == 0:
-            return np.ones(C), empty, empty, np.ones(0)
 
         def segment_pairs(left_ids, left_dev):
             """(li, ri): cross product of each left element with the active
@@ -476,8 +604,7 @@ class DecoupledSlowdown:
         # --- the new task's factor per candidate --------------------------
         ci, ai = segment_pairs(np.arange(C), Dc)
         if not len(ci):
-            # no active shares a device with any candidate: all factors 1
-            return np.ones(C), empty, empty, np.ones(0)
+            return None
         live = uid_a[ai] != task.uid
         Pci, Pai = Pc[ci], Pa[ai]
         same = (Pci == Pai) & live
@@ -513,12 +640,11 @@ class DecoupledSlowdown:
         Xp[kk, r_ac[kk]] += Mc[ci[kk]]
         mt_p = mt_base[ai] + np.where(same, u_new, 0.0)
         mt_term_p = _pterm_arr(mt_vec[Pai], mt_p, kappa) * Ua[ai]
-        # one aggregation over the stacked (candidate; pair) rows — the
-        # kernel is elementwise per row, so splitting back is exact
-        f = _aggregate(np.concatenate([Xc, Xp]), beta_vec,
-                       np.concatenate([Mc, Ma[ai]]),
-                       np.concatenate([mt_term_c, mt_term_p]), kappa)
-        return f[:C], ci, ai, f[C:]
+        # stacked (candidate; pair) rows — the aggregation kernel is
+        # elementwise per row, so callers split the result back exactly
+        return (np.concatenate([Xc, Xp]),
+                np.concatenate([Mc, Ma[ai]]),
+                np.concatenate([mt_term_c, mt_term_p]), ci, ai)
 
 
 class NoSlowdown:
@@ -534,6 +660,9 @@ class NoSlowdown:
     def factor_batch(self, pool) -> np.ndarray:
         return np.ones(len(pool))
 
+    def factor_batch_idx(self, P, U, mem, uid) -> np.ndarray:
+        return np.ones(len(P))
+
     def slowdown_matrix(self, pool) -> np.ndarray:
         return np.ones((len(pool), len(pool)))
 
@@ -548,6 +677,9 @@ class NoSlowdown:
                             Da, astart, na):
         e = np.zeros(0, dtype=np.int64)
         return np.ones(len(Pc)), e, e, np.ones(0)
+
+    def factors_same_device_multi(self, comp, items):
+        return [self.factors_same_device(comp, *it) for it in items]
 
     def invalidate(self) -> None:
         pass

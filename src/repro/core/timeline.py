@@ -1,0 +1,819 @@
+"""Array-native discrete-event timeline engine (paper §3.4, Alg. 2).
+
+``TimelineEngine`` is the struct-of-arrays successor of the seed's
+per-job ``heapq`` event loop (kept verbatim as
+``Traverser.traverse_reference`` — the parity oracle and the benchmark
+baseline).  The contention-interval semantics are identical; what
+changes is the representation and the unit of work:
+
+* **Dense job tables** — every compute job and transfer lives in numpy
+  columns (remaining virtual work ``W``, progress ``rate``, last-settle
+  time ``t_last``, projected completion ``eta``, device/PU ordinals,
+  dependency counts) instead of per-job Python objects with
+  version-stamped heap events.  Completion detection is an array
+  compare against the shared timestamp, not a heap pop per job — the
+  seed's biggest scaling cost (a fresh completion event per pool member
+  per reprice) disappears entirely.
+* **Per-timestamp draining** — all events sharing one timestamp drain
+  before a single flush reprices the devices/links they touched
+  (frontier batching, as in the seed), but the settle of every
+  completion across all devices is **one array op** (the rate-advance
+  kernel), and the flush reprices *every* dirty device pool in **one**
+  ``factor_batch_idx`` call: compute paths never cross device
+  boundaries, so the joint factors of the union pool are exactly the
+  per-device factors (block-diagonal by construction).
+* **Batched link repricing** — concurrent transfers share link
+  bandwidth; the bottleneck share of each affected transfer is a
+  segment-min over its route edges (the segment-min kernel), evaluated
+  for the whole dirty set at once.
+
+The two inner loops run as float64 numpy by default on every backend —
+the parity bound is a hard 1e-9 and the per-flush batches are
+memory-bound — with Pallas twins in ``kernels/timeline_kernel.py``
+(oracle-checked) for TPU-resident pipelines that accept fp32 settles:
+``REPRO_TIMELINE_KERNEL=pallas`` routes the engine through them (jax is
+never imported otherwise, so pure-DES workflows stay jax-free).
+
+**Interventions** (topology churn mid-run): ``traverse(...,
+interventions=[(t, fn), ...])`` applies each ``fn()`` (e.g.
+``graph.set_bandwidth`` / ``mark_dead``) at simulated time ``t`` and
+reprices every active device pool and link set at that instant.  Both
+engines implement the hook identically, so churn runs stay pinned to
+the 1e-9 parity bound.
+
+Noise semantics: the ground-truth engine draws per-task irregularity
+noise at job start, in event order — the array engine preserves the
+draw order of the seed loop (timed events in push order, completions in
+key order; the reference's simultaneous-event tie-break is pinned to
+the same key order).  A *noisy slowdown model* (rng-bearing
+``DecoupledSlowdown``) additionally draws inside ``factor()`` in pool
+order; ``Traverser.traverse`` routes that configuration to the
+reference loop so the rng stream stays byte-identical.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from .hwgraph import EdgeAttr, ProcessingUnit
+from .task import Task, TaskGraph
+
+# settle tolerances of the seed event loop (virtual work residue below
+# which a projected completion is real, not a stale float artifact)
+CTOL = 1e-15        # compute jobs
+XTOL = 1e-6         # transfers (bytes)
+
+
+@dataclass
+class Timeline:
+    """Result of a CFG traverse."""
+
+    start: dict[int, float] = field(default_factory=dict)      # task.uid -> t
+    finish: dict[int, float] = field(default_factory=dict)
+    ready: dict[int, float] = field(default_factory=dict)      # deps resolved at
+    standalone: dict[int, float] = field(default_factory=dict)
+    comm: dict[int, float] = field(default_factory=dict)       # inbound comm time
+    queue_wait: dict[int, float] = field(default_factory=dict)
+    mapping: dict[int, str] = field(default_factory=dict)
+    n_intervals: int = 0
+    n_events: int = 0        # drained DES events (timed + completions)
+
+    @property
+    def makespan(self) -> float:
+        return max(self.finish.values(), default=0.0)
+
+    def latency(self, task: Task) -> float:
+        """Ready-to-finish latency (comm + queueing + slowdown + compute).
+
+        'Ready' = dependencies resolved (or release time for roots) — the
+        moment the paper's runtime hands the task to the Orchestrator."""
+        t0 = self.ready.get(task.uid, task.release_time)
+        return self.finish[task.uid] - t0
+
+    def slowdown_of(self, task: Task) -> float:
+        busy = self.finish[task.uid] - self.start[task.uid]
+        sa = self.standalone[task.uid]
+        return busy / sa if sa > 0 else 1.0
+
+    def deadline_met(self, task: Task) -> bool:
+        if task.deadline is None:
+            return True
+        return self.latency(task) <= task.deadline * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch: rate-advance + segment-min (numpy refs inline so pure-DES
+# workflows never import jax; Pallas on a live TPU backend)
+# ---------------------------------------------------------------------------
+def _rate_advance_np(W: np.ndarray, rate: np.ndarray, t_last: np.ndarray,
+                     now: float) -> tuple[np.ndarray, np.ndarray]:
+    """Settle virtual work to ``now`` and project completion times.
+
+    Mirrors the seed's scalar ``settle`` + completion push exactly,
+    including the float corner the scalar path has: ``max(0.0, W -
+    inf*0.0)`` is ``0.0`` under Python's ``max`` (nan compares false),
+    so nan residues clamp to zero here too.  ``eta`` is
+    ``now + W'/rate`` where the rate is positive, +inf otherwise."""
+    with np.errstate(invalid="ignore"):      # inf-rate x zero-dt corner
+        raw = W - rate * (now - t_last)
+    W2 = np.maximum(0.0, raw)
+    nan = np.isnan(raw)
+    if nan.any():
+        W2[nan] = 0.0
+    eta = np.divide(W2, rate, out=np.full(len(W2), np.inf),
+                    where=rate > 0.0)
+    eta += now
+    return W2, eta
+
+
+def _segment_min_np(values: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Per-segment min of ``values`` split into consecutive runs of
+    ``counts[i]`` elements; empty segments yield +inf (an edgeless
+    transfer is latency-only, i.e. unthrottled)."""
+    out = np.full(len(counts), np.inf)
+    nz = counts > 0
+    if nz.any():
+        starts = np.cumsum(counts) - counts
+        out[nz] = np.minimum.reduceat(values, starts[nz])
+    return out
+
+
+_RATE_ADVANCE = None
+_SEGMENT_MIN = None
+
+
+def _select_kernels():
+    """``auto`` keeps the float64 numpy settles on every backend: the DES
+    parity contract is a hard 1e-9 bound against the seed loop, which the
+    fp32 Pallas kernels cannot guarantee, and the per-flush batches are
+    memory-bound (device offload is a round-trip, not a win).  The
+    kernels remain reachable with ``REPRO_TIMELINE_KERNEL=pallas`` for
+    TPU-resident pipelines that accept fp32 settles."""
+    import os
+    mode = os.environ.get("REPRO_TIMELINE_KERNEL", "auto").lower()
+    if mode == "pallas":
+        from ..kernels import timeline_kernel as tk
+        return tk.rate_advance_forced, tk.segment_min_forced
+    return _rate_advance_np, _segment_min_np
+
+
+def _rate_advance(W, rate, t_last, now):
+    global _RATE_ADVANCE, _SEGMENT_MIN
+    if _RATE_ADVANCE is None:
+        _RATE_ADVANCE, _SEGMENT_MIN = _select_kernels()
+    return _RATE_ADVANCE(W, rate, t_last, now)
+
+
+def _segment_min(values, counts):
+    global _RATE_ADVANCE, _SEGMENT_MIN
+    if _SEGMENT_MIN is None:
+        _RATE_ADVANCE, _SEGMENT_MIN = _select_kernels()
+    return _SEGMENT_MIN(values, counts)
+
+
+def _settle_pos(W: np.ndarray, rate: np.ndarray, t_last: np.ndarray,
+                now: float) -> np.ndarray:
+    """Settle-only fast path for compute jobs: rates are 1/factor, always
+    finite-positive, so the nan/inf corners of the full kernel cannot
+    occur and eta is left to the caller."""
+    return np.maximum(0.0, W - rate * (now - t_last))
+
+
+def warm_transfer_routes(comp, cfg: TaskGraph, mapping: dict) -> int:
+    """Batch-materialize every route row a traverse of ``cfg`` under
+    ``mapping`` can touch: origins of root tasks with off-device initial
+    payloads, and producer devices with off-device consumers.
+
+    Both DES engines call this at traverse start, which restores the
+    seed's frozen-route semantics under mid-run churn: all transfer
+    routes are derived from the pre-churn topology, never lazily against
+    a mutated graph (unroutable pairs stay quiet here and raise at
+    launch time, as the seed did).  Returns the number of rows built."""
+    srcs: set[str] = set()
+    for t in cfg:
+        dev = comp.device_name(mapping[t.uid])
+        if (t.origin is not None and t.input_bytes > 0
+                and not cfg.preds(t) and t.origin != dev):
+            srcs.add(t.origin)
+        if t.output_bytes > 0 and any(
+                comp.device_name(mapping[s.uid]) != dev
+                for s in cfg.succs(t)):
+            srcs.add(dev)
+    ensure = getattr(comp, "ensure_routes", None)
+    if srcs and ensure is not None:
+        return ensure(srcs)
+    return 0
+
+
+# timed-event kinds, ordered only by (time, push seq) like the seed heap
+_INTERVENE, _RELEASE, _ARRIVE = 0, 1, 2
+
+_ONE = np.ones(1)
+
+
+class TimelineEngine:
+    """One traverse of a CFG under a fixed mapping, on SoA state.
+
+    Instantiated per ``Traverser.traverse`` call; the engine freezes the
+    compiled snapshot for transfer routes/device names (seed semantics)
+    while slowdown factors read the *live* compiled snapshot through the
+    model — exactly like the seed loop — so interventions that patch the
+    topology take effect at the next contention-interval boundary.
+
+    Representation notes: columns consumed by vectorized settles and the
+    repricing kernels are numpy; columns only ever read one scalar at a
+    time inside event handlers are plain Python lists (a numpy scalar
+    index costs ~10x a list index, and handlers run once per event).
+    """
+
+    def __init__(self, traverser, cfg: TaskGraph, mapping: dict[int, str],
+                 background: Sequence[tuple[Task, str, float]] = (),
+                 interventions: Sequence[tuple[float, Callable[[], Any]]] = (),
+                 ) -> None:
+        self.trav = traverser
+        self.graph = traverser.graph
+        self.slowdown = traverser.slowdown
+        self.noise = traverser.noise
+        self.rng = traverser.rng
+        self.cfg = cfg
+        self.mapping = mapping
+        self.background = list(background)
+        self.interventions = list(interventions)
+
+    # -- setup --------------------------------------------------------------
+    def _setup(self) -> None:
+        cfg, mapping = self.cfg, self.mapping
+        g = self.graph
+        comp = g.compiled()          # frozen: routes + device name space
+        self.comp = comp
+        tasks = list(cfg)
+        self.tasks = tasks
+        nt = len(tasks)
+        self.nt = nt
+        n = nt + len(self.background)
+        self.n = n
+        slot_of: dict[int, int] = {}
+        pu_i = np.empty(n, dtype=np.int64)
+        for i, t in enumerate(tasks):
+            if t.uid not in mapping:
+                raise KeyError(f"{t} has no mapping")
+            pu_name = mapping[t.uid]
+            pu = g.nodes[pu_name]
+            assert isinstance(pu, ProcessingUnit), pu_name
+            slot_of[t.uid] = i
+            pu_i[i] = comp.pu_index[pu_name]
+        for k, (bt, bpu, _) in enumerate(self.background):
+            slot_of[bt.uid] = nt + k
+            pu_i[nt + k] = comp.pu_index[bpu]
+        self.slot_of = slot_of
+        self.pu_i = pu_i
+        dev_o = comp.pu_dev_ord[pu_i]
+        self.pu_il = pu_i.tolist()
+        self.dev_ol = dev_o.tolist()
+        self.dev_name = [comp.dev_ord_names[o] for o in self.dev_ol]
+        pu_names = [comp.pu_names[p] for p in self.pu_il]
+        self.pu_name = pu_names
+        # per-slot task columns (slowdown inputs + noise irregularity);
+        # numpy for the flush gathers, lists for the scalar handlers
+        bg_tasks = [bt for bt, _, _ in self.background]
+        allt = tasks + bg_tasks
+        self.allt = allt
+        self.uid_col = np.fromiter((t.uid for t in allt),
+                                   dtype=np.int64, count=n)
+        self.uidl = self.uid_col.tolist()
+        # generated workloads hand tasks over in uid order: slot order IS
+        # uid order and the per-flush pool sorts drop the Python key fn
+        self._uid_monotone = all(a < b for a, b in
+                                 zip(self.uidl, self.uidl[1:]))
+        self.U = np.fromiter((t.usage.get("pu", 1.0) for t in allt),
+                             dtype=np.float64, count=n)
+        self.memraw = np.fromiter((t.usage.get("mem", 1.0) for t in allt),
+                                  dtype=np.float64, count=n)
+        self.irr = [t.attrs.get("irregularity", 1.0) for t in allt]
+        self.rel = [t.release_time for t in tasks]
+        self.in_bytes = [t.input_bytes for t in tasks]
+        # standalone predictions are pure per (task, PU): one table upfront
+        self.sa = [g.nodes[pu_names[i]].predict(t)
+                   for i, t in enumerate(tasks)]
+        self.sa.extend(brem for _, _, brem in self.background)
+        # dependency structure as slot lists
+        self.preds = [[slot_of[p.uid] for p in cfg.preds(t)] for t in tasks]
+        self.succs = [[slot_of[s.uid] for s in cfg.succs(t)] for t in tasks]
+        self.waiting = [len(p) + 1 for p in self.preds]   # +1: release event
+        # pre-churn route freeze: one batched pass instead of a lazy
+        # Dijkstra at each source's first mid-run transfer
+        warm_transfer_routes(comp, cfg, mapping)
+        # work state (vector-settled)
+        self.W = np.zeros(n)
+        self.rate = np.ones(n)
+        self.t_last = np.zeros(n)
+        self.eta = np.full(n, np.inf)
+        # reprice stamps emulate the reference heap's push sequence so
+        # *simultaneous* completions settle in the seed's event order
+        # (noise draw order is observable); see _complete_* argsorts
+        self.cstamp = np.zeros(n, dtype=np.int64)
+        self._stamp = 0
+        # timeline columns
+        nan = float("nan")
+        self.start = [nan] * n
+        self.finish = [nan] * n
+        self.standalone = [nan] * n
+        self.ready_t = [nan] * n
+        self.comm_t = [nan] * n
+        self.qwait = [nan] * n
+        self.ready_at = [nan] * n
+        # tenancy
+        self.pu_running = [0] * len(comp.pu_names)
+        self.max_ten = comp.max_tenancy.tolist()
+        self.pu_queue: dict[int, deque] = {}
+        # device pools + repricing dirt
+        self.dev_members: dict[int, set[int]] = {}
+        self.dirty_devs: set[int] = set()
+        self.dirty_edges: set[int] = set()
+        self.n_intervals = 0
+        self.n_events = 0
+        # transfers (growable SoA) + edge table
+        self.xcols = ("xW", "xrate", "xt_last", "xeta", "xlat")
+        self._xgrow(64)
+        self.xn = 0
+        self.xlive = 0
+        self.xconsumer: list[int] = []
+        # per-transfer route edges in CSR form: xe_flat[xe_start[k] :
+        # xe_start[k] + xe_cnt[k]] are transfer k's edge indices, so the
+        # link-repricing flush gathers the whole dirty set's edge lists
+        # with vectorized index math instead of per-transfer Python
+        self.xe_flat = np.zeros(256, dtype=np.int64)
+        self.xe_top = 0
+        self.xe_start: list[int] = []
+        self.xe_cnt: list[int] = []
+        self._xe_start_arr: Optional[np.ndarray] = None
+        self.edge_idx: dict[int, int] = {}
+        self.edge_objs: list[EdgeAttr] = []
+        self.edge_bw: list[float] = []
+        self._edge_bw_arr: Optional[np.ndarray] = None
+        self.edge_members: list[int] = []
+        self.edge_xfers: dict[int, set[int]] = {}
+        self.route_cache: dict[tuple[str, str], tuple[np.ndarray, float]] = {}
+        # timed events
+        self.heap: list[tuple[float, int, int, Any]] = []
+        self.seq = itertools.count()
+        self.time = 0.0
+        # factor path: array-native when the model exposes ledger-column
+        # scoring; otherwise per-device pools through the tuple surface
+        self._fbi = getattr(self.slowdown, "factor_batch_idx", None)
+        # memoized repricing: a pool's joint factors depend only on the
+        # multiset of (PU, pu-usage, mem-usage) columns (uids are distinct
+        # by construction — one job per task), so steady-state pools that
+        # recur across readings/devices hit a canonical-order cache
+        # instead of re-running the factor kernel.  Keyed per compiled
+        # snapshot: topology churn drops the cache with the snapshot.
+        self._fcache: dict = {}
+        self._fcache_comp = None
+
+    def _xgrow(self, cap: int) -> None:
+        for col in self.xcols:
+            old = getattr(self, col, None)
+            fill = np.inf if col == "xeta" else 0.0
+            arr = np.full(cap, fill)
+            if old is not None:
+                arr[:len(old)] = old
+            setattr(self, col, arr)
+        old = getattr(self, "xstamp", None)
+        self.xstamp = np.zeros(cap, dtype=np.int64)
+        if old is not None:
+            self.xstamp[:len(old)] = old
+
+    def _push(self, t: float, kind: int, payload: Any) -> None:
+        heapq.heappush(self.heap, (t, next(self.seq), kind, payload))
+
+    # -- job lifecycle ------------------------------------------------------
+    def _start_compute(self, s: int) -> None:
+        p = self.pu_il[s]
+        if self.pu_running[p] >= self.max_ten[p]:
+            q = self.pu_queue.get(p)
+            if q is None:
+                q = self.pu_queue[p] = deque()
+            q.append(s)
+            return
+        self.pu_running[p] = self.pu_running[p] + 1
+        sa = self.sa[s]
+        work = sa
+        if self.noise > 0.0:
+            work = sa * float(np.exp(self.rng.normal(
+                0.0, self.noise * self.irr[s])))
+        t = self.time
+        self.W[s] = work
+        self.rate[s] = 1.0
+        self.t_last[s] = t
+        self.start[s] = t
+        self.standalone[s] = sa
+        ra = self.ready_at[s]
+        self.qwait[s] = t - (ra if ra == ra else self.rel[s])
+        d = self.dev_ol[s]
+        m = self.dev_members.get(d)
+        if m is None:
+            m = self.dev_members[d] = set()
+        m.add(s)
+        self.dirty_devs.add(d)
+
+    def _route(self, src: str, dst: str) -> tuple[np.ndarray, float]:
+        key = (src, dst)
+        hit = self.route_cache.get(key)
+        if hit is None:
+            edges = self.comp.route_edges(src, dst)
+            idxs = np.empty(len(edges), dtype=np.int64)
+            lat = 0.0
+            for i, e in enumerate(edges):
+                ei = self.edge_idx.get(id(e))
+                if ei is None:
+                    ei = len(self.edge_objs)
+                    self.edge_idx[id(e)] = ei
+                    self.edge_objs.append(e)
+                    self.edge_bw.append(e.bandwidth)
+                    self.edge_members.append(0)
+                    self._edge_bw_arr = None
+                idxs[i] = ei
+                lat += e.latency
+            hit = self.route_cache[key] = (idxs, lat)
+        return hit
+
+    def _launch(self, consumer: int, src_dev: str, dst_dev: str,
+                nbytes: float) -> bool:
+        """Start a transfer for ``consumer``'s input; False = local/no data."""
+        if src_dev == dst_dev or nbytes <= 0:
+            return False
+        eidx, lat = self._route(src_dev, dst_dev)
+        k = self.xn
+        if k == len(self.xW):
+            self._xgrow(2 * k)
+        self.xn = k + 1
+        self.xlive += 1
+        self.xW[k] = nbytes
+        self.xrate[k] = 1.0
+        self.xt_last[k] = self.time
+        self.xeta[k] = np.inf          # priced at the flush
+        self.xlat[k] = lat
+        self.xconsumer.append(consumer)
+        ne = len(eidx)
+        top = self.xe_top
+        if top + ne > len(self.xe_flat):
+            buf = np.zeros(max(2 * len(self.xe_flat), top + ne),
+                           dtype=np.int64)
+            buf[:top] = self.xe_flat[:top]
+            self.xe_flat = buf
+        self.xe_flat[top:top + ne] = eidx
+        self.xe_start.append(top)
+        self.xe_cnt.append(ne)
+        self.xe_top = top + ne
+        self._xe_start_arr = None
+        dirty = self.dirty_edges
+        members = self.edge_members
+        xfers = self.edge_xfers
+        for e in eidx.tolist():
+            members[e] += 1
+            xs = xfers.get(e)
+            if xs is None:
+                xs = xfers[e] = set()
+            xs.add(k)
+            dirty.add(e)
+        return True
+
+    def _arrived(self, s: int) -> None:
+        w = self.waiting[s] - 1
+        self.waiting[s] = w
+        if w == 0:
+            t = self.time
+            self.ready_at[s] = t
+            dep = self.rel[s]
+            for p in self.preds[s]:
+                f = self.finish[p]
+                if f > dep:
+                    dep = f
+            self.ready_t[s] = dep
+            self.comm_t[s] = t - dep
+            self._start_compute(s)
+
+    def _finish(self, s: int) -> None:
+        t = self.time
+        self.eta[s] = np.inf
+        p = self.pu_il[s]
+        self.pu_running[p] = self.pu_running[p] - 1
+        self.finish[s] = t
+        d = self.dev_ol[s]
+        self.dev_members[d].discard(s)
+        if s < self.nt:
+            # successors: dependency bookkeeping + inter-device transfers
+            out_bytes = self.tasks[s].output_bytes
+            src = self.dev_name[s]
+            for ss in self.succs[s]:
+                if not self._launch(ss, src, self.dev_name[ss], out_bytes):
+                    self._arrived(ss)
+        q = self.pu_queue.get(p)
+        if q:
+            self._start_compute(q.popleft())
+        self.dirty_devs.add(d)
+
+    # -- repricing ----------------------------------------------------------
+    def _pool_factors(self, members: np.ndarray) -> np.ndarray:
+        if self._fbi is not None:
+            P = self.pu_i[members]
+            n = len(P)
+            if n == 1:
+                return _ONE        # a lone job has no co-runners
+            U = self.U[members]
+            mem = self.memraw[members]
+            if n == 2:             # pair pools: scalar path beats the cache
+                return self._fbi(P, U, mem, self.uid_col[members])
+            comp = self.graph.compiled()
+            if comp is not self._fcache_comp:
+                self._fcache_comp = comp
+                self._fcache = {}
+            order = np.lexsort((mem, U, P))
+            key = (P[order].tobytes(), U[order].tobytes(),
+                   mem[order].tobytes())
+            hit = self._fcache.get(key)
+            if hit is not None:
+                out = np.empty(len(hit))
+                out[order] = hit
+                return out
+            f = np.asarray(self._fbi(P, U, mem, self.uid_col[members]),
+                           dtype=np.float64)
+            self._fcache[key] = f[order].copy()
+            return f
+        # tuple fallback (custom slowdown models): per-device pools, like
+        # the seed — cross-device interactions are not assumed absent
+        out = np.empty(len(members))
+        fb = getattr(self.slowdown, "factor_batch", None)
+        allt = self.allt
+        devs = np.asarray([self.dev_ol[m] for m in members.tolist()])
+        for d in np.unique(devs):
+            sel = np.nonzero(devs == d)[0]
+            pool = [(allt[m], self.pu_name[m]) for m in members[sel]]
+            if fb is not None:
+                out[sel] = np.asarray(fb(pool), dtype=np.float64)
+            else:
+                out[sel] = [self.slowdown.factor(tk, pu, pool)
+                            for tk, pu in pool]
+        return out
+
+    def _flush(self) -> bool:
+        """Reprice every dirty device pool (one factor call) and every
+        dirty link set (one segment-min).  Returns True when any rate was
+        re-projected — i.e. when same-timestamp work may now exist."""
+        t = self.time
+        flushed = False
+        if self.dirty_devs:
+            self.n_intervals += len(self.dirty_devs)
+            dm = self.dev_members
+            # pool order replays the reference's completion-push sequence
+            # (device name, then uid) so reprice stamps line up exactly
+            names = self.comp.dev_ord_names
+            uidl = self.uidl
+            mem_list: list[int] = []
+            if self._uid_monotone:
+                for d in sorted(self.dirty_devs, key=names.__getitem__):
+                    mem_list.extend(sorted(dm[d]))
+            else:
+                for d in sorted(self.dirty_devs, key=names.__getitem__):
+                    mem_list.extend(sorted(dm[d], key=uidl.__getitem__))
+            self.dirty_devs.clear()
+            total = len(mem_list)
+            if total:
+                members = np.asarray(mem_list, dtype=np.int64)
+                self.cstamp[members] = np.arange(
+                    self._stamp, self._stamp + total)
+                self._stamp += total
+                factors = np.asarray(self._pool_factors(members),
+                                     dtype=np.float64)
+                W2 = _settle_pos(self.W[members], self.rate[members],
+                                 self.t_last[members], t)
+                rate = 1.0 / factors
+                self.W[members] = W2
+                self.t_last[members] = t
+                self.rate[members] = rate
+                self.eta[members] = t + W2 / rate
+                flushed = True
+        if self.dirty_edges:
+            affected: set[int] = set()
+            xfers = self.edge_xfers
+            for e in self.dirty_edges:
+                xs = xfers.get(e)
+                if xs:
+                    affected |= xs
+            self.dirty_edges.clear()
+            if affected:
+                ks = np.fromiter(sorted(affected), dtype=np.int64,
+                                 count=len(affected))
+                self.xstamp[ks] = np.arange(self._stamp,
+                                            self._stamp + len(ks))
+                self._stamp += len(ks)
+                if self._xe_start_arr is None:
+                    self._xe_start_arr = np.asarray(self.xe_start,
+                                                    dtype=np.int64)
+                    self._xe_cnt_arr = np.asarray(self.xe_cnt,
+                                                  dtype=np.int64)
+                starts = self._xe_start_arr[ks]
+                counts = self._xe_cnt_arr[ks]
+                K = int(counts.sum())
+                if K:
+                    within = np.arange(K) - np.repeat(
+                        np.cumsum(counts) - counts, counts)
+                    flat = self.xe_flat[np.repeat(starts, counts) + within]
+                else:
+                    flat = np.zeros(0, dtype=np.int64)
+                if self._edge_bw_arr is None:
+                    self._edge_bw_arr = np.asarray(self.edge_bw)
+                    self._edge_mem_arr = np.asarray(self.edge_members)
+                else:
+                    self._edge_mem_arr = np.asarray(self.edge_members)
+                shares = self._edge_bw_arr[flat] / np.maximum(
+                    1, self._edge_mem_arr[flat])
+                bw = _segment_min(shares, counts)
+                W2, _ = _rate_advance(self.xW[ks], self.xrate[ks],
+                                      self.xt_last[ks], t)
+                self.xW[ks] = W2
+                self.xt_last[ks] = t
+                self.xrate[ks] = bw
+                eta = np.divide(W2, bw, out=np.full(len(ks), np.inf),
+                                where=bw > 0.0)
+                self.xeta[ks] = t + eta
+                flushed = True
+        return flushed
+
+    def _intervene(self, fn: Callable[[], Any]) -> None:
+        fn()
+        # an intervention may mutate anything factors depend on (topology
+        # OR model params): drop the memoized pool factors outright
+        self._fcache = {}
+        self._fcache_comp = None
+        # churn boundary: reprice every occupied device pool and active
+        # link set against the post-mutation model/bandwidths
+        for d, members in self.dev_members.items():
+            if members:
+                self.dirty_devs.add(d)
+        for i, e in enumerate(self.edge_objs):
+            self.edge_bw[i] = e.bandwidth
+        self._edge_bw_arr = None
+        for e, xs in self.edge_xfers.items():
+            if xs:
+                self.dirty_edges.add(e)
+
+    # -- completions --------------------------------------------------------
+    def _complete_compute(self, done: np.ndarray) -> None:
+        t = self.time
+        if len(done) > 1:   # simultaneous: settle in reprice-stamp order
+            done = done[np.argsort(self.cstamp[done], kind="stable")]
+        W2 = _settle_pos(self.W[done], self.rate[done],
+                         self.t_last[done], t)
+        self.W[done] = W2
+        self.t_last[done] = t
+        fin = W2 <= CTOL
+        if not fin.all():   # float residue: keep running, fresh estimate
+            resid = done[~fin]
+            self.eta[resid] = t + self.W[resid] / self.rate[resid]
+        self.n_events += len(done)
+        for s in done[fin].tolist():
+            self._finish(s)
+
+    def _complete_transfers(self, done: np.ndarray) -> None:
+        t = self.time
+        if len(done) > 1:   # simultaneous: settle in reprice-stamp order
+            done = done[np.argsort(self.xstamp[done], kind="stable")]
+        W2, eta = _rate_advance(self.xW[done], self.xrate[done],
+                                self.xt_last[done], t)
+        self.xW[done] = W2
+        self.xt_last[done] = t
+        fin = W2 <= XTOL
+        if not fin.all():
+            resid = done[~fin]
+            self.xeta[resid] = eta[~fin]
+        self.n_events += len(done)
+        members = self.edge_members
+        for k in done[fin].tolist():
+            self.xeta[k] = np.inf
+            self.xlive -= 1
+            st = self.xe_start[k]
+            for e in self.xe_flat[st:st + self.xe_cnt[k]].tolist():
+                members[e] -= 1
+                self.edge_xfers[e].discard(k)
+                self.dirty_edges.add(e)
+            lat = float(self.xlat[k])
+            if lat > 0:
+                # latency tail: arrival after the fixed route latency
+                self._push(t + lat, _ARRIVE, self.xconsumer[k])
+            else:
+                self._arrived(self.xconsumer[k])
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> Timeline:
+        self._setup()
+        for t, fn in self.interventions:
+            self._push(float(t), _INTERVENE, fn)
+        # background jobs run from t=0 with known remaining standalone work
+        for k, (bt, bpu, brem) in enumerate(self.background):
+            s = self.nt + k
+            self.W[s] = brem
+            self.start[s] = 0.0
+            self.standalone[s] = brem
+            self.pu_running[self.pu_il[s]] += 1
+            d = self.dev_ol[s]
+            self.dev_members.setdefault(d, set()).add(s)
+            self.dirty_devs.add(d)
+        self._flush()
+        for i, t in enumerate(self.tasks):
+            self._push(t.release_time, _RELEASE, i)
+
+        heap = self.heap
+        eta = self.eta
+        while True:
+            em = float(eta.min()) if len(eta) else np.inf
+            xm = float(self.xeta[:self.xn].min()) if self.xlive else np.inf
+            t_next = heap[0][0] if heap else np.inf
+            if em < t_next:
+                t_next = em
+            if xm < t_next:
+                t_next = xm
+            if t_next == np.inf:
+                break
+            if t_next > self.time:
+                self.time = t_next
+            time = self.time
+            # all events at this timestamp drain before one flush reprices
+            # what they touched; repeat while the flush re-projected rates
+            # (zero-duration pileups surface as fresh same-time work)
+            first = True
+            while True:
+                ne = self.n_events
+                while heap and heap[0][0] <= time:
+                    _, _, kind, payload = heapq.heappop(heap)
+                    self.n_events += 1
+                    if kind == _RELEASE:
+                        s = payload
+                        task = self.tasks[s]
+                        # initial input payload from the origin device
+                        if (task.origin is not None and self.in_bytes[s] > 0
+                                and not self.preds[s]):
+                            if self._launch(s, task.origin, self.dev_name[s],
+                                            self.in_bytes[s]):
+                                continue
+                        self._arrived(s)
+                    elif kind == _ARRIVE:
+                        self._arrived(payload)
+                    else:
+                        self._intervene(payload)
+                if first or em <= time:
+                    done = np.nonzero(eta <= time)[0]
+                    if len(done):
+                        self._complete_compute(done)
+                if self.xlive and (first or xm <= time):
+                    xdone = np.nonzero(self.xeta[:self.xn] <= time)[0]
+                    if len(xdone):
+                        self._complete_transfers(xdone)
+                first = False
+                if not self._flush():
+                    break
+                # a flush ran: re-projected rates may complete at `time`
+                em = float(eta.min()) if len(eta) else np.inf
+                xm = float(self.xeta[:self.xn].min()) if self.xlive \
+                    else np.inf
+                if em > time and xm > time and not (heap and
+                                                    heap[0][0] <= time):
+                    break
+        return self._timeline()
+
+    def _timeline(self) -> Timeline:
+        missing = [t.uid for i, t in enumerate(self.tasks)
+                   if self.finish[i] != self.finish[i]]
+        if missing:
+            raise RuntimeError(f"traverse deadlock: unfinished {missing[:5]}")
+        tl = Timeline(mapping=dict(self.mapping))
+        tl.n_intervals = self.n_intervals
+        tl.n_events = self.n_events
+        for i, t in enumerate(self.tasks):
+            uid = t.uid
+            tl.start[uid] = self.start[i]
+            tl.finish[uid] = self.finish[i]
+            tl.standalone[uid] = self.standalone[i]
+            if not math.isnan(self.ready_t[i]):
+                tl.ready[uid] = self.ready_t[i]
+                tl.comm[uid] = self.comm_t[i]
+            if not math.isnan(self.qwait[i]):
+                tl.queue_wait[uid] = self.qwait[i]
+        # background tasks may legitimately still be running; report their
+        # projected finish assuming the final interval persists
+        for k, (bt, _, _) in enumerate(self.background):
+            s = self.nt + k
+            tl.start[bt.uid] = self.start[s]
+            tl.standalone[bt.uid] = self.standalone[s]
+            if not math.isnan(self.finish[s]):
+                tl.finish[bt.uid] = self.finish[s]
+            elif s in self.dev_members.get(self.dev_ol[s], ()):
+                tl.finish[bt.uid] = self.time + float(self.W[s]
+                                                      / self.rate[s])
+        return tl

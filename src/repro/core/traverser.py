@@ -5,11 +5,14 @@ The Traverser walks the CFG in time order and splits execution into
 **contention intervals** (Fig. 6): maximal time spans during which the set of
 co-running tasks is constant.  Within an interval each task progresses at
 ``1 / slowdown_factor`` of its standalone speed; at interval boundaries the
-factors are recomputed.  This is implemented as an event-driven simulation
-with virtual-work bookkeeping so rate changes are O(affected jobs); the
-factor recomputation itself is one vectorized ``factor_batch`` call over
-the compiled HW-GRAPH arrays (core/compiled.py), and transfer routes come
-from the compiled all-pairs tables instead of per-query Dijkstra runs.
+factors are recomputed.  The simulation itself runs on the struct-of-arrays
+``core.timeline.TimelineEngine`` (dense job/transfer tables, one array-op
+settle per timestamp, one repricing call per flush across every dirty
+device); the seed's per-job ``heapq`` event loop survives verbatim as
+:meth:`Traverser.traverse_reference` — the parity oracle
+(``tests/test_timeline.py`` pins 1e-9 agreement) and the ``bench-des``
+baseline.  Transfer routes come from the compiled (lazily materialized)
+route tables instead of per-query Dijkstra runs.
 
 The same engine serves two roles:
 
@@ -36,6 +39,7 @@ import numpy as np
 from .hwgraph import EdgeAttr, HWGraph, ProcessingUnit
 from .slowdown import DecoupledSlowdown
 from .task import Task, TaskGraph
+from .timeline import Timeline, TimelineEngine
 
 
 @dataclass
@@ -49,42 +53,6 @@ class TaskPrediction:
     @property
     def total(self) -> float:
         return self.comm + self.standalone * self.factor
-
-
-@dataclass
-class Timeline:
-    """Result of a CFG traverse."""
-
-    start: dict[int, float] = field(default_factory=dict)      # task.uid -> t
-    finish: dict[int, float] = field(default_factory=dict)
-    ready: dict[int, float] = field(default_factory=dict)      # deps resolved at
-    standalone: dict[int, float] = field(default_factory=dict)
-    comm: dict[int, float] = field(default_factory=dict)       # inbound comm time
-    queue_wait: dict[int, float] = field(default_factory=dict)
-    mapping: dict[int, str] = field(default_factory=dict)
-    n_intervals: int = 0
-
-    @property
-    def makespan(self) -> float:
-        return max(self.finish.values(), default=0.0)
-
-    def latency(self, task: Task) -> float:
-        """Ready-to-finish latency (comm + queueing + slowdown + compute).
-
-        'Ready' = dependencies resolved (or release time for roots) — the
-        moment the paper's runtime hands the task to the Orchestrator."""
-        t0 = self.ready.get(task.uid, task.release_time)
-        return self.finish[task.uid] - t0
-
-    def slowdown_of(self, task: Task) -> float:
-        busy = self.finish[task.uid] - self.start[task.uid]
-        sa = self.standalone[task.uid]
-        return busy / sa if sa > 0 else 1.0
-
-    def deadline_met(self, task: Task) -> bool:
-        if task.deadline is None:
-            return True
-        return self.latency(task) <= task.deadline * (1 + 1e-9)
 
 
 class _ComputeJob:
@@ -182,17 +150,47 @@ class Traverser:
     # ------------------------------------------------------------------
     def traverse(self, cfg: TaskGraph, mapping: dict[int, str],
                  background: list[tuple[Task, str, float]] = (),
+                 interventions: list[tuple[float, Any]] = (),
                  ) -> Timeline:
         """Simulate ``cfg`` under ``mapping`` (task.uid -> pu name).
 
         ``background``: (task, pu, remaining_standalone_seconds) triples of
         already-running tasks that contend but whose dependencies are done.
+        ``interventions``: (t, fn) pairs applied at simulated time ``t``
+        (topology churn mid-run: ``set_bandwidth`` / ``mark_dead`` / ...);
+        every active device pool and link set is repriced at that instant.
+
+        Runs on the array-native :class:`core.timeline.TimelineEngine`.
+        A *noisy slowdown model* (rng-bearing) draws inside ``factor()``
+        in per-device pool order, which only the seed event loop
+        reproduces byte-for-byte — those configurations route to
+        :meth:`traverse_reference` (note: the ground-truth engine's
+        per-task work noise is NOT this case; it is drawn at job start
+        and the array engine preserves its stream).
         """
+        if bool(getattr(self.slowdown, "_noisy", lambda: False)()):
+            return self.traverse_reference(cfg, mapping, background,
+                                           interventions)
+        return TimelineEngine(self, cfg, mapping, background,
+                              interventions).run()
+
+    def traverse_reference(self, cfg: TaskGraph, mapping: dict[int, str],
+                           background: list[tuple[Task, str, float]] = (),
+                           interventions: list[tuple[float, Any]] = (),
+                           ) -> Timeline:
+        """The seed's per-job heapq event loop, kept verbatim: the parity
+        oracle for ``TimelineEngine`` (1e-9) and the ``bench-des``
+        object-path baseline."""
         tl = Timeline(mapping=dict(mapping))
         heap: list[tuple[float, int, str, Any]] = []
         seq = itertools.count()
         time = 0.0
         comp = self.graph.compiled()      # topology is frozen during a traverse
+        from .timeline import warm_transfer_routes
+        # freeze transfer routes against the pre-churn topology (route
+        # rows are lazily materialized; both engines warm identically so
+        # interventions cannot skew which graph version a route sees)
+        warm_transfer_routes(comp, cfg, mapping)
         factor_batch = getattr(self.slowdown, "factor_batch", None)
 
         # --- state ---
@@ -232,7 +230,7 @@ class Traverser:
 
             The whole pool is evaluated in one vectorized shot against the
             compiled arrays instead of O(n^2) Python pair loops."""
-            members = [compute[u] for u in dev_members[dev]]
+            members = [compute[u] for u in sorted(dev_members[dev])]
             pool = [(j.task, j.pu) for j in members]
             if factor_batch is not None:
                 factors = factor_batch(pool)
@@ -250,7 +248,11 @@ class Traverser:
             affected: set[int] = set()
             for e in edges:
                 affected |= edge_members[id(e)]
-            for k in affected:
+            # deterministic tie-break: transfers repriced (and hence their
+            # completion events pushed) in key order, so simultaneous
+            # completions settle in a pinned order — the array engine's
+            # scan order, and stable across hash seeds
+            for k in sorted(affected):
                 x = transfers[k]
                 settle(x)
                 bw = min(e.bandwidth / max(1, len(edge_members[id(e)]))
@@ -262,7 +264,7 @@ class Traverser:
 
         def flush() -> None:
             if dirty_devs:
-                for dev in dirty_devs:
+                for dev in sorted(dirty_devs):   # deterministic tie-break
                     reprice_device(dev)
                 dirty_devs.clear()
             if dirty_edges:
@@ -347,6 +349,8 @@ class Traverser:
             if t.uid not in mapping:
                 raise KeyError(f"{t} has no mapping")
             waiting[t.uid] = len(cfg.preds(t)) + 1     # +1 for the release event
+        for it, ifn in interventions:
+            push(it, "intervene", ifn)
         for bt, bpu, brem in background:
             dev = comp.device_name(bpu)
             job = _ComputeJob(bt, bpu, dev, brem, 0.0)
@@ -370,6 +374,7 @@ class Traverser:
             time = max(time, heap[0][0])
             while heap and heap[0][0] <= time:
                 _, _, kind, payload = heapq.heappop(heap)
+                tl.n_events += 1
                 if kind == "cdone":
                     uid, ver = payload
                     job = compute.get(uid)
@@ -408,6 +413,16 @@ class Traverser:
                         if launch_transfer(t, t.origin, pu_dev, t.input_bytes):
                             continue
                     data_arrived(uid)
+                elif kind == "intervene":
+                    # churn boundary: apply the mutation, then reprice
+                    # every occupied device pool and active link set
+                    payload()
+                    for dev, members in dev_members.items():
+                        if members:
+                            dirty_devs.add(dev)
+                    for x in transfers.values():
+                        for e in x.edges:
+                            dirty_edges[id(e)] = e
                 else:  # pragma: no cover
                     raise AssertionError(kind)
             flush()

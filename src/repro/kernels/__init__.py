@@ -15,4 +15,4 @@ if not hasattr(_pltpu, "CompilerParams"):        # old JAX, new spelling used
 if not hasattr(_pltpu, "TPUCompilerParams"):     # new JAX, old spelling used
     _pltpu.TPUCompilerParams = _pltpu.CompilerParams
 
-from . import ops, ref, slowdown_kernel
+from . import ops, ref, slowdown_kernel, timeline_kernel

@@ -31,6 +31,46 @@ def slowdown_factors_ref(x, beta, mem, mt_term, kappa: float) -> np.ndarray:
                       * np.prod(1.0 + term * mem[:, None], axis=-1))
 
 
+def rate_advance_ref(W, rate, t_last, now: float
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """NumPy oracle for the DES rate-advance kernel
+    (kernels/timeline_kernel.py): settle virtual work to ``now`` and
+    project completion times.
+
+    ``W2 = max(0, W - rate*(now - t_last))`` with nan residues clamped
+    to zero (the scalar seed's ``max(0.0, nan)`` behaviour), and
+    ``eta = now + W2/rate`` where ``rate > 0``, +inf otherwise."""
+    W = np.asarray(W, dtype=np.float64)
+    rate = np.asarray(rate, dtype=np.float64)
+    t_last = np.asarray(t_last, dtype=np.float64)
+    with np.errstate(invalid="ignore"):      # inf-rate x zero-dt corner
+        raw = W - rate * (now - t_last)
+    W2 = np.maximum(0.0, raw)
+    nan = np.isnan(raw)
+    if nan.any():
+        W2 = W2.copy()
+        W2[nan] = 0.0
+    eta = np.divide(W2, rate, out=np.full(W2.shape, np.inf),
+                    where=rate > 0.0)
+    eta += now
+    return W2, eta
+
+
+def segment_min_ref(values, counts) -> np.ndarray:
+    """NumPy oracle for the DES segment-min kernel: per-segment min of
+    ``values`` split into consecutive runs of ``counts[i]`` elements
+    (a transfer's bottleneck bandwidth over its route edges).  Empty
+    segments yield +inf — an edgeless transfer is latency-only."""
+    values = np.asarray(values, dtype=np.float64)
+    counts = np.asarray(counts, dtype=np.int64)
+    out = np.full(len(counts), np.inf)
+    nz = counts > 0
+    if nz.any():
+        starts = np.cumsum(counts) - counts
+        out[nz] = np.minimum.reduceat(values, starts[nz])
+    return out
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: Optional[int] = None,
                   softcap: Optional[float] = None) -> jax.Array:

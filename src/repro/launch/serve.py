@@ -22,15 +22,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (Task, build_orchestrators, heye_traverser)
+from repro.core import (SchedulerSession, Task, build_orchestrators,
+                        heye_traverser)
 from repro.core.topology import build_tpu_fleet
 from repro.models import ParallelCtx, build_model
 from repro.serve.engine import Request, ServeEngine
 
 
 def place_tenants(n_tenants: int, slo_s: float, est_s: float):
-    """Map tenant streams onto fleet chips with the Orchestrator; returns
-    {tenant -> chip} and the scheduling overhead ledger."""
+    """Map tenant streams onto fleet chips in one batch-first session;
+    returns {tenant -> chip} and the scheduling overhead ledger.
+
+    The whole tenant wave goes through ``SchedulerSession`` /
+    ``Orchestrator.map_batch`` (origin-routed), replacing the deprecated
+    per-tenant ``map_task`` loop — the assignments are identical (batch
+    parity is pinned by tests/test_session.py) but the wave is scored in
+    one kernel call."""
     tb = build_tpu_fleet(n_pods=1, hosts_per_pod=2, chips_per_host=4)
     # a profiled model for 'serve_stream' tasks: est_s per stream
     from repro.core.predict import CallableModel
@@ -39,16 +46,20 @@ def place_tenants(n_tenants: int, slo_s: float, est_s: float):
         chip.model = model
         chip.max_tenancy = 4
     root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
-    placements = {}
-    overheads = []
     orc = next(o for o in root.iter_tree() if o.is_device_orc())
-    for i in range(n_tenants):
+    tenants = []
+    for _ in range(n_tenants):
         t = Task(kind="serve_stream", deadline=slo_s,
                  usage={"pu": 1.0, "mem": 0.6})
         t.origin = orc.group
-        res = orc.map_task(t, now=0.0)
-        placements[i] = res.pu if res else None
-        overheads.append(res.overhead if res else 0.0)
+        tenants.append(t)
+    session = SchedulerSession(tb.graph, root, charge_overhead=False)
+    session.submit(tenants)
+    session.map_pending()
+    placements = {i: session.mapping.get(t.uid)
+                  for i, t in enumerate(tenants)}
+    overheads = [session.results[t.uid].overhead
+                 if session.results.get(t.uid) else 0.0 for t in tenants]
     return placements, overheads
 
 

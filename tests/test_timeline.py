@@ -1,0 +1,360 @@
+"""Array-native DES timeline engine: 1e-9 parity with the seed heapq
+loop on the paper-figure workloads (Fig. 13 mining, Fig. 14/VR chains),
+including mid-run topology churn and zero-duration event pileups, plus
+oracle sweeps for the rate-advance / segment-min kernels."""
+import itertools
+
+import numpy as np
+import pytest
+
+import repro.core.task as task_mod
+from repro.core import (SchedulerSession, Task, TaskGraph, Traverser,
+                        build_orchestrators, build_testbed,
+                        ground_truth_traverser, heye_traverser,
+                        mining_workload, vr_workload)
+from repro.core.timeline import TimelineEngine
+from repro.core.topology import make_task
+
+TOL = 1e-9
+
+
+def _testbed(mult=1):
+    return build_testbed(
+        edge_counts={"orin_agx": 2 * mult, "xavier_agx": mult,
+                     "orin_nano": mult, "xavier_nx": mult},
+        server_counts={"server1": 1, "server2": 1})
+
+
+def _mapped(workload_fn, seed_uid=400_000, mult=1):
+    """Two identical (testbed, cfg, mapping) copies so each engine runs
+    on untouched state; mapping comes from a real session drive."""
+    out = []
+    for _ in range(2):
+        task_mod._task_counter = itertools.count(seed_uid)
+        tb = _testbed(mult)
+        cfg = workload_fn(tb)
+        root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+        s = SchedulerSession(tb.graph, root)
+        s.submit(cfg)
+        s.map_pending()
+        out.append((tb, cfg, dict(s.mapping)))
+    return out
+
+
+def _assert_parity(tl_ref, tl_arr, tol=TOL):
+    assert set(tl_ref.finish) == set(tl_arr.finish)
+    for k in tl_ref.finish:
+        assert tl_ref.finish[k] == pytest.approx(tl_arr.finish[k],
+                                                 abs=tol, rel=tol), k
+    for k in tl_ref.start:
+        assert tl_ref.start[k] == pytest.approx(tl_arr.start[k],
+                                                abs=tol, rel=tol), k
+    for k in tl_ref.queue_wait:
+        assert tl_ref.queue_wait[k] == pytest.approx(
+            tl_arr.queue_wait.get(k, 0.0), abs=tol, rel=tol), k
+    for k in tl_ref.comm:
+        assert tl_ref.comm[k] == pytest.approx(tl_arr.comm.get(k, 0.0),
+                                               abs=tol, rel=tol), k
+    assert tl_ref.n_intervals == tl_arr.n_intervals
+
+
+# ---------------------------------------------------------------------------
+# parity on the paper-figure workloads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("noise_seed", [None, 0, 7])
+def test_mining_parity(noise_seed):
+    """Fig. 13 mining workload: prediction engine and noisy ground truth
+    both match the seed event loop (ground truth draws per-task work
+    noise at job start — the stream order must survive batching)."""
+    (tb1, cfg1, m1), (tb2, cfg2, m2) = _mapped(
+        lambda tb: mining_workload(tb, n_sensors=18, n_readings=2))
+    assert m1 == m2
+    mk1 = (heye_traverser(tb1.graph) if noise_seed is None
+           else ground_truth_traverser(tb1.graph, noise_seed))
+    mk2 = (heye_traverser(tb2.graph) if noise_seed is None
+           else ground_truth_traverser(tb2.graph, noise_seed))
+    _assert_parity(mk1.traverse_reference(cfg1, m1),
+                   mk2.traverse(cfg2, m2))
+
+
+@pytest.mark.parametrize("noise_seed", [None, 3])
+def test_vr_parity(noise_seed):
+    """VR frame chains (Fig. 7/14 style): serial dependencies, pinned
+    stages, cross-device transfers with latency tails."""
+    (tb1, cfg1, m1), (tb2, cfg2, m2) = _mapped(
+        lambda tb: vr_workload(tb, n_frames=5), seed_uid=410_000)
+    assert m1 == m2
+    mk1 = (heye_traverser(tb1.graph) if noise_seed is None
+           else ground_truth_traverser(tb1.graph, noise_seed))
+    mk2 = (heye_traverser(tb2.graph) if noise_seed is None
+           else ground_truth_traverser(tb2.graph, noise_seed))
+    _assert_parity(mk1.traverse_reference(cfg1, m1),
+                   mk2.traverse(cfg2, m2))
+
+
+def test_oversubscribed_parity_with_queueing():
+    """Tenancy queues + link sharing at 3x load: the regime where
+    completion-tie ordering is observable through the noise stream."""
+    (tb1, cfg1, m1), (tb2, cfg2, m2) = _mapped(
+        lambda tb: mining_workload(tb, n_sensors=60, n_readings=2),
+        seed_uid=420_000)
+    _assert_parity(
+        ground_truth_traverser(tb1.graph, 1).traverse_reference(cfg1, m1),
+        ground_truth_traverser(tb2.graph, 1).traverse(cfg2, m2))
+
+
+def test_engine_is_default_traverse_path():
+    """Traverser.traverse runs on the TimelineEngine (noise-free and
+    per-task-noise models); only an rng-bearing *slowdown* model routes
+    to the reference loop."""
+    tb = _testbed()
+    cfg = TaskGraph()
+    t = make_task("dnn", origin=tb.edges[0])
+    cfg.add(t)
+    trav = heye_traverser(tb.graph)
+    tl = TimelineEngine(trav, cfg, {t.uid: f"{tb.edges[0]}.gpu"}).run()
+    tl2 = trav.traverse(cfg, {t.uid: f"{tb.edges[0]}.gpu"})
+    assert tl.finish[t.uid] == tl2.finish[t.uid]
+
+
+# ---------------------------------------------------------------------------
+# churn: mark_dead / set_bandwidth mid-run
+# ---------------------------------------------------------------------------
+def _churn_pair(seed_uid, fns):
+    """Identical runs on both engines with interventions; ``fns`` maps a
+    testbed to (t, fn) pairs."""
+    (tb1, cfg1, m1), (tb2, cfg2, m2) = _mapped(
+        lambda tb: mining_workload(tb, n_sensors=24, n_readings=2),
+        seed_uid=seed_uid)
+    tl_ref = ground_truth_traverser(tb1.graph, 2).traverse_reference(
+        cfg1, m1, interventions=fns(tb1))
+    tl_arr = ground_truth_traverser(tb2.graph, 2).traverse(
+        cfg2, m2, interventions=fns(tb2))
+    return tl_ref, tl_arr
+
+
+def test_churn_set_bandwidth_mid_run():
+    """A link degrades 100x mid-run: in-flight transfers reprice at the
+    intervention instant, identically in both engines."""
+    def fns(tb):
+        return [(0.02, lambda: tb.graph.set_bandwidth(
+            f"link_{tb.edges[0]}", 1e6)),
+            (0.15, lambda: tb.graph.set_bandwidth(
+                f"link_{tb.edges[0]}", 1e9))]
+    tl_ref, tl_arr = _churn_pair(430_000, fns)
+    _assert_parity(tl_ref, tl_arr)
+
+
+def test_churn_mark_dead_mid_run():
+    """A device dies (and revives) mid-run: running jobs keep their
+    rates until the churn boundary reprices them against the patched
+    snapshot; both engines see the same patched factors."""
+    def fns(tb):
+        e = tb.edges[1]
+        return [(0.03, lambda: tb.graph.mark_dead(e)),
+                (0.12, lambda: tb.graph.mark_alive(e))]
+    tl_ref, tl_arr = _churn_pair(440_000, fns)
+    _assert_parity(tl_ref, tl_arr)
+
+
+def test_churn_route_frozen_before_transit_death():
+    """A transit node dies before a late task's first transfer: both
+    engines froze the route at traverse start (pre-churn), so the
+    transfer still runs the original path instead of one engine lazily
+    resolving against the dead graph."""
+    def build(seed_uid=445_000):
+        task_mod._task_counter = itertools.count(seed_uid)
+        tb = _testbed()
+        cfg = TaskGraph()
+        t = make_task("render", origin=tb.edges[0], input_bytes=1e6,
+                      release_time=0.05)
+        cfg.add(t)
+        return tb, cfg, {t.uid: f"{tb.servers[0]}.gpu"}, t.uid
+    tb1, cfg1, m1, uid = build()
+    tb2, cfg2, m2, _ = build()
+    fns = lambda tb: [(0.01, lambda: tb.graph.mark_dead("edge_cluster"))]
+    tl_ref = heye_traverser(tb1.graph).traverse_reference(
+        cfg1, m1, interventions=fns(tb1))
+    tl_arr = heye_traverser(tb2.graph).traverse(
+        cfg2, m2, interventions=fns(tb2))
+    assert tl_ref.finish[uid] == pytest.approx(tl_arr.finish[uid], abs=TOL)
+
+
+def test_churn_bandwidth_affects_transfers():
+    """Sanity beyond parity: throttling the uplink mid-transfer actually
+    delays the consumer vs the unthrottled run."""
+    tb1 = _testbed()
+    tb2 = _testbed()
+    for tb in (tb1, tb2):
+        pass
+    def run(tb, throttle):
+        cfg = TaskGraph()
+        t = make_task("render", origin=tb.edges[0], input_bytes=8e6)
+        cfg.add(t)
+        mapping = {t.uid: f"{tb.servers[0]}.gpu"}
+        iv = ([(1e-4, lambda: tb.graph.set_bandwidth(
+            f"link_{tb.edges[0]}", 5e5))] if throttle else [])
+        tl = heye_traverser(tb.graph).traverse(cfg, mapping,
+                                               interventions=iv)
+        return tl.finish[t.uid]
+    assert run(tb1, True) > 2.0 * run(tb2, False)
+
+
+# ---------------------------------------------------------------------------
+# zero-duration pileups at a shared timestamp
+# ---------------------------------------------------------------------------
+def test_zero_duration_pileup_shared_timestamp():
+    """A chain of zero-work tasks plus real tasks all releasing at one
+    instant: the flush->drain rounds must converge at that timestamp and
+    match the seed loop event-for-event."""
+    def build(seed_uid):
+        task_mod._task_counter = itertools.count(seed_uid)
+        tb = _testbed()
+        e = tb.edges[0]
+        cfg = TaskGraph()
+        prev = None
+        zs = []
+        for i in range(4):        # zero-duration chain
+            z = Task(kind="zero", origin=e, release_time=0.01)
+            z.attrs["standalone_s"] = 0.0
+            cfg.add(z, deps=[prev] if prev else [])
+            zs.append(z)
+            prev = z
+        reals = [make_task("dnn", origin=e, release_time=0.01)
+                 for _ in range(3)]
+        for r in reals:
+            cfg.add(r)
+        mapping = {z.uid: f"{e}.cpu0" for z in zs}
+        mapping.update({r.uid: f"{e}.gpu" for r in reals})
+        return tb, cfg, mapping
+
+    from repro.core.predict import CallableModel
+    tb1, cfg1, m1 = build(450_000)
+    tb2, cfg2, m2 = build(450_000)
+    for tb in (tb1, tb2):
+        zero_model = CallableModel(
+            fn=lambda t, pu, unit: t.attrs.get("standalone_s", 1e-3))
+        for pu in tb.graph.pus():
+            pu.model = zero_model
+    tl_ref = heye_traverser(tb1.graph).traverse_reference(cfg1, m1)
+    tl_arr = heye_traverser(tb2.graph).traverse(cfg2, m2)
+    _assert_parity(tl_ref, tl_arr)
+    # the chain really collapsed onto one instant
+    zs = [t for t in cfg2 if t.kind == "zero"]
+    for z in zs:
+        assert tl_arr.finish[z.uid] == pytest.approx(0.01, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# background jobs + API details
+# ---------------------------------------------------------------------------
+def test_background_projection_matches_reference():
+    tb1, tb2 = _testbed(), _testbed()
+    def run(tb, ref):
+        task_mod._task_counter = itertools.count(455_000)
+        cfg = TaskGraph()
+        a = make_task("dnn", origin=tb.edges[0])
+        cfg.add(a)
+        bg = make_task("render", origin=tb.edges[0])
+        trav = heye_traverser(tb.graph)
+        args = (cfg, {a.uid: f"{tb.edges[0]}.gpu"},
+                [(bg, f"{tb.edges[0]}.gpu", 0.5)])
+        tl = (trav.traverse_reference(*args) if ref
+              else trav.traverse(*args))
+        return a.uid, bg.uid, tl
+    ua, ub, tl_ref = run(tb1, True)
+    _, _, tl_arr = run(tb2, False)
+    assert tl_ref.finish[ua] == pytest.approx(tl_arr.finish[ua], abs=TOL)
+    assert tl_ref.finish[ub] == pytest.approx(tl_arr.finish[ub], abs=TOL)
+
+
+def test_missing_mapping_raises():
+    tb = _testbed()
+    cfg = TaskGraph()
+    cfg.add(make_task("mm"))
+    with pytest.raises(KeyError):
+        heye_traverser(tb.graph).traverse(cfg, {})
+
+
+def test_n_events_counted():
+    (tb1, cfg1, m1), _ = _mapped(
+        lambda tb: mining_workload(tb, n_sensors=6, n_readings=1),
+        seed_uid=460_000)
+    tl = heye_traverser(tb1.graph).traverse(cfg1, m1)
+    assert tl.n_events >= len(list(cfg1))     # every task at least releases
+
+
+# ---------------------------------------------------------------------------
+# kernels: numpy oracles + interpret-mode Pallas sweeps
+# ---------------------------------------------------------------------------
+def test_rate_advance_oracle_matches_engine_inline():
+    from repro.core.timeline import _rate_advance_np
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    W = rng.uniform(0, 10, 64)
+    rate = rng.uniform(0.1, 3.0, 64)
+    rate[::5] = 0.0
+    rate[3] = np.inf
+    t_last = rng.uniform(0, 1, 64)
+    t_last[3] = 1.25
+    w1, e1 = _rate_advance_np(W, rate, t_last, 1.25)
+    w2, e2 = ref.rate_advance_ref(W, rate, t_last, 1.25)
+    np.testing.assert_array_equal(w1, w2)
+    np.testing.assert_array_equal(e1, e2)
+    assert w1[3] == 0.0                       # inf-rate x zero-dt corner
+
+
+def test_segment_min_oracle():
+    from repro.kernels import ref
+    vals = np.array([5.0, 2.0, 7.0, 1.0, 9.0])
+    counts = np.array([2, 0, 3])
+    out = ref.segment_min_ref(vals, counts)
+    np.testing.assert_array_equal(out, [2.0, np.inf, 1.0])
+
+
+def test_timeline_kernels_interpret_sweep():
+    jax = pytest.importorskip("jax")
+    from repro.kernels import ref
+    from repro.kernels import timeline_kernel as tk
+    rng = np.random.default_rng(1)
+    for n in (1, 7, 128, 300):
+        W = rng.uniform(0, 100, n)
+        rate = rng.uniform(0.01, 5.0, n)
+        rate[:: max(1, n // 3)] = 0.0
+        t_last = rng.uniform(0, 2, n)
+        w_ref, e_ref = ref.rate_advance_ref(W, rate, t_last, 2.5)
+        w_k, e_k = tk.rate_advance_pallas(W, rate, t_last, 2.5)
+        np.testing.assert_allclose(w_k, w_ref, rtol=2e-5, atol=1e-5)
+        fin = np.isfinite(e_ref)
+        assert (np.isfinite(e_k) == fin).all()
+        np.testing.assert_allclose(e_k[fin], e_ref[fin], rtol=2e-5,
+                                   atol=1e-5)
+    for S in (1, 9, 257):
+        counts = rng.integers(0, 5, S)
+        vals = rng.uniform(1, 50, int(counts.sum()))
+        want = ref.segment_min_ref(vals, counts)
+        got = tk.segment_min_pallas(vals, counts)
+        fin = np.isfinite(want)
+        assert (np.isfinite(got) == fin).all()
+        np.testing.assert_allclose(got[fin], want[fin], rtol=1e-6)
+
+
+def test_forced_kernel_mode_runs_engine():
+    """REPRO_TIMELINE_KERNEL=pallas routes the engine's settles through
+    the interpret-mode kernel (fp32: looser tolerance)."""
+    pytest.importorskip("jax")
+    import repro.core.timeline as tmod
+    (tb1, cfg1, m1), (tb2, cfg2, m2) = _mapped(
+        lambda tb: mining_workload(tb, n_sensors=4, n_readings=1),
+        seed_uid=470_000)
+    tl_ref = heye_traverser(tb1.graph).traverse(cfg1, m1)
+    old = (tmod._RATE_ADVANCE, tmod._SEGMENT_MIN)
+    try:
+        from repro.kernels import timeline_kernel as tk
+        tmod._RATE_ADVANCE = tk.rate_advance_forced
+        tmod._SEGMENT_MIN = tk.segment_min_forced
+        tl_k = heye_traverser(tb2.graph).traverse(cfg2, m2)
+    finally:
+        tmod._RATE_ADVANCE, tmod._SEGMENT_MIN = old
+    for k in tl_ref.finish:
+        assert tl_ref.finish[k] == pytest.approx(tl_k.finish[k], rel=1e-3)
