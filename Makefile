@@ -22,11 +22,13 @@ bench-session:
 	python -m benchmarks.graph_compile session --check
 
 # array-native DES engine vs the seed heapq loop at mult=8 oversubscribed,
-# plus the mult=128 lazy snapshot build; writes BENCH_des.json and fails on
-# a >20% events/sec regression or a <3x speedup vs the seed loop
+# plus the mult=128 lazy snapshot build and the fused wave-batched mapping
+# walk over the whole fleet; writes BENCH_des.json and fails on a >20%
+# events/sec or mapped-tasks/sec regression, a <3x speedup vs the seed
+# loop, or mult=128 mapping breaching its absolute 2 s budget
 bench-des:
 	python -m benchmarks.des --check
 
-# seconds-scale DES parity + throughput smoke (CI)
+# seconds-scale DES parity + mapping-throughput smoke (CI)
 bench-des-smoke:
 	python -m benchmarks.des --smoke

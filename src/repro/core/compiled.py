@@ -70,7 +70,7 @@ class _RouteTable:
     mixing copied matrices with a shared route dict is what this type
     exists to prevent."""
 
-    __slots__ = ("lat", "ibw", "routes", "built", "edge_ids")
+    __slots__ = ("lat", "ibw", "routes", "built", "edge_ids", "fast")
 
     def __init__(self, D: int) -> None:
         self.lat = np.full((D, D), np.inf)
@@ -80,6 +80,11 @@ class _RouteTable:
         self.built = np.zeros(D, dtype=bool)
         # ids of every EdgeAttr any built route crosses (delta prefilter)
         self.edge_ids: set[int] = set()
+        # rows built by the batched builder: row -> (predecessor array
+        # over the global node space, sorted edge ordinals the row's
+        # shortest-path tree crosses).  Their concrete EdgeAttr route
+        # lists materialize per pair on first route_edges() access.
+        self.fast: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
     def copy(self) -> "_RouteTable":
         c = object.__new__(_RouteTable)
@@ -88,7 +93,80 @@ class _RouteTable:
         c.routes = dict(self.routes)
         c.built = self.built.copy()
         c.edge_ids = set(self.edge_ids)
+        c.fast = dict(self.fast)
         return c
+
+
+def _have_scipy() -> bool:
+    global _SCIPY
+    if _SCIPY is None:
+        try:
+            from scipy.sparse.csgraph import dijkstra  # noqa: F401
+            _SCIPY = True
+        except Exception:                # pragma: no cover - no scipy
+            _SCIPY = False
+    return _SCIPY
+
+
+_SCIPY: Optional[bool] = None
+
+
+class _FastRouteCtx:
+    """Shared state of the batched route-row builder for one snapshot:
+    the integer-compressed alive adjacency (a scipy CSR weight matrix),
+    per-directed-pair best-edge value arrays, and gather tables over the
+    edge-ordinal space.
+
+    Node indices follow ``list(graph.nodes)`` order and edge ordinals
+    enumerate ``CompiledHWGraph._best_edge`` insertion order — both are
+    stable across ``apply_delta`` clones of one compile, so predecessor
+    arrays and ordinal sets stored in the route table stay meaningful
+    after the ctx itself is dropped.  The weight matrix bakes in
+    aliveness (edges into dead nodes are absent, exactly the neighbors
+    ``HWGraph.sssp`` skips), so ``_clone`` pops the ctx and the next
+    batch build re-derives it against the post-delta graph."""
+
+    __slots__ = ("idx", "N", "keys", "hlat", "hibw", "kord", "ord_ids",
+                 "W", "r_idx")
+
+    def __init__(self, comp: "CompiledHWGraph") -> None:
+        from scipy.sparse import csr_matrix
+        g = comp.graph
+        names, idx = comp._node_space()
+        self.idx = idx
+        self.N = N = len(names)
+        alive = np.fromiter((g.nodes[n].alive for n in names), bool, N)
+        ord_edges = comp._edge_ord_edges()
+        key_l: list[int] = []
+        w_l: list[float] = []
+        hl_l: list[float] = []
+        hb_l: list[float] = []
+        ko_l: list[int] = []
+        for o, ((a, b), e) in enumerate(comp._best_edge.items()):
+            bi = idx[b]
+            if not alive[bi]:
+                continue
+            key_l.append(idx[a] * N + bi)
+            # the exact sssp() weight rule: zero-latency hops cost 1e-9
+            w_l.append(e.latency if e.latency > 0 else 1e-9)
+            hl_l.append(e.latency)
+            bw = e.bandwidth
+            hb_l.append(0.0 if bw == float("inf") else 1.0 / bw)
+            ko_l.append(o)
+        keys = np.asarray(key_l, dtype=np.int64)
+        order = np.argsort(keys, kind="stable")
+        self.keys = keys[order]
+        self.hlat = np.asarray(hl_l)[order]
+        self.hibw = np.asarray(hb_l)[order]
+        self.kord = np.asarray(ko_l, dtype=np.int64)[order]
+        w = np.asarray(w_l)[order]
+        self.W = csr_matrix((w, (self.keys // N, self.keys % N)),
+                            shape=(N, N))
+        self.ord_ids = np.fromiter((id(e) for e in ord_edges),
+                                   dtype=np.int64, count=len(ord_edges))
+        self.r_idx = np.fromiter((idx[nm] for nm in comp.routable_names),
+                                 dtype=np.int64,
+                                 count=len(comp.routable_names))
 
 
 class CompiledHWGraph:
@@ -239,20 +317,153 @@ class CompiledHWGraph:
 
     def _ensure_row(self, i: int) -> None:
         if not self._rt.built[i]:
-            self._rebuild_route_row(i)
+            if _have_scipy():
+                self._build_rows_fast([i])
+            else:
+                self._rebuild_route_row(i)
+
+    def _node_space(self) -> tuple[list, dict]:
+        """Global node name list / index map in ``graph.nodes`` order —
+        the coordinate space of fast-row predecessor arrays.  Stable
+        across ``apply_delta`` clones (node additions force a full
+        recompile), so it is built once per compile family and shared."""
+        ns = self.__dict__.get("_node_names")
+        if ns is None:
+            ns = self._node_names = list(self.graph.nodes)
+            self._node_idx = {n: k for k, n in enumerate(ns)}
+        return ns, self._node_idx
+
+    def _edge_ord_edges(self) -> list:
+        """EdgeAttr per edge ordinal (``_best_edge`` insertion order) —
+        the coordinate space of fast-row crossed-edge sets."""
+        el = self.__dict__.get("_edge_ords_list")
+        if el is None:
+            el = self._edge_ords_list = list(self._best_edge.values())
+        return el
+
+    def _fast_ctx(self) -> _FastRouteCtx:
+        ctx = self.__dict__.get("_fast_route_ctx")
+        if ctx is None:
+            ctx = self._fast_route_ctx = _FastRouteCtx(self)
+        return ctx
 
     def ensure_routes(self, srcs) -> int:
         """Batch-materialize the route rows of ``srcs`` (names or indices);
         returns how many rows were actually built.  Used to warm exactly
         the rows a workload will touch (e.g. every origin device of a
-        submitted TaskGraph) in one pass."""
-        built = 0
+        submitted TaskGraph) in one pass.  With scipy present every build
+        goes through the batched builder (one multi-source Dijkstra — its
+        per-call setup amortizes even for a single row on fleet-sized
+        graphs); the per-row heapq path remains the no-scipy fallback."""
+        idxs: list[int] = []
+        seen: set[int] = set()
         for s in srcs:
             i = self.routable_index.get(s) if isinstance(s, str) else int(s)
-            if i is not None and not self._rt.built[i]:
+            if i is None or i in seen or self._rt.built[i]:
+                continue
+            seen.add(i)
+            idxs.append(i)
+        if idxs and _have_scipy():
+            self._build_rows_fast(idxs)
+        else:
+            for i in idxs:
                 self._rebuild_route_row(i)
-                built += 1
-        return built
+        return len(idxs)
+
+    def _build_rows_fast(self, idxs: list) -> None:
+        """Materialize many route rows at once: one multi-source scipy
+        Dijkstra over the alive adjacency, then a vectorized
+        predecessor-tree accumulation per row.
+
+        Bitwise parity with ``_rebuild_route_row``: per-hop latencies
+        accumulate source-outward — the same left-to-right order as the
+        oracle's ``sum(e.latency ...)`` — and the bottleneck inverse
+        bandwidth is a running max of reciprocals, bit-identical to
+        ``1/min(bandwidths)`` for positive floats
+        (tests/test_compiled.py asserts both).  Where equal-latency
+        shortest paths exist the predecessor tree may pick a different
+        tie member than the heapq oracle — the same caveat as delta
+        route repair; latency/bandwidth values are exact either way."""
+        from scipy.sparse.csgraph import dijkstra
+        ctx = self._fast_ctx()
+        g = self.graph
+        si = np.fromiter((ctx.idx[self.routable_names[i]] for i in idxs),
+                         dtype=np.int64, count=len(idxs))
+        dist, pred = dijkstra(ctx.W, directed=True, indices=si,
+                              return_predecessors=True)
+        dist = np.atleast_2d(dist)
+        pred = np.atleast_2d(pred)
+        for k, i in enumerate(idxs):
+            self._fill_fast_row(i, int(si[k]), dist[k], pred[k], ctx)
+            g.route_row_builds += 1
+
+    def _fill_fast_row(self, i: int, s: int, d: np.ndarray, p: np.ndarray,
+                       ctx: _FastRouteCtx) -> None:
+        rt = self._rt
+        if rt.built[i]:
+            # rebuilds only: a fresh row has no stale materialized routes
+            for j in range(len(self.routable_names)):
+                rt.routes.pop((i, j), None)
+            rt.fast.pop(i, None)
+        rt.built[i] = True
+        reach = np.isfinite(d)
+        reach[s] = False
+        vs = np.flatnonzero(reach)
+        if not vs.size:
+            rt.lat[i, :] = np.inf
+            rt.lat[i, i] = 0.0
+            rt.ibw[i, :] = 0.0
+            return
+        # per reachable node: its tree edge (pred -> node), gathered from
+        # the sorted directed-pair key table
+        pv = p[vs].astype(np.int64)
+        pos = np.searchsorted(ctx.keys, pv * ctx.N + vs)
+        el = ctx.hlat[pos]
+        eb = ctx.hibw[pos]
+        lat_to = np.zeros(ctx.N)
+        ibw_to = np.zeros(ctx.N)
+        known = np.zeros(ctx.N, dtype=bool)
+        known[s] = True
+        rem = np.arange(vs.size)
+        while rem.size:
+            ready = known[pv[rem]]
+            sel = rem[ready]
+            v = vs[sel]
+            lat_to[v] = lat_to[pv[sel]] + el[sel]
+            ibw_to[v] = np.maximum(ibw_to[pv[sel]], eb[sel])
+            known[v] = True
+            rem = rem[~ready]
+        fin = known[ctx.r_idx]
+        rt.lat[i, :] = np.where(fin, lat_to[ctx.r_idx], np.inf)
+        rt.lat[i, i] = 0.0
+        rt.ibw[i, :] = np.where(fin, ibw_to[ctx.r_idx], 0.0)
+        rt.ibw[i, i] = 0.0
+        ue = np.unique(ctx.kord[pos])
+        rt.fast[i] = (p, ue)
+        rt.edge_ids.update(ctx.ord_ids[ue].tolist())
+
+    def _route_from_fast(self, i: int, j: int) -> Optional[list]:
+        """Materialize the concrete EdgeAttr route of pair ``(i, j)`` from
+        fast row ``i``'s stored predecessor tree (first route_edges hit)."""
+        fast = self._rt.fast.get(i)
+        if fast is None:
+            return None
+        names, idx = self._node_space()
+        s = idx[self.routable_names[i]]
+        p = fast[0]
+        seq = [idx[self.routable_names[j]]]
+        while seq[-1] != s:
+            a = int(p[seq[-1]])
+            if a < 0:
+                return None
+            seq.append(a)
+        seq.reverse()
+        edges = [self._best_edge[(names[a], names[b])]
+                 for a, b in zip(seq, seq[1:])]
+        rt = self._rt
+        rt.routes[(i, j)] = edges
+        rt.edge_ids.update(id(e) for e in edges)
+        return edges
 
     def _rebuild_route_row(self, i: int) -> None:
         """(Re)compute all routes from source ``i`` against the current
@@ -265,6 +476,7 @@ class CompiledHWGraph:
         rt.ibw[i, :] = 0.0
         for j in range(len(self.routable_names)):
             rt.routes.pop((i, j), None)
+        rt.fast.pop(i, None)
         rt.built[i] = True
         g.route_row_builds += 1
         if not g._adj[src]:
@@ -333,6 +545,8 @@ class CompiledHWGraph:
             return []
         self._ensure_row(i)
         edges = self._rt.routes.get((i, j))
+        if edges is None and np.isfinite(self._rt.lat[i, j]):
+            edges = self._route_from_fast(i, j)
         if edges is None:
             raise KeyError(f"no path {src} -> {dst}")
         return edges
@@ -364,6 +578,8 @@ class CompiledHWGraph:
         c = object.__new__(CompiledHWGraph)
         c.__dict__.update(self.__dict__)
         c.version = self.version + 1
+        # the batched-builder ctx bakes in aliveness; re-derive post-delta
+        c.__dict__.pop("_fast_route_ctx", None)
         return c
 
     def _delta_bandwidth(self, edge_name: str) -> "CompiledHWGraph":
@@ -379,6 +595,18 @@ class CompiledHWGraph:
             if any(e.name == edge_name for e in edges):
                 bw = min((e.bandwidth for e in edges), default=float("inf"))
                 rt.ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+        if rt.fast:
+            # a fast-built row's unmaterialized pairs read ibw straight
+            # from the stored row: if the row's shortest-path tree crosses
+            # the renamed link, demote the whole row to unbuilt so the
+            # rebuild reads the live bandwidth
+            name_ords = np.asarray(
+                [o for o, e in enumerate(self._edge_ord_edges())
+                 if e.name == edge_name], dtype=np.int64)
+            if name_ords.size:
+                for i, (_, eords) in list(rt.fast.items()):
+                    if bool(np.isin(name_ords, eords).any()):
+                        c._invalidate_row(i)
         return c
 
     def _delta_alive(self, alive: bool,
@@ -579,6 +807,21 @@ class CompiledHWGraph:
                 rt.lat[r, r] = 0.0
         for i in stale:
             self._invalidate_row(i)
+        # fast rows: unmaterialized pairs transiting the dead subtree are
+        # exactly those whose predecessor chain passes a dead node as an
+        # interior tree node (a dead node that is only a tree leaf serves
+        # pairs *ending* there, which the column wipe already handles —
+        # and a dead *source* keeps routing outward, like the object path)
+        if rt.fast:
+            _, idx = self._node_space()
+            da = np.asarray([idx[n] for n in names if n in idx],
+                            dtype=np.int64)
+            if da.size:
+                for i, (p, _) in list(rt.fast.items()):
+                    si = idx[self.routable_names[i]]
+                    hit = da[np.isin(da, p)]
+                    if any(int(x) != si for x in hit):
+                        self._invalidate_row(i)
         return True
 
     def _invalidate_row(self, i: int) -> None:
@@ -590,6 +833,7 @@ class CompiledHWGraph:
         rt.ibw[i, :] = 0.0
         for j in range(len(self.routable_names)):
             rt.routes.pop((i, j), None)
+        rt.fast.pop(i, None)
 
     def summary(self) -> str:
         P = len(self.pu_names)

@@ -39,6 +39,7 @@ array ops over the compiled snapshot and the ledger columns.
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 from dataclasses import dataclass
 from typing import Iterable, Optional, Sequence
@@ -50,6 +51,19 @@ from .task import Task
 from .traverser import TaskPrediction, Traverser
 
 QUERY_BYTES = 1024.0          # size of a MapTask query/response message
+
+_SCAN_REDUCE = None
+
+
+def _scan_reduce_kernel():
+    """Lazily bind ``kernels.walk_kernel.scan_reduce`` — importing the
+    kernels package pulls in jax, which mapping-only flows should pay at
+    most once (and never at plain module import)."""
+    global _SCAN_REDUCE
+    if _SCAN_REDUCE is None:
+        from ..kernels.walk_kernel import scan_reduce
+        _SCAN_REDUCE = scan_reduce
+    return _SCAN_REDUCE
 
 
 @dataclass
@@ -214,6 +228,17 @@ class ActiveLedger:
         return self._count.get(pu, 0)
 
     # -- array views -------------------------------------------------------
+    def _fill_pu_idx(self, comp) -> None:
+        """(Re)fill the compiled-index column for this snapshot family —
+        ``add`` keeps it current incrementally afterwards (pu_index dicts
+        are shared across delta clones, so it survives topology patches)."""
+        if self._pu_idx_comp is not comp.pu_index:
+            self._pu_idx_comp = comp.pu_index
+            for i in range(self._n):
+                pu = self._pus[i]
+                self._pu_idx[i] = (comp.pu_index.get(pu, -1)
+                                   if pu is not None else -1)
+
     def _device_rows(self, comp) -> dict[str, list[int]]:
         if self._dev_rows is None:
             dev_of = self._pu_dev
@@ -240,8 +265,8 @@ class ActiveLedger:
         r = np.fromiter(rows, dtype=np.int64, count=len(rows))
         v.rows = r
         v.pu_names = [self._pus[i] for i in rows]
-        v.P = np.fromiter((comp.pu_index[p] for p in v.pu_names),
-                          dtype=np.int64, count=len(rows))
+        self._fill_pu_idx(comp)
+        v.P = self._pu_idx[r]
         v.est = self._est[r]
         v.fac = self._fac[r]
         v.dl = self._dl[r]
@@ -274,13 +299,7 @@ class ActiveLedger:
         cached = self._live_view
         if cached is not None and cached[0] is comp and cached[1] == self.version:
             return cached[2]
-        if self._pu_idx_comp is not comp.pu_index:
-            # (re)fill the compiled-index column for this snapshot family
-            self._pu_idx_comp = comp.pu_index
-            for i in range(self._n):
-                pu = self._pus[i]
-                self._pu_idx[i] = (comp.pu_index.get(pu, -1)
-                                   if pu is not None else -1)
+        self._fill_pu_idx(comp)
         v = _LedgerView()
         r = np.nonzero(self._live[:self._n])[0]
         P = self._pu_idx[r]
@@ -358,6 +377,64 @@ class _StaticScore:
                  "maxten", "single_dev")
 
 
+class _ScanPlan:
+    """One ORC subtree lowered to arrays: the preorder node list of a scan
+    root with per-node subtree PU ranges, leaf/child counts, summed hop
+    costs and depths — everything ``kernels.walk_kernel.scan_reduce`` needs
+    to replay Alg. 1's TraverseChildren accounting in closed form.  Built
+    lazily per compiled snapshot (hop costs are snapshot functions)."""
+
+    __slots__ = ("pus", "pu_lo", "pu_hi", "leafcnt", "nchild", "hopsum",
+                 "depth", "leaf_groups", "devs", "dev_ranges", "dev_sublists")
+
+
+class _ChildPlan:
+    """One ORC's children lowered for the AskParent sibling scan: every
+    child subtree concatenated into one candidate list, with per-child
+    slice bounds and the running hop-cost prefix Alg. 1 charges while
+    iterating siblings.  One plan serves every asking child (the asker's
+    own slice is masked out at selection time), so its scan state — and
+    the kernel work behind it — is shared across all escalations through
+    this parent."""
+
+    __slots__ = ("children", "child_pos", "pus", "bounds", "hc",
+                 "hop_prefix", "devs", "dev_ranges", "dev_sublists",
+                 "leaf_groups")
+
+
+class _ScanState:
+    """The origin-independent core of one (task core, candidate list)
+    scan — eligibility+l.15 feasibility, standalone, factor and additive
+    tenancy-wait columns — plus the freshness stamps that tell a later
+    walk which device segments an intervening commit invalidated.
+
+    Everything origin-dependent (the comm column, the deadline mask) is
+    layered on per task signature by ``Orchestrator._effective``, so all
+    signatures sharing a core (same kind/size/usage/compute attrs) share
+    one state and one set of kernel calls."""
+
+    __slots__ = ("ok", "sa", "f", "wait", "epoch", "stamps", "log_pos")
+
+    def __init__(self, n: int) -> None:
+        self.ok = np.zeros(n, dtype=bool)
+        self.sa = np.full(n, np.inf)
+        self.f = np.ones(n)
+        self.wait = np.zeros(n)
+
+
+class _Walk:
+    """One deduplicated phase-1 walk being wave-stepped through Alg. 1."""
+
+    __slots__ = ("orc", "task", "cur", "scored", "res")
+
+    def __init__(self, orc: "Orchestrator", task: Task) -> None:
+        self.orc = orc
+        self.task = task
+        self.cur = orc          # the ORC whose parent is asked next
+        self.scored: set = set()
+        self.res: Optional["MapResult"] = None
+
+
 class _BatchContext:
     """Per-``map_batch`` caches shared by every walk in one frontier.
 
@@ -377,16 +454,38 @@ class _BatchContext:
         self._views: dict = {}
         self._static: dict = {}
         self._sigs: dict = {}
-        # phase-1 wave prescore: (task sig, candidate-list id) -> results
-        # computed against the frozen ledger by one multi-newcomer kernel
-        # call; MUST be dropped before phase-2 commits (stale thereafter)
-        self.prescored: dict = {}
+        self._cores: dict = {}
+        self._mkeys: dict = {}
+        self._puidx: dict = {}
+        self._static_core: dict = {}
+        # fused-walk scan states: (task sig, candidate-list id) -> _ScanState
+        # holding that scan's constraint-check results plus freshness stamps;
+        # commits splice in per-device refreshes instead of rescanning
+        self.scan_states: dict = {}
+        # per-(task sig, plan) effective columns (ok/cm/key), patched per
+        # committed device on reuse — small FIFO, re-walk runs of equal
+        # signatures dominate its hit pattern
+        self.eff_cache: dict = {}
+        # canonical-pattern cache of single-device core checks (splices):
+        # (core sig, canonical device state) -> (ok, sa, f, wait) columns
+        self.splice_cache: dict = {}
+        # device name of every phase-2 commit, in order; scan states refresh
+        # exactly the suffix committed since they last looked
+        self.commit_log: list[str] = []
+        # teach the ledger every PU's device up front so commits bump only
+        # their device's version (not the global epoch) — the fine-grained
+        # signal the tracked scan states key their splices on
+        ledger._pu_dev.update(comp._pu_device_name)
 
     def _model_key(self, task: Task) -> tuple:
-        return (task.kind, task.size,
-                tuple((k, task.attrs[k]) for k in ("flops", "bytes",
-                                                   "coll_bytes")
-                      if k in task.attrs))
+        hit = self._mkeys.get(id(task))
+        if hit is None:
+            hit = ((task.kind, task.size,
+                    tuple((k, task.attrs[k]) for k in ("flops", "bytes",
+                                                       "coll_bytes")
+                          if k in task.attrs)), task)
+            self._mkeys[id(task)] = hit     # task ref keeps the id stable
+        return hit[0]
 
     def supports_mask(self, task: Task) -> np.ndarray:
         key = self._model_key(task)
@@ -422,13 +521,94 @@ class _BatchContext:
             self._comm[key] = c
         return c
 
+    def core_sig(self, task: Task) -> tuple:
+        """The origin-independent slice of :meth:`task_sig`: exactly the
+        fields the eligibility and factor/constraint kernels read (kind,
+        size, usage, compute attrs — plus origin for pinned tasks, whose
+        candidate set it restricts).  Signatures sharing a core produce
+        bit-identical core scan columns, so they share one tracked scan
+        state; comm and deadline are layered back on per signature."""
+        sig = self._cores.get(id(task))
+        if sig is None:
+            pinned = bool(task.attrs.get("pinned"))
+            s = (task.kind, task.size, pinned,
+                 task.origin if pinned else None,
+                 tuple(sorted(task.usage.items())),
+                 tuple((k, task.attrs[k]) for k in ("flops", "bytes",
+                                                    "coll_bytes")
+                       if k in task.attrs))
+            sig = (s, task)
+            self._cores[id(task)] = sig     # task ref keeps the id stable
+        return sig[0]
+
+    def pu_idx(self, pu_names: list[str]) -> np.ndarray:
+        """Compiled PU ordinal (or -1) per name, cached per candidate
+        list — walk plans re-scan the same lists for every signature.
+        The cached entry holds the list itself so its id stays live."""
+        key = id(pu_names)
+        hit = self._puidx.get(key)
+        if hit is None:
+            idx = np.fromiter(
+                (self.comp.pu_index.get(p, -1) for p in pu_names),
+                dtype=np.int64, count=len(pu_names))
+            hit = (idx, pu_names)
+            self._puidx[key] = hit
+        return hit[0]
+
     def view(self, dev: str) -> _LedgerView:
         led = self.ledger
         key = (dev, led.dev_epoch, led.dev_version.get(dev, 0))
         v = self._views.get(key)
         if v is None:
-            v = led.device_view(self.comp, dev)
+            prev = self._views.get((dev, key[1], key[2] - 1))
+            if prev is not None:
+                # a device-version bump within one epoch is exactly one
+                # ledger add: extend the previous view by that row instead
+                # of re-gathering every column.  Release times are frozen
+                # within one map_batch (overhead is charged by the session
+                # after the batch returns), so the copied rel column stays
+                # live-accurate for this context's lifetime
+                v = self._extend_view(prev, dev)
+            if v is None:
+                v = led.device_view(self.comp, dev)
             self._views[key] = v
+        return v
+
+    def _extend_view(self, prev: _LedgerView,
+                     dev: str) -> Optional[_LedgerView]:
+        led = self.ledger
+        comp = self.comp
+        rows = led._device_rows(comp).get(dev)
+        if rows is None or len(rows) != len(prev.rows) + 1:
+            return None
+        led._fill_pu_idx(comp)
+        i = rows[-1]
+        pidx = int(led._pu_idx[i])
+        if pidx < 0:
+            return None
+        v = _LedgerView()
+        v.rows = np.append(prev.rows, i)
+        v.pu_names = prev.pu_names + [led._pus[i]]
+        v.P = np.append(prev.P, pidx)
+        v.est = np.append(prev.est, led._est[i])
+        v.fac = np.append(prev.fac, led._fac[i])
+        v.dl = np.append(prev.dl, led._dl[i])
+        v.upu = np.append(prev.upu, led._upu[i])
+        umem = led._umem[i]
+        v.umem = np.append(prev.umem, umem)
+        v.Ma = np.append(prev.Ma, min(umem, comp.mem_cap[pidx]))
+        v.uid = np.append(prev.uid, led._uid[i])
+        t = led._tasks[i]
+        v.tasks = prev.tasks + [t]
+        v.rel = np.append(prev.rel, t.release_time)
+        o = comp.dev_ord.get(dev)
+        v.na = prev.na.copy()
+        v.astart = prev.astart
+        if o is not None:
+            v.na[o] = len(rows)
+            v.Da = np.full(len(rows), o, dtype=np.int64)
+        else:
+            v.Da = np.zeros(len(rows), dtype=np.int64)
         return v
 
     def task_sig(self, task: Task) -> tuple:
@@ -451,6 +631,21 @@ class _BatchContext:
             self._static[key] = hit
         return hit[0]
 
+    def static_core(self, orc: "Orchestrator", task: Task,
+                    pu_names: list[str]) -> _StaticScore:
+        """Like :meth:`static_score` but keyed by the task *core* and
+        without the (origin-dependent) comm column — the inputs of the
+        shared core scan states, computed once per core instead of once
+        per signature."""
+        key = (self.core_sig(task), id(pu_names))
+        hit = self._static_core.get(key)
+        if hit is None:
+            hit = (orc._static_score(task, pu_names, self.comp, self,
+                                     skip_comm=True),
+                   pu_names)
+            self._static_core[key] = hit
+        return hit[0]
+
 
 class Orchestrator:
     def __init__(self, graph: HWGraph, group: str, traverser: Traverser,
@@ -467,6 +662,8 @@ class Orchestrator:
         self._device_orcs: Optional[dict[str, "Orchestrator"]] = None
         self._subtree_pus_cache: Optional[list[str]] = None
         self._hop_cache: Optional[tuple] = None
+        self._plan_cache: Optional[tuple] = None   # (comp, _ScanPlan)
+        self._child_cache: Optional[tuple] = None  # (comp, _ChildPlan)
 
     # -- hierarchy ----------------------------------------------------------
     def add_child(self, child: "Orchestrator") -> "Orchestrator":
@@ -476,6 +673,8 @@ class Orchestrator:
         while node is not None:
             node._device_orcs = None
             node._subtree_pus_cache = None
+            node._plan_cache = None
+            node._child_cache = None
             node = node.parent
         return child
 
@@ -491,6 +690,30 @@ class Orchestrator:
 
     def is_device_orc(self) -> bool:
         return bool(self.leaf_pus)
+
+    def prepare(self, comp=None) -> "Orchestrator":
+        """Prebuild the compiled scan/child plans of the whole ORC tree
+        against ``comp`` (default: the graph's current snapshot).
+
+        Pure one-time lowering work — the plans are cached per snapshot
+        either way — so callers that construct the tree ahead of time
+        (sessions, benchmarks) keep it out of the first mapping wave."""
+        if comp is None:
+            comp = self.graph.compiled()
+        for orc in self.iter_tree():
+            orc._scan_plan(comp)
+            if orc.children:
+                orc._child_plan(comp)
+        return self
+
+    # -- canonical factor-cache visibility (bench JSON / CI smoke) ----------
+    @property
+    def factor_cache_hits(self) -> int:
+        return int(getattr(self.traverser.slowdown, "factor_cache_hits", 0))
+
+    @property
+    def factor_cache_misses(self) -> int:
+        return int(getattr(self.traverser.slowdown, "factor_cache_misses", 0))
 
     def __repr__(self) -> str:
         return f"ORC({self.group})"
@@ -522,48 +745,75 @@ class Orchestrator:
                if len(tasks) > 1 else None)
         sd = self.traverser.slowdown
         noisy = bool(getattr(sd, "_noisy", lambda: False)())
-        # multi-newcomer prescore (ROADMAP phase-1 follow-up): one
-        # block-diagonal kernel call scores the entry-level candidate set
-        # of every distinct task signature in the wave; the walks below
-        # consume the cached results instead of issuing per-signature
-        # kernel calls
-        if (ctx is not None and not noisy
-                and hasattr(sd, "factors_same_device_multi")):
-            self._prescore_wave(tasks, now, ctx, route)
+        # fused wave-batched walk: lowers Alg. 1's recursion to scan plans
+        # + one closed-form reduce per scan, wave-batching the constraint
+        # checks of each escalation depth into one multi-newcomer kernel
+        # call.  Gated to the deterministic batch path: noisy models need
+        # the scalar rng stream order and first_fit the early-return walk.
+        fast = (ctx is not None and not noisy
+                and self.config.objective != "first_fit"
+                and hasattr(sd, "factors_same_device_multi")
+                and os.environ.get("REPRO_FUSED_WALK", "1") != "0")
         # phase 1: optimistic walks against the frozen ledger, deduped by
         # task signature (identical tasks walk once; commits are replayed
         # per task in phase 2)
-        phase1: dict = {}
         tentative: list[tuple["Orchestrator", Optional[MapResult], set]] = []
-        for t in tasks:
-            orc = self._entry_orc(t) if route else self
-            key = None if noisy else self._task_signature(orc, t)
-            hit = phase1.get(key) if key is not None else None
-            if hit is not None:
-                res0, scored = hit
-                res = (dataclasses.replace(res0)
-                       if res0 is not None else None)
-            else:
-                scored = set()
-                res = orc._map_once(t, now, ctx, scored)
-                if key is not None:
-                    phase1[key] = (res, scored)
-            tentative.append((orc, res, scored))
+        if fast:
+            walks = self._walk_wave(tasks, now, ctx, route)
+            for t in tasks:
+                orc = self._entry_orc(t) if route else self
+                w = walks[self._task_signature(orc, t)]
+                res = (dataclasses.replace(w.res)
+                       if w.res is not None else None)
+                tentative.append((orc, res, w.scored))
+        else:
+            phase1: dict = {}
+            for t in tasks:
+                orc = self._entry_orc(t) if route else self
+                key = None if noisy else self._task_signature(orc, t)
+                hit = phase1.get(key) if key is not None else None
+                if hit is not None:
+                    res0, scored = hit
+                    res = (dataclasses.replace(res0)
+                           if res0 is not None else None)
+                else:
+                    scored = set()
+                    res = orc._map_once(t, now, ctx, scored)
+                    if key is not None:
+                        phase1[key] = (res, scored)
+                tentative.append((orc, res, scored))
         # phase 2: ordered commit; re-walk when the optimistic result is
         # stale (an earlier commit landed on a device this walk scored).
-        # The prescore cache reflects the frozen ledger — drop it so
-        # re-walks score against the committed state.
-        if ctx is not None:
-            ctx.prescored = {}
+        # Fast re-walks splice only the committed devices' segments back
+        # into the tracked scans (the commit log tells each scan exactly
+        # which suffix of commits it has not seen yet).
         dirty: set[str] = set()
         out: list[Optional[MapResult]] = []
-        for t, (orc, res, scored) in zip(tasks, tentative):
+        warmed = not fast
+        for i, (t, (orc, res, scored)) in enumerate(zip(tasks, tentative)):
             if dirty and not dirty.isdisjoint(scored):
-                res = orc._map_once(t, now, ctx, set())
+                if not warmed:
+                    # first re-walk of the batch: warm the comm-LUT route
+                    # rows of every task still to commit in one batched
+                    # Dijkstra instead of one lazy row build per re-walk
+                    er = getattr(comp, "ensure_routes", None)
+                    if er is not None:
+                        warm: set = set()
+                        for t2 in tasks[i:]:
+                            if t2.origin is not None:
+                                warm.add(t2.origin)
+                            warm.update(t2.attrs.get("src_devices") or ())
+                        er(warm)
+                    warmed = True
+                res = (orc._map_once_fast(t, now, ctx, None) if fast
+                       else orc._map_once(t, now, ctx, set()))
             if res is not None and commit:
                 self.ledger.add(t, res.pu, res.prediction, now)
                 t.assigned_pu = res.pu
-                dirty.add(comp.device_name(res.pu))
+                dev = comp.device_name(res.pu)
+                dirty.add(dev)
+                if ctx is not None:
+                    ctx.commit_log.append(dev)
             out.append(res)
         return out
 
@@ -579,55 +829,468 @@ class Orchestrator:
         warnings.warn(
             "Orchestrator.map_task is deprecated: map frontiers with "
             "map_batch(...) or drive whole TaskGraphs through "
-            "core.session.SchedulerSession",
+            "core.session.SchedulerSession.submit(...)",
             DeprecationWarning, stacklevel=2)
         return self.map_batch([task], now, commit=commit)[0]
 
-    def _prescore_wave(self, tasks: list, now: float, ctx: "_BatchContext",
-                       route: bool) -> None:
-        """Phase-1 multi-newcomer scoring: batch the entry-level
-        constraint check of every distinct task signature in the wave
-        into one ``factors_same_device_multi`` kernel call.
+    # -- fused wave-batched walk (the array lowering of Alg. 1) --------------
+    def _scan_plan(self, comp) -> _ScanPlan:
+        """This ORC's subtree lowered to scan arrays (cached per snapshot)."""
+        cache = self._plan_cache
+        if cache is not None and cache[0] is comp:
+            return cache[1]
+        p = _ScanPlan()
+        p.pus = self._subtree_pus()
+        pu_lo: list[int] = []
+        pu_hi: list[int] = []
+        leafcnt: list[int] = []
+        nchild: list[int] = []
+        hopsum: list[float] = []
+        depth: list[int] = []
+        p.leaf_groups = []
+        p.devs = []
+        p.dev_ranges = {}
+        p.dev_sublists = {}
+        cursor = 0
 
-        Each signature's first ``_check_candidates`` call (the fused
-        subtree/device check its Alg. 1 walk opens with) then hits
-        ``ctx.prescored`` instead of running its own kernel call.  The
-        cached results are built by the same ``_score_fused`` logic from
-        the same static inputs and ledger views, so they are
-        bit-identical to what the walk would have computed."""
-        sd = self.traverser.slowdown
+        def build(orc: "Orchestrator", d: int) -> None:
+            nonlocal cursor
+            i = len(pu_lo)
+            pu_lo.append(cursor)
+            pu_hi.append(0)          # patched after the subtree is laid out
+            n_leaf = len(orc.leaf_pus)
+            leafcnt.append(n_leaf)
+            nchild.append(len(orc.children))
+            depth.append(d)
+            h = 0.0
+            for c in orc.children:
+                h += orc._hop_cost(c)
+            hopsum.append(h)
+            if n_leaf:
+                p.leaf_groups.append(orc.group)
+                p.devs.append(orc.group)
+                p.dev_ranges[orc.group] = (cursor, cursor + n_leaf)
+                p.dev_sublists[orc.group] = orc.leaf_pus
+            cursor += n_leaf
+            for c in orc.children:
+                build(c, d + 1)
+            pu_hi[i] = cursor
+
+        build(self, 0)
+        p.pu_lo = np.asarray(pu_lo, dtype=np.int64)
+        p.pu_hi = np.asarray(pu_hi, dtype=np.int64)
+        p.leafcnt = np.asarray(leafcnt, dtype=np.int64)
+        p.nchild = np.asarray(nchild, dtype=np.int64)
+        p.hopsum = np.asarray(hopsum)
+        p.depth = np.asarray(depth, dtype=np.float64)
+        self._plan_cache = (comp, p)
+        return p
+
+    def _child_plan(self, comp) -> _ChildPlan:
+        """Every child subtree concatenated into one AskParent candidate
+        list (cached per snapshot).  All asking children share this one
+        plan — and therefore one tracked scan state per task signature —
+        with the asker's own slice masked out at selection time."""
+        cache = self._child_cache
+        if cache is not None and cache[0] is comp:
+            return cache[1]
+        cp = _ChildPlan()
+        cp.children = list(self.children)
+        cp.child_pos = {id(c): i for i, c in enumerate(cp.children)}
+        cp.pus = []
+        cp.devs = []
+        cp.dev_ranges = {}
+        cp.dev_sublists = {}
+        cp.leaf_groups = []
+        bounds = [0]
+        hc = []
+        prefix = []
+        running = 0.0
+        for c in cp.children:
+            plan = c._scan_plan(comp)
+            lo = len(cp.pus)
+            cp.pus.extend(plan.pus)
+            bounds.append(lo + len(plan.pus))
+            h = self._hop_cost(c)
+            hc.append(h)
+            running += h
+            prefix.append(running)
+            for dev, (a, b) in plan.dev_ranges.items():
+                cp.dev_ranges[dev] = (lo + a, lo + b)
+                cp.dev_sublists[dev] = plan.dev_sublists[dev]
+            cp.devs.extend(plan.devs)
+            cp.leaf_groups.extend(plan.leaf_groups)
+        cp.bounds = np.asarray(bounds, dtype=np.int64)
+        cp.hc = np.asarray(hc)
+        cp.hop_prefix = prefix
+        self._child_cache = (comp, cp)
+        return cp
+
+    def _check_arrays(self, task: Task, pu_names: list[str], now: float,
+                      ctx: "_BatchContext") -> tuple:
+        """Fused core check returning dense (ok, sa, f, wait) columns over
+        ``pu_names`` (ineligible rows keep the infeasible defaults) —
+        origin-independent, see :class:`_ScanState`.
+
+        Single-device checks — the shape of every commit splice — are
+        additionally cached by the device's *canonical* occupancy pattern
+        (the slowdown kernel's structural key extended with everything
+        else the constraint blocks read: active finish/factor/deadline/
+        release columns, the candidates' standalone/tenancy inputs and
+        the check instant).  Replicated fleets then pay one real check
+        per occupancy stage instead of one per device."""
+        n = len(pu_names)
+        static = ctx.static_core(self, task, pu_names)
+        cols = static.cols
+        ck = None
+        if len(cols) and static.single_dev is not None:
+            sd = self.traverser.slowdown
+            canon = getattr(sd, "_canon_key", None)
+            if canon is not None:
+                view = ctx.view(static.single_dev)
+                key, _ = canon(ctx.comp, task, static.cand_idx,
+                               static.cand_dev, view.P, view.upu, view.Ma,
+                               view.uid, view.astart, view.na)
+                if key is not None:
+                    ck = (ctx.core_sig(task), key, n, now,
+                          cols.tobytes(), static.sa.tobytes(),
+                          static.maxten.tobytes(), view.est.tobytes(),
+                          view.fac.tobytes(), view.dl.tobytes(),
+                          view.rel.tobytes())
+                    hit = ctx.splice_cache.get(ck)
+                    if hit is not None:
+                        return tuple(a.copy() for a in hit)
+        ok = np.zeros(n, dtype=bool)
+        sa = np.full(n, np.inf)
+        f = np.ones(n)
+        wait = np.zeros(n)
+        if len(cols):
+            o, s_, f_, w_ = self._score_fused_arrays(
+                task, static, now, with_constraints=True, ctx=ctx,
+                split_comm=True)
+            ok[cols] = o
+            sa[cols] = s_
+            f[cols] = f_
+            wait[cols] = w_
+        if ck is not None:
+            ctx.splice_cache[ck] = (ok.copy(), sa.copy(), f.copy(),
+                                    wait.copy())
+        return ok, sa, f, wait
+
+    def _tracked_checks(self, task: Task, plan, now: float,
+                        ctx: "_BatchContext") -> _ScanState:
+        """Core constraint checks over ``plan.pus`` with commit-aware
+        reuse.
+
+        The first walk of a (task core, candidate list) pair pays one
+        fused check; every later walk — same task or any task sharing its
+        core — splices fresh single-device checks over exactly the devices
+        committed since.  The block-diagonal kernel scores devices
+        independently, so the untouched segments are bit-identical to a
+        full rescan (pinned by the parity suite)."""
+        led = self.ledger
+        key = (ctx.core_sig(task), id(plan.pus))
+        st = ctx.scan_states.get(key)
+        if st is not None and st.epoch != led.dev_epoch:
+            st = None
+        if st is None:
+            st = _ScanState(len(plan.pus))
+            st.ok, st.sa, st.f, st.wait = self._check_arrays(
+                task, plan.pus, now, ctx)
+            st.epoch = led.dev_epoch
+            st.stamps = {d: led.dev_version.get(d, 0) for d in plan.devs}
+            st.log_pos = len(ctx.commit_log)
+            ctx.scan_states[key] = st
+            return st
+        log = ctx.commit_log
+        if st.log_pos < len(log):
+            for dev in set(log[st.log_pos:]):
+                rng = plan.dev_ranges.get(dev)
+                if rng is None:
+                    continue
+                v = led.dev_version.get(dev, 0)
+                if st.stamps.get(dev) == v:
+                    continue
+                lo, hi = rng
+                o, s_, f_, w_ = self._check_arrays(
+                    task, plan.dev_sublists[dev], now, ctx)
+                st.ok[lo:hi] = o
+                st.sa[lo:hi] = s_
+                st.f[lo:hi] = f_
+                st.wait[lo:hi] = w_
+                st.stamps[dev] = v
+            st.log_pos = len(log)
+        return st
+
+    def _effective(self, task: Task, st: _ScanState, plan, now: float,
+                   ctx: "_BatchContext") -> tuple:
+        """Layer the per-signature pieces over a shared core state: the
+        comm column (origin / provenance / return leg, plus the tenancy
+        wait) gathered onto the plan, the selection key ``cm + sa*f``,
+        and the deadline mask — the only parts of a constraint check that
+        depend on where the task came from and when it must finish.
+
+        Cached per (task signature, plan) and patched per committed
+        device, mirroring the tracked scan states: consecutive re-walks
+        of equal-signature tasks (the common wave shape — replicated
+        sensors) refresh only the few plan positions the ledger touched
+        instead of re-deriving three fleet-length columns."""
+        static = ctx.static_score(self, task, plan.pus)
+        cols = static.cols
+        dl = task.deadline
+        log = ctx.commit_log
+        ck = (ctx.task_sig(task), id(plan.pus))
+        ent = ctx.eff_cache.get(ck)
+        if ent is not None and ent[0] is st:
+            pos, ok, cm, key = ent[1], ent[2], ent[3], ent[4]
+            if pos < len(log):
+                for dev in set(log[pos:]):
+                    rng = plan.dev_ranges.get(dev)
+                    if rng is None:
+                        continue
+                    lo, hi = rng
+                    jlo = int(np.searchsorted(cols, lo))
+                    jhi = int(np.searchsorted(cols, hi))
+                    cm[lo:hi] = 0.0
+                    cseg = cols[jlo:jhi]
+                    cm[cseg] = static.comm[jlo:jhi] + st.wait[cseg]
+                    key[lo:hi] = cm[lo:hi] + st.sa[lo:hi] * st.f[lo:hi]
+                    o = st.ok[lo:hi]
+                    if dl is not None:
+                        o = o & ~(key[lo:hi] > dl)
+                    ok[lo:hi] = o
+                ent[1] = len(log)
+            return ok, cm, key
+        cm = np.zeros(len(plan.pus))
+        if len(cols):
+            cm[cols] = static.comm + st.wait[cols]
+        key = cm + st.sa * st.f
+        if dl is not None:
+            ok = st.ok & ~(key > dl)
+        else:
+            ok = st.ok.copy()          # the cache owns a mutable copy
+        cache = ctx.eff_cache
+        cache[ck] = [st, len(log), ok, cm, key]
+        if len(cache) > 24:
+            cache.pop(next(iter(cache)))
+        return ok, cm, key
+
+    def _scan_reduce(self, ok_d: np.ndarray, cm_d: np.ndarray,
+                     st: _ScanState, plan: _ScanPlan,
+                     offset: int = 0,
+                     key_d: Optional[np.ndarray] = None,
+                     ) -> Optional[MapResult]:
+        """Replay TraverseChildren's accounting over one scan in closed
+        form (see ``kernels.walk_kernel``) and return its winner.
+        ``ok_d``/``cm_d`` (and the precomputed ``cm + sa*f`` selection
+        column ``key_d``) are the per-signature effective columns over the
+        plan that ``st`` (plus ``offset``) is sliced against."""
+        n = len(plan.pus)
+        sl = slice(offset, offset + n)
+        ok = ok_d[sl]
+        if not ok.any():
+            return None
+        sa = st.sa[sl]
+        f = st.f[sl]
+        cm = cm_d[sl]
+        if self.config.objective == "min_load":
+            cnt = self.ledger.count
+            key = np.full(n, np.inf)
+            for i in np.flatnonzero(ok).tolist():
+                key[i] = cnt(plan.pus[i])
+        elif key_d is not None:
+            key = key_d[sl]
+        else:
+            key = cm + sa * f
+        w, queries, hops, overhead = _scan_reduce_kernel()(
+            ok, key, plan.pu_lo, plan.pu_hi, plan.leafcnt, plan.nchild,
+            plan.hopsum, plan.depth, self.config.local_query_cost)
+        if w < 0:
+            return None
+        pred = TaskPrediction(float(sa[w]), float(f[w]), float(cm[w]))
+        return MapResult(pu=plan.pus[w], prediction=pred,
+                         overhead=overhead, queries=queries, hops=hops)
+
+    def _traverse_fast(self, task: Task, now: float, ctx: "_BatchContext",
+                       scored: Optional[set]) -> Optional[MapResult]:
+        """TraverseChildren over this ORC's subtree as one tracked scan."""
+        plan = self._scan_plan(ctx.comp)
+        if scored is not None:
+            scored.update(plan.leaf_groups)
+        if not plan.pus:
+            return None
+        st = self._tracked_checks(task, plan, now, ctx)
+        ok, cm, key = self._effective(task, st, plan, now, ctx)
+        return self._scan_reduce(ok, cm, st, plan, key_d=key)
+
+    def _ask_level_fast(self, task: Task, now: float, ctx: "_BatchContext",
+                        scored: Optional[set]) -> Optional[MapResult]:
+        """One AskParent level as a flat selection over every sibling
+        subtree at once.
+
+        Alg. 1 picks each sibling's winner, then ``_select``s among them —
+        and neither selection key (prediction total / ledger load) depends
+        on the escalation hops charged along the way, so the overall
+        winner is the flat first-wins argmin over all sibling candidates.
+        Only the winning sibling's subtree replays its accounting (the
+        other winners' accounting is discarded by ``_select`` anyway);
+        the hop/overhead running charges come from the plan's prefix.
+
+        The scan runs over the parent's shared child plan — the asker's
+        own slice is part of the state (so every child escalating through
+        this parent reuses one set of checks) but is masked out of the
+        selection, exactly as Alg. 1 skips the asking child."""
+        parent = self.parent
         comp = ctx.comp
-        reps: dict = {}
-        for t in tasks:
-            orc = self._entry_orc(t) if route else self
-            pus = orc._subtree_pus() if orc.children else orc.leaf_pus
-            key = (ctx.task_sig(t), id(pus))
-            if key not in reps and pus:
-                reps[key] = (orc, t, pus)
+        cp = parent._child_plan(comp)
+        if scored is not None:
+            scored.update(cp.leaf_groups)
+        ci = cp.child_pos[id(self)]
+        lo_c = int(cp.bounds[ci])
+        hi_c = int(cp.bounds[ci + 1])
+        if len(cp.pus) == hi_c - lo_c:
+            return None                       # no siblings at this level
+        er = getattr(comp, "ensure_routes", None)
+        if er is not None:
+            names = [self.group, parent.group]
+            if task.origin is not None:
+                names.append(task.origin)
+            names.extend(task.attrs.get("src_devices") or ())
+            er(names)
+        st = self._tracked_checks(task, cp, now, ctx)
+        ok_d, cm_d, key_d = self._effective(task, st, cp, now, ctx)
+        ok_idx = np.flatnonzero(ok_d)
+        ok_idx = ok_idx[(ok_idx < lo_c) | (ok_idx >= hi_c)]
+        if not len(ok_idx):
+            return None
+        if self.config.objective == "min_load":
+            cnt = self.ledger.count
+            keys = np.fromiter((cnt(cp.pus[i]) for i in ok_idx.tolist()),
+                               dtype=np.float64, count=len(ok_idx))
+        else:
+            keys = key_d[ok_idx]
+        w = int(ok_idx[np.argmin(keys)])
+        k = int(np.searchsorted(cp.bounds, w, side="right")) - 1
+        sibling = cp.children[k]
+        sub = sibling._scan_reduce(ok_d, cm_d, st, sibling._scan_plan(comp),
+                                   offset=int(cp.bounds[k]), key_d=key_d)
+        # the running Alg. 1 charges at the winning sibling's position:
+        # one hop up to the parent plus one per *sibling* asked so far
+        # (the asker itself is skipped in the iteration order)
+        k_sib = k - (1 if ci < k else 0)
+        sub.hops += 1 + (k_sib + 1)
+        ov = cp.hop_prefix[k] - (cp.hc[ci] if ci < k else 0.0)
+        sub.overhead += self._hop_cost(parent) + ov
+        return sub
+
+    def _map_once_fast(self, task: Task, now: float, ctx: "_BatchContext",
+                       scored: Optional[set]) -> Optional[MapResult]:
+        """The fused equivalent of ``_map_once`` (phase-2 re-walks)."""
+        res = self._traverse_fast(task, now, ctx, scored)
+        cur = self
+        while res is None and cur.parent is not None:
+            res = cur._ask_level_fast(task, now, ctx, scored)
+            cur = cur.parent
+        if res is None and self.config.allow_best_effort:
+            res = self._best_effort(task, now, ctx, scored)
+        return res
+
+    def _batch_checks(self, ctx: "_BatchContext", reqs: list,
+                      now: float) -> None:
+        """Seed the tracked scan states of ``reqs`` — (orc, task, plan)
+        triples sharing one wave depth — with a single
+        ``factors_same_device_multi`` kernel call.  The results are built
+        by the same ``_score_fused`` logic from the same static inputs and
+        ledger views as per-scan checks, so they are bit-identical."""
+        sd = self.traverser.slowdown
+        led = self.ledger
+        comp = ctx.comp
         items = []
         metas = []
-        for key, (orc, t, pus) in reps.items():
-            static = ctx.static_score(orc, t, pus)
+        for orc, task, plan in reqs:
+            if not plan.pus:
+                continue
+            key = (ctx.core_sig(task), id(plan.pus))
+            if key in ctx.scan_states:
+                continue
+            static = ctx.static_core(orc, task, plan.pus)
+            st = _ScanState(len(plan.pus))
+            st.epoch = led.dev_epoch
+            st.stamps = {d: led.dev_version.get(d, 0) for d in plan.devs}
+            st.log_pos = len(ctx.commit_log)
+            ctx.scan_states[key] = st
             if not len(static.cols):
                 continue
             if static.single_dev is not None:
                 view = ctx.view(static.single_dev)
             else:
-                view = self.ledger.live_view(comp)
-            items.append((t, static.cand_idx, static.cand_dev, view.P,
+                view = led.live_view(comp)
+            items.append((task, static.cand_idx, static.cand_dev, view.P,
                           view.upu, view.Ma, view.uid, view.Da,
                           view.astart, view.na))
-            metas.append((key, orc, t, pus, static, view))
+            metas.append((orc, task, static, view, st))
         if not items:
             return
         outs = sd.factors_same_device_multi(comp, items)
-        infeasible = (False, TaskPrediction(float("inf"), 1.0, 0.0))
-        for (key, orc, t, pus, static, view), fused in zip(metas, outs):
-            results: list = [infeasible] * len(pus)
-            orc._score_fused(t, static, now, results,
-                             with_constraints=True, ctx=ctx,
-                             fused=(fused, view))
-            ctx.prescored[key] = results
+        for (orc, task, static, view, st), fused in zip(metas, outs):
+            o, s_, f_, w_ = orc._score_fused_arrays(
+                task, static, now, with_constraints=True, ctx=ctx,
+                fused=(fused, view), split_comm=True)
+            cols = static.cols
+            st.ok[cols] = o
+            st.sa[cols] = s_
+            st.f[cols] = f_
+            st.wait[cols] = w_
+
+    def _walk_wave(self, tasks: list, now: float, ctx: "_BatchContext",
+                   route: bool) -> dict:
+        """Phase 1: walk every distinct task signature against the frozen
+        ledger, advancing all walks in lockstep so each escalation depth's
+        constraint checks batch into one kernel call and each depth's
+        route rows warm in one batched Dijkstra."""
+        comp = ctx.comp
+        walks: dict = {}
+        order: list[_Walk] = []
+        for t in tasks:
+            orc = self._entry_orc(t) if route else self
+            key = self._task_signature(orc, t)
+            if key not in walks:
+                w = walks[key] = _Walk(orc, t)
+                order.append(w)
+        self._batch_checks(
+            ctx, [(w.orc, w.task, w.orc._scan_plan(comp)) for w in order],
+            now)
+        for w in order:
+            w.res = w.orc._traverse_fast(w.task, now, ctx, w.scored)
+        active = [w for w in order
+                  if w.res is None and w.cur.parent is not None]
+        while active:
+            er = getattr(comp, "ensure_routes", None)
+            if er is not None:
+                warm: set = set()
+                for w in active:
+                    warm.add(w.cur.group)
+                    warm.add(w.cur.parent.group)
+                    if w.task.origin is not None:
+                        warm.add(w.task.origin)
+                    warm.update(w.task.attrs.get("src_devices") or ())
+                er(warm)
+            self._batch_checks(
+                ctx, [(w.orc, w.task, w.cur.parent._child_plan(comp))
+                      for w in active], now)
+            nxt: list[_Walk] = []
+            for w in active:
+                w.res = w.cur._ask_level_fast(w.task, now, ctx, w.scored)
+                if w.res is None:
+                    w.cur = w.cur.parent
+                    if w.cur.parent is not None:
+                        nxt.append(w)
+            active = nxt
+        if self.config.allow_best_effort:
+            for w in order:
+                if w.res is None:
+                    w.res = w.orc._best_effort(w.task, now, ctx, w.scored)
+        return walks
 
     @staticmethod
     def _task_signature(orc: "Orchestrator", t: Task) -> tuple:
@@ -794,10 +1457,6 @@ class Orchestrator:
         sd = self.traverser.slowdown
         noisy = bool(getattr(sd, "_noisy", lambda: False)())
         if (not noisy) and hasattr(sd, "factors_same_device"):
-            if ctx is not None and with_constraints:
-                hit = ctx.prescored.get((ctx.task_sig(task), id(pu_names)))
-                if hit is not None:
-                    return hit
             static = (ctx.static_score(self, task, pu_names)
                       if ctx is not None
                       else self._static_score(task, pu_names, comp, None))
@@ -816,8 +1475,11 @@ class Orchestrator:
                      ctx: Optional[_BatchContext]) -> tuple:
         graph = self.graph
         n = len(pu_names)
-        idx = np.fromiter((comp.pu_index.get(p, -1) for p in pu_names),
-                          dtype=np.int64, count=n)
+        if ctx is not None:
+            idx = ctx.pu_idx(pu_names)
+        else:
+            idx = np.fromiter((comp.pu_index.get(p, -1) for p in pu_names),
+                              dtype=np.int64, count=n)
         known = idx >= 0
         elig = known.copy()
         if known.any():
@@ -839,11 +1501,14 @@ class Orchestrator:
         return idx, elig
 
     def _static_score(self, task: Task, pu_names: list[str], comp,
-                      ctx: Optional[_BatchContext]) -> "_StaticScore":
+                      ctx: Optional[_BatchContext],
+                      skip_comm: bool = False) -> "_StaticScore":
         """The ledger-independent half of fused scoring: eligibility,
         candidate index/device arrays, standalone predictions, inbound
         communication (with the pinned-return leg), tenancy limits.
-        Cached per (task signature, candidate list) by the batch context."""
+        Cached per (task signature, candidate list) by the batch context;
+        ``skip_comm`` leaves ``comm = None`` for the core-keyed variant
+        whose consumers never read it."""
         idx, elig = self._eligibility(task, pu_names, comp, ctx)
         s = _StaticScore()
         s.pu_names = pu_names
@@ -863,19 +1528,85 @@ class Orchestrator:
             g = self.graph
             s.sa = np.array([g.nodes[pu_names[c]].predict(task)
                              for c in s.cols])
+        if skip_comm:
+            s.comm = None
+            s.maxten = comp.max_tenancy[s.cand_idx]
+            return s
         # communication per distinct destination device (+ return leg)
         ret_bytes = task.attrs.get("succ_pinned_bytes", 0.0)
         comm_lut = np.zeros(len(comp.dev_ord_names))
-        for o in np.unique(s.cand_dev):
-            dev = comp.dev_ord_names[o]
-            c = (ctx.comm(task, dev) if ctx is not None
-                 else self.traverser.comm_time_dev(task, dev, comp))
-            if ret_bytes > 0 and task.origin is not None and dev != task.origin:
-                c += comp.transfer_time(dev, task.origin, ret_bytes)
-            comm_lut[o] = c
+        uniq = (s.cand_dev[:1] if s.single_dev is not None
+                else np.unique(s.cand_dev))
+        if not self._comm_lut_fast(task, comp, uniq, ret_bytes, comm_lut):
+            if ret_bytes > 0 and task.origin is not None and len(uniq) > 1:
+                # the return leg routes *from* each candidate device: warm
+                # all those rows in one batched Dijkstra instead of one
+                # heapq walk per device inside the loop
+                er = getattr(comp, "ensure_routes", None)
+                if er is not None:
+                    er([comp.dev_ord_names[int(o)] for o in uniq])
+            for o in uniq:
+                dev = comp.dev_ord_names[o]
+                c = (ctx.comm(task, dev) if ctx is not None
+                     else self.traverser.comm_time_dev(task, dev, comp))
+                if (ret_bytes > 0 and task.origin is not None
+                        and dev != task.origin):
+                    c += comp.transfer_time(dev, task.origin, ret_bytes)
+                comm_lut[o] = c
         s.comm = comm_lut[s.cand_dev]
         s.maxten = comp.max_tenancy[s.cand_idx]
         return s
+
+    def _comm_lut_fast(self, task: Task, comp, uniq: np.ndarray,
+                       ret_bytes: float, comm_lut: np.ndarray) -> bool:
+        """Fill ``comm_lut`` for the ``uniq`` destination devices straight
+        off the compiled route table — elementwise the same
+        ``lat + nbytes * ibw`` doubles ``transfer_time`` computes, so the
+        values are bit-identical to the scalar loop.  Returns False (LUT
+        untouched) when any endpoint falls outside the routable space or a
+        route is missing; the caller's scalar loop then reproduces the
+        oracle semantics, including its KeyError."""
+        rt = getattr(comp, "_rt", None)
+        ri = getattr(comp, "routable_index", None)
+        if rt is None or ri is None or len(uniq) < 2:
+            return False
+        srcs = task.attrs.get("src_devices")
+        if not srcs and task.origin is not None:
+            srcs = [task.origin]
+        srcs = list(srcs or ())
+        ib = task.input_bytes
+        dev2r = comp.__dict__.get("_dev_routable")
+        if dev2r is None:
+            dev2r = comp._dev_routable = np.fromiter(
+                (ri.get(d, -1) for d in comp.dev_ord_names),
+                dtype=np.int64, count=len(comp.dev_ord_names))
+        j_arr = dev2r[uniq]
+        i_src = [ri.get(d, -1) for d in srcs]
+        ret = ret_bytes > 0 and task.origin is not None
+        j_org = ri.get(task.origin, -1) if ret else -1
+        if not (j_arr >= 0).all() or any(i < 0 for i in i_src) \
+                or (ret and j_org < 0):
+            return False
+        need = set(i_src)
+        if ret:
+            need.update(int(j) for j in j_arr)
+        comp.ensure_routes(need)
+        vals = np.zeros(len(uniq))
+        if ib > 0:
+            for i in i_src:
+                leg = rt.lat[i, j_arr] + ib * rt.ibw[i, j_arr]
+                leg = np.where(j_arr == i, 0.0, leg)
+                if not np.isfinite(leg).all():
+                    return False
+                np.maximum(vals, leg, out=vals)
+        if ret:
+            leg = rt.lat[j_arr, j_org] + ret_bytes * rt.ibw[j_arr, j_org]
+            leg = np.where(j_arr == j_org, 0.0, leg)
+            if not np.isfinite(leg).all():
+                return False
+            vals = vals + leg
+        comm_lut[uniq] = vals
+        return True
 
     def _score_fused(self, task: Task, static: "_StaticScore", now: float,
                      results: list, *, with_constraints: bool,
@@ -889,6 +1620,29 @@ class Orchestrator:
         by the wave-level multi-newcomer prescore; when given, the kernel
         call is skipped and the constraint logic runs on the precomputed
         factors."""
+        arrs = self._score_fused_arrays(task, static, now,
+                                        with_constraints=with_constraints,
+                                        ctx=ctx, fused=fused)
+        ok_a, sa_a, f_a, cm_a = arrs
+        for c, ok, sa, f, cm in zip(static.cols.tolist(), ok_a.tolist(),
+                                    sa_a.tolist(), f_a.tolist(),
+                                    cm_a.tolist()):
+            results[c] = (ok, TaskPrediction(sa, f, cm))
+
+    def _score_fused_arrays(self, task: Task, static: "_StaticScore",
+                            now: float, *, with_constraints: bool,
+                            ctx: Optional[_BatchContext],
+                            fused: Optional[tuple] = None,
+                            split_comm: bool = False) -> tuple:
+        """The array core of :meth:`_score_fused`: per eligible candidate
+        (``static.cols`` order) the feasibility, standalone, factor and
+        comm columns — the fast walk consumes these directly and never
+        materializes per-candidate prediction objects.
+
+        With ``split_comm`` the comm column is withheld: the last column
+        is the additive tenancy wait and ``ok`` excludes the deadline
+        mask — the origin-independent core the tracked scan states share
+        across task signatures."""
         comp = ctx.comp if ctx is not None else self.graph.compiled()
         sd = self.traverser.slowdown
         cols = static.cols
@@ -908,18 +1662,26 @@ class Orchestrator:
                 comp, task, cand_idx, static.cand_dev, view.P, view.upu,
                 view.Ma, view.uid, view.Da, view.astart, view.na)
         A = len(view)
-        comm = static.comm
-        ok15 = np.ones(len(cols), dtype=bool)
-        if with_constraints and A:
-            # tenancy cap: queueing wait behind the earliest finisher
-            P = len(comp.pu_names)
-            cnt = np.bincount(view.P, minlength=P)[cand_idx]
+        wait = None
+        ok = np.ones(len(cols), dtype=bool)
+        C = len(cand_idx)
+        if with_constraints and A and C:
+            # tenancy cap: queueing wait behind the earliest finisher.
+            # Count actives per *candidate position* (not per fleet PU):
+            # the candidate sets here are device- or subtree-local, so two
+            # fleet-length scatter arrays per check would dwarf the math
+            order = np.argsort(cand_idx, kind="stable")
+            sci = cand_idx[order]
+            pp = np.minimum(np.searchsorted(sci, view.P), C - 1)
+            on_cand = sci[pp] == view.P
+            cpos = order[pp[on_cand]]
+            cnt = np.bincount(cpos, minlength=C)
             waits = cnt >= static.maxten
             if waits.any():
-                minest = np.full(P, np.inf)
-                np.minimum.at(minest, view.P, view.est)
-                comm = comm + np.where(
-                    waits, np.maximum(0.0, minest[cand_idx] - now), 0.0)
+                minest = np.full(C, np.inf)
+                np.minimum.at(minest, cpos, view.est[on_cand])
+                wait = np.where(
+                    waits, np.maximum(0.0, minest - now), 0.0)
             # Alg. 1 l.15 over the same-device (candidate, active) pairs
             if len(ci):
                 rem = (np.maximum(0.0, view.est[ai] - now)
@@ -927,19 +1689,23 @@ class Orchestrator:
                 fin = now + rem * act_pf
                 viol = (np.isfinite(view.dl[ai])
                         & (fin - view.rel[ai] > view.dl[ai] * (1 + 1e-9)))
-                ok15[ci[viol]] = False
-        ok_l = ok15.tolist()
+                ok[ci[viol]] = False
+        new_f = np.asarray(new_f, dtype=np.float64)
+        if split_comm:
+            # origin-independent core: the comm column is replaced by the
+            # additive tenancy wait and the (comm-dependent) deadline mask
+            # is left to the per-signature layer (``_effective``)
+            return ok, static.sa, new_f, (wait if wait is not None
+                                          else np.zeros(len(cols)))
+        comm = static.comm if wait is None else static.comm + wait
+        comm = (np.asarray(comm, dtype=np.float64)
+                if np.ndim(comm) else np.full(len(cols), float(comm)))
         if with_constraints and task.deadline is not None:
-            totals = comm + static.sa * np.asarray(new_f)
-            for pos, fail in enumerate((totals > task.deadline).tolist()):
-                if fail:
-                    ok_l[pos] = False
+            totals = comm + static.sa * new_f
+            ok &= ~(totals > task.deadline)
         elif not with_constraints:
-            ok_l = [True] * len(cols)
-        for c, ok, sa, f, cm in zip(cols.tolist(), ok_l, static.sa.tolist(),
-                                    np.asarray(new_f).tolist(),
-                                    np.asarray(comm).tolist()):
-            results[c] = (ok, TaskPrediction(sa, f, cm))
+            ok = np.ones(len(cols), dtype=bool)
+        return ok, static.sa, new_f, comm
 
     def _score_grouped(self, task: Task, pu_names: list[str], idx: np.ndarray,
                        elig: np.ndarray, now: float, results: list, *,

@@ -116,6 +116,10 @@ class SchedulerSession:
         self.truth = truth
         self.charge_overhead = charge_overhead
         self.frontier = frontier
+        if isinstance(policy, Orchestrator):
+            # lower the ORC tree to its compiled scan plans up front so
+            # the first mapping wave doesn't pay the one-time build
+            policy.prepare(graph.compiled())
         self._cfg = TaskGraph("session")
         self._mapped: set[int] = set()
         self.results: dict[int, Optional[MapResult]] = {}
@@ -185,13 +189,14 @@ class SchedulerSession:
         mapped; commits assignments and charges overhead.  Returns the
         results of this call only."""
         out: dict[int, Optional[MapResult]] = {}
+        comp = self.graph.compiled()
         for now, wave in self._waves():
             for t in wave:
                 preds = self._cfg.preds(t)
                 placed = [p.assigned_pu for p in preds if p.assigned_pu]
                 if placed:
                     t.attrs["src_devices"] = sorted(
-                        {self.graph.device_of(pu).name for pu in placed})
+                        {comp.device_name(pu) for pu in placed})
             results = self._assign_wave(wave, now)
             for t, res in zip(wave, results):
                 self._mapped.add(t.uid)

@@ -63,6 +63,14 @@ RCLASSES = ("l2", "l3", "llc", "sram", "dram", "hbm", "vmem", "nic")
 # path's ``p.beta.get(rclass, 0.3)``)
 _DEFAULT_BETA = 0.3
 
+# pools at or below this size route through the exact scalar loop in
+# ``factor_batch_idx``: below ~n=10 the array path's fixed call overhead
+# (bincount/nonzero/broadcast setup) dominates the actual math, and up
+# to 7 co-runner rows the sequential scalar sums match BLAS's dot
+# reductions bit-for-bit (8-wide rows start SIMD-reordering the adds).
+# tests/test_slowdown assert both the dispatch boundary and bit-equality.
+_SMALL_POOL_MAX = 7
+
 
 @dataclass
 class SlowdownParams:
@@ -185,6 +193,12 @@ class DecoupledSlowdown:
         # a new snapshot; holding the snapshot itself makes the identity
         # check safe (it cannot be freed and its id reused while cached)
         self._tables_cache: Optional[tuple] = None
+        # canonical-pattern result cache for single-device constraint
+        # checks (see _canon_key); keyed per snapshot identity like the
+        # tables, plus hit/miss counters surfaced in the benchmarks
+        self._canon_cache: Optional[tuple] = None
+        self.factor_cache_hits = 0
+        self.factor_cache_misses = 0
 
     # -- helpers -----------------------------------------------------------
     def nearest_shared(self, pu_a: str, pu_b: str) -> Optional[str]:
@@ -199,6 +213,7 @@ class DecoupledSlowdown:
         """Kept for API compatibility: the compiled snapshot invalidates
         itself on topology mutation, so there is no cache to clear."""
         self._tables_cache = None
+        self._canon_cache = None
 
     def _pressure_term(self, beta: float, x: float) -> float:
         if x <= 0.0 or beta <= 0.0:
@@ -321,6 +336,11 @@ class DecoupledSlowdown:
             # the float ops replicate the array path bit-for-bit (a row's
             # product over inactive rclasses multiplies exact 1.0s)
             return self._factor_pair(comp, P, U, M)
+        if n <= _SMALL_POOL_MAX:
+            # light-load pools floor on array-path call overhead (bincount,
+            # nonzero, broadcasting all cost more than the math below this
+            # size); the scalar loop replicates the array path bit-for-bit
+            return self._factor_small(comp, P, U, M)
         # DES pools hold one job per task, so uids are pairwise distinct:
         # self-interaction reduces to the diagonal and the uid mask work
         # is skipped entirely
@@ -347,6 +367,48 @@ class DecoupledSlowdown:
                     if x > 0.0 and b > 0.0:
                         res = b * x * (1.0 + kappa * x)
             f = (1.0 + mt_term) * (1.0 + res * float(M[i]))
+            out[i] = f if f > 1.0 else 1.0
+        return out
+
+    def _factor_small(self, comp, P, U, M) -> np.ndarray:
+        """Exact scalar path for distinct-uid pools of a few members.
+
+        Pressure accumulation runs in ascending co-runner order and the
+        per-rclass product in ascending rclass order — the same orders the
+        bincount / prod reductions of ``_factor_batch_arrays`` use — so
+        the result is bit-identical to the array path (inactive rclasses
+        multiply exact 1.0s there and are simply skipped here)."""
+        beta_vec, mt_vec = self._tables(comp)
+        kappa = self.params.superlinear
+        n = len(P)
+        Pi = [int(p) for p in P]
+        Uf = [float(u) for u in U]
+        Mf = [float(m) for m in M]
+        out = np.empty(n)
+        for i in range(n):
+            pi = Pi[i]
+            mt_p = 0.0
+            res: dict[int, float] = {}
+            for j in range(n):
+                if j == i:
+                    continue
+                if Pi[j] == pi:
+                    mt_p += Uf[j]
+                else:
+                    r = int(comp.ncr_rclass[pi, Pi[j]])
+                    if r >= 0:
+                        res[r] = res.get(r, 0.0) + Mf[j]
+            mt_term = 0.0
+            mtb = float(mt_vec[pi])
+            if mt_p > 0.0 and mtb > 0.0:
+                mt_term = mtb * mt_p * (1.0 + kappa * mt_p) * Uf[i]
+            prod = 1.0
+            for r in sorted(res):
+                x = res[r]
+                b = float(beta_vec[r])
+                if x > 0.0 and b > 0.0:
+                    prod *= 1.0 + b * x * (1.0 + kappa * x) * Mf[i]
+            f = (1.0 + mt_term) * prod
             out[i] = f if f > 1.0 else 1.0
         return out
 
@@ -524,16 +586,27 @@ class DecoupledSlowdown:
         empty = np.zeros(0, dtype=np.int64)
         if len(Pc) == 0 or len(Pa) == 0:
             return np.ones(len(Pc)), empty, empty, np.ones(0)
+        key, base = self._canon_key(comp, task, Pc, Dc, Pa, Ua, Ma, uid_a,
+                                    astart, na)
+        if key is not None:
+            hit = self._canon_lookup(comp, key, base)
+            if hit is not None:
+                return hit
         rows = self._same_device_rows(comp, task, Pc, Dc, Pa, Ua, Ma,
                                       uid_a, Da, astart, na)
         if rows is None:
             # no active shares a device with any candidate: all factors 1
-            return np.ones(len(Pc)), empty, empty, np.ones(0)
-        X, mem, mt_term, ci, ai = rows
-        beta_vec, _ = self._tables(comp)
-        C = len(Pc)
-        f = _aggregate(X, beta_vec, mem, mt_term, self.params.superlinear)
-        return f[:C], ci, ai, f[C:]
+            out = (np.ones(len(Pc)), empty, empty, np.ones(0))
+        else:
+            X, mem, mt_term, ci, ai = rows
+            beta_vec, _ = self._tables(comp)
+            C = len(Pc)
+            f = _aggregate(X, beta_vec, mem, mt_term,
+                           self.params.superlinear)
+            out = (f[:C], ci, ai, f[C:])
+        if key is not None:
+            self._canon_store(key, base, out)
+        return out
 
     def factors_same_device_multi(self, comp, items: Sequence[tuple]):
         """Score many newcomers (one per distinct wave signature) in one
@@ -545,10 +618,21 @@ class DecoupledSlowdown:
         empty = np.zeros(0, dtype=np.int64)
         built: list = []
         blocks: list = []
+        keys: list = []
         for it in items:
             if len(it[1]) == 0 or len(it[3]) == 0:
                 built.append(None)
+                keys.append(None)
                 continue
+            key, base = self._canon_key(comp, it[0], it[1], it[2], it[3],
+                                        it[4], it[5], it[6], it[8], it[9])
+            if key is not None:
+                hit = self._canon_lookup(comp, key, base)
+                if hit is not None:
+                    built.append(hit)
+                    keys.append(None)       # already cached
+                    continue
+            keys.append((key, base))
             rows = self._same_device_rows(comp, *it)
             built.append(rows)
             if rows is not None:
@@ -562,16 +646,85 @@ class DecoupledSlowdown:
                            self.params.superlinear)
         pos = 0
         out = []
-        for it, rows in zip(items, built):
+        for it, rows, kb in zip(items, built, keys):
             C = len(it[1])
-            if rows is None:
-                out.append((np.ones(C), empty, empty, np.ones(0)))
+            if isinstance(rows, tuple) and len(rows) == 4:
+                out.append(rows)            # cache hit, already final
                 continue
-            k = len(rows[1])
-            fi = f[pos:pos + k]
-            pos += k
-            out.append((fi[:C], rows[3], rows[4], fi[C:]))
+            if rows is None:
+                res = (np.ones(C), empty, empty, np.ones(0))
+            else:
+                k = len(rows[1])
+                fi = f[pos:pos + k]
+                pos += k
+                res = (fi[:C], rows[3], rows[4], fi[C:])
+            if kb is not None and kb[0] is not None:
+                self._canon_store(kb[0], kb[1], res)
+            out.append(res)
         return out
+
+    # -- canonical-pattern cache (single-device constraint checks) ---------
+    def _canon_key(self, comp, task: Task, Pc, Dc, Pa, Ua, Ma, uid_a,
+                   astart, na):
+        """Structural cache key of one single-device constraint check.
+
+        Two checks share a key iff every input the kernel math reads is
+        identical *up to PU identity*: the candidate/active PU-equality
+        pattern, the nearest-common-resource classes over all pairs, the
+        per-PU model coefficients and caps, the active usage columns (in
+        ledger order — order matters because the pressure reductions
+        accumulate in it), the alive-pair mask against the newcomer's uid,
+        and the newcomer's own usages.  Replicated mult=N fleets then
+        share one kernel evaluation per structural pattern instead of one
+        per device.  Returns ``(key, active_base)`` — pair indices are
+        cached relative to the device's ledger segment and rebased on hit
+        — or ``(None, 0)`` when the candidates span devices (the rare
+        mixed case keeps the direct path)."""
+        d0 = int(Dc[0])
+        if not bool((Dc == d0).all()):
+            return None, 0
+        s = int(astart[d0])
+        n_dev = int(na[d0])
+        sel = slice(s, s + n_dev)
+        L = np.concatenate([Pc, Pa[sel]])
+        # equality pattern of L (np.unique(return_inverse) without its
+        # dispatch overhead: these are ~a-device's-worth of ints)
+        su = np.sort(L)
+        uniq = su[np.concatenate(([True], su[1:] != su[:-1]))]
+        inv = np.searchsorted(uniq, L)
+        live = uid_a[sel] != task.uid
+        _, mt_vec = self._tables(comp)
+        key = (len(Pc), n_dev,
+               task.usage.get("pu", 1.0), task.usage.get("mem", 1.0),
+               inv.tobytes(),
+               comp.ncr_rclass[L[:, None], L[None, :]].tobytes(),
+               mt_vec[L].tobytes(), comp.mem_cap[L].tobytes(),
+               Ua[sel].tobytes(), Ma[sel].tobytes(), live.tobytes())
+        return key, s
+
+    def _canon_cache_dict(self, comp) -> dict:
+        cached = self._canon_cache
+        if cached is None or cached[0] is not comp:
+            cached = (comp, {})
+            self._canon_cache = cached
+        return cached[1]
+
+    def _canon_lookup(self, comp, key, base):
+        hit = self._canon_cache_dict(comp).get(key)
+        if hit is None:
+            return None
+        self.factor_cache_hits += 1
+        new_f, ci, rel_ai, act_pf = hit
+        return new_f, ci, rel_ai + base, act_pf
+
+    def _canon_store(self, key, base, result) -> None:
+        # _canon_lookup always ran first, so the per-snapshot dict exists
+        cache = self._canon_cache[1]
+        self.factor_cache_misses += 1
+        if len(cache) > 100_000:            # runaway-key backstop
+            cache.clear()
+        new_f, ci, ai, act_pf = result
+        cache[key] = (new_f, ci, ai - base, act_pf)
 
     def _same_device_rows(self, comp, task: Task, Pc, Dc, Pa, Ua, Ma,
                           uid_a, Da, astart, na):
@@ -649,6 +802,9 @@ class DecoupledSlowdown:
 
 class NoSlowdown:
     """Contention-blind model (what ACE-like baselines assume)."""
+
+    factor_cache_hits = 0
+    factor_cache_misses = 0
 
     def __init__(self, graph: HWGraph, *a, **k) -> None:
         self.graph = graph

@@ -1,5 +1,7 @@
 """Orchestrator tests (paper §3.5, Alg. 1): hierarchy construction,
-local-first mapping, escalation, constraint protection, overhead ledger."""
+local-first mapping, escalation, constraint protection, overhead ledger;
+plus whole-session parity of the fused wave-batched walk against the
+sequential per-task oracle (``REPRO_FUSED_WALK=0``)."""
 import pytest
 
 from repro.core import (ActiveLedger, OrcConfig, Orchestrator, Traverser,
@@ -151,3 +153,118 @@ def test_overhead_scales_with_remote_search(setup):
     remote = orc.map_task(make_task("render", origin=e, deadline=0.030,
                                     input_bytes=4e3))
     assert remote.overhead > local.overhead
+
+
+# ---------------------------------------------------------------------------
+# fused wave-batched walk vs the sequential per-task oracle
+# ---------------------------------------------------------------------------
+# ``REPRO_FUSED_WALK=1`` (default) lowers every mapping wave to array scans
+# over the compiled ORC tree; ``=0`` keeps the seed's Python object walk.
+# The contract is bit-identical *decisions*: pu, standalone, factor, comm,
+# queries and hops match exactly, overhead to 1e-9 (the fused reduce sums
+# the same terms in a different association order).
+
+_PARITY_EDGES = {"orin_agx": 2, "xavier_agx": 1, "orin_nano": 2,
+                 "xavier_nx": 1}
+_PARITY_SERVERS = {"server1": 1, "server2": 1}
+
+
+def _run_mode(monkeypatch, fused, workload, churn=None):
+    """Map ``workload(tb)``'s batches through a fresh session in one walk
+    mode, with optional ``churn(tb, i)`` graph mutations between batches.
+    Returns one list of result rows per batch, in sorted-uid order (uids
+    differ between twin sessions; creation order does not)."""
+    from repro.core import SchedulerSession
+    monkeypatch.setenv("REPRO_FUSED_WALK", "1" if fused else "0")
+    tb = build_testbed(edge_counts=dict(_PARITY_EDGES),
+                       server_counts=dict(_PARITY_SERVERS))
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    sess = SchedulerSession(tb.graph, root)
+    batches = []
+    for i, batch in enumerate(workload(tb)):
+        sess.submit(batch)
+        res = sess.map_pending()
+        batches.append([
+            (res[u].pu, res[u].prediction.standalone,
+             res[u].prediction.factor, res[u].prediction.comm,
+             res[u].queries, res[u].hops, res[u].overhead)
+            for u in sorted(res)])
+        if churn is not None:
+            churn(tb, i)
+    return batches
+
+
+def _assert_parity(fused_batches, oracle_batches):
+    assert len(fused_batches) == len(oracle_batches)
+    for fb, ob in zip(fused_batches, oracle_batches):
+        assert len(fb) == len(ob)
+        for f, o in zip(fb, ob):
+            assert f[:6] == o[:6]                     # exact decisions
+            assert f[6] == pytest.approx(o[6], rel=1e-9, abs=1e-12)
+
+
+def test_fused_walk_matches_oracle_mining(monkeypatch):
+    """Fig. 13 workload: parallel sensor readings, deadline-driven
+    escalation off the weak edges, two readings -> two release waves."""
+    from repro.core import mining_workload
+    wl = lambda tb: [mining_workload(tb, n_sensors=18, n_readings=2)]
+    _assert_parity(_run_mode(monkeypatch, True, wl),
+                   _run_mode(monkeypatch, False, wl))
+
+
+def test_fused_walk_matches_oracle_vr(monkeypatch):
+    """Fig. 7 workload: serial CFGs with pinned stages and inter-device
+    src_devices provenance flowing producer -> consumer."""
+    from repro.core import vr_workload
+    wl = lambda tb: [vr_workload(tb, n_frames=3)]
+    _assert_parity(_run_mode(monkeypatch, True, wl),
+                   _run_mode(monkeypatch, False, wl))
+
+
+def test_fused_walk_parity_across_churn(monkeypatch):
+    """mark_dead + set_bandwidth between mapping batches: the apply_delta'd
+    snapshot bumps device epochs, so every fused-side cache (scan plans,
+    core states, canonical factor entries) must refresh — parity with the
+    oracle, which re-reads the graph per task, proves none went stale."""
+    from repro.core import mining_workload
+
+    def wl(tb):
+        return [mining_workload(tb, n_sensors=12, n_readings=1),
+                mining_workload(tb, n_sensors=12, n_readings=1)]
+
+    dead = {}
+
+    def churn(tb, i):
+        if i == 0:
+            dead["pu"] = f"{tb.edges[0]}.gpu"
+            tb.graph.mark_dead(dead["pu"])
+            tb.graph.set_bandwidth(f"link_{tb.edges[1]}", 1e6)
+
+    fused = _run_mode(monkeypatch, True, wl, churn=churn)
+    oracle = _run_mode(monkeypatch, False, wl, churn=churn)
+    _assert_parity(fused, oracle)
+    # and the churn actually bit: nothing lands on the dead PU afterwards
+    assert all(row[0] != dead["pu"] for row in fused[1])
+
+
+def test_set_bandwidth_invalidates_fused_comm(monkeypatch):
+    """An identical escalating task mapped before and after a bandwidth
+    collapse must see the new comm cost through the fused path (caches are
+    keyed per compiled snapshot, not per graph)."""
+
+    def wl(tb):
+        e = next(x for x in tb.edges if tb.edge_kind[x] == "orin_nano")
+        mk = lambda: [make_task("render", origin=e, deadline=0.030,
+                                input_bytes=4e3)]
+        return [mk(), mk()]
+
+    def churn(tb, i):
+        if i == 0:
+            e = next(x for x in tb.edges if tb.edge_kind[x] == "orin_nano")
+            tb.graph.set_bandwidth(f"link_{e}", 1e6)
+
+    fused = _run_mode(monkeypatch, True, wl, churn=churn)
+    oracle = _run_mode(monkeypatch, False, wl, churn=churn)
+    _assert_parity(fused, oracle)
+    before, after = fused[0][0], fused[1][0]
+    assert after[3] != before[3]            # comm reflects the new network

@@ -116,3 +116,51 @@ def test_noise_reproducible(tb):
     f2 = DecoupledSlowdown(tb.graph, p, np.random.default_rng(7)).factor(
         make_task("knn"), f"{e}.gpu", [(make_task("knn"), f"{e}.gpu")])
     assert f1 == f2 and f1 >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# small-pool scalar fast path (the light-load DES kernel-overhead floor)
+# ---------------------------------------------------------------------------
+
+def _ledger_cols(tb, n, seed):
+    comp = tb.graph.compiled()
+    rng = np.random.default_rng(seed)
+    P = rng.integers(0, len(comp.pu_names), n).astype(np.int64)
+    U = rng.uniform(0.05, 0.9, n)
+    mem = rng.uniform(0.05, 0.9, n)
+    return comp, P, U, mem, np.arange(n, dtype=np.int64)
+
+
+def test_small_pool_dispatch_boundary(tb, monkeypatch):
+    """Pools at or below _SMALL_POOL_MAX take the scalar loop (pairs take
+    the dedicated pair path); one past the boundary takes the array path."""
+    from repro.core.slowdown import _SMALL_POOL_MAX
+    sd = DecoupledSlowdown(tb.graph, heye_params())
+    calls = []
+    for name in ("_factor_pair", "_factor_small", "_factor_batch_arrays"):
+        orig = getattr(sd, name)
+        monkeypatch.setattr(
+            sd, name,
+            lambda *a, _o=orig, _n=name, **k: (calls.append(_n), _o(*a, **k))[1])
+    for n, want in [(2, "_factor_pair"),
+                    (_SMALL_POOL_MAX, "_factor_small"),
+                    (_SMALL_POOL_MAX + 1, "_factor_batch_arrays")]:
+        calls.clear()
+        _, P, U, mem, uid = _ledger_cols(tb, n, seed=n)
+        sd.factor_batch_idx(P, U, mem, uid)
+        assert calls == [want], (n, calls)
+
+
+def test_small_pool_crossover_bit_equal(tb):
+    """Across the dispatch crossover the scalar/pair paths are bit-identical
+    to the array path (same accumulation orders — see _factor_small)."""
+    from repro.core.slowdown import _SMALL_POOL_MAX
+    sd = DecoupledSlowdown(tb.graph, heye_params())
+    for n in range(2, _SMALL_POOL_MAX + 3):
+        for seed in range(4):
+            comp, P, U, mem, uid = _ledger_cols(tb, n, seed=17 * n + seed)
+            got = sd.factor_batch_idx(P, U, mem, uid)
+            M = np.minimum(mem, comp.mem_cap[P])
+            want = sd._factor_batch_arrays(comp, P, U, M, uid, distinct=True)
+            assert got.tolist() == want.tolist()
+            assert np.all(got >= 1.0)

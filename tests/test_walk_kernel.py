@@ -1,0 +1,72 @@
+"""Walk-kernel reduce parity (kernels/walk_kernel.py): the scalar
+small-scan path, the vectorized numpy path, and the jitted jax path must
+agree on winner/queries/hops exactly and on overhead to float tolerance,
+across feasibility patterns including all-infeasible roots, key ties and
+inf keys (unroutable comm)."""
+import numpy as np
+import pytest
+
+from repro.kernels.walk_kernel import scan_reduce, scan_reduce_ref
+
+LQC = 5e-6
+
+
+def _spec_oracle(ok, key, pu_lo, pu_hi, leafcnt, nchild, hopsum, depth, lqc):
+    """The documented closed forms, computed the obvious way."""
+    cs = np.concatenate(([0], np.cumsum(ok.astype(np.int64))))
+    feas = cs[pu_hi] > cs[pu_lo]
+    if not feas[0]:
+        return -1, 0, 0, 0.0
+    ok_idx = np.flatnonzero(ok)
+    w = int(ok_idx[np.argmin(key[ok_idx])])
+    return (w, int(leafcnt[feas].sum()), int(nchild[feas].sum()),
+            float((hopsum[feas] + lqc * leafcnt[feas] * (depth[feas] + 1.0))
+                  .sum()))
+
+
+def _random_plan(rng, n_pus, n_nodes, p_ok):
+    ok = rng.random(n_pus) < p_ok
+    key = rng.random(n_pus) * 1e-2
+    key[rng.random(n_pus) < 0.1] = np.inf          # unroutable comm
+    key[rng.random(n_pus) < 0.2] = 1e-3            # force exact ties
+    lo = rng.integers(0, n_pus, n_nodes)
+    hi = lo + rng.integers(0, n_pus // 2 + 1, n_nodes)
+    np.clip(hi, None, n_pus, out=hi)
+    lo[0], hi[0] = 0, n_pus                        # node 0 is the scan root
+    return (ok, key, lo.astype(np.int64), hi.astype(np.int64),
+            rng.integers(0, 5, n_nodes), rng.integers(0, 4, n_nodes),
+            rng.random(n_nodes) * 1e-4, rng.integers(0, 4, n_nodes)
+            .astype(np.float64))
+
+
+@pytest.mark.parametrize("n_pus,n_nodes", [
+    (3, 2),        # device scan: scalar path
+    (40, 11),      # cluster scan: scalar path
+    (200, 31),     # fleet scan: vectorized path
+])
+@pytest.mark.parametrize("p_ok", [0.0, 0.05, 0.5, 1.0])
+def test_scalar_and_array_paths_match_spec(n_pus, n_nodes, p_ok):
+    rng = np.random.default_rng(n_pus * 7 + int(p_ok * 10))
+    for _ in range(20):
+        plan = _random_plan(rng, n_pus, n_nodes, p_ok)
+        got = scan_reduce_ref(*plan, LQC)
+        want = _spec_oracle(*plan, LQC)
+        assert got[:3] == want[:3]
+        assert got[3] == pytest.approx(want[3], rel=1e-9, abs=1e-15)
+
+
+def test_jax_path_matches_ref(monkeypatch):
+    jax = pytest.importorskip("jax")
+    del jax
+    monkeypatch.setenv("REPRO_WALK_KERNEL", "jax")
+    rng = np.random.default_rng(0)
+    for n_pus, n_nodes in [(6, 3), (200, 31)]:
+        for p_ok in (0.0, 0.4, 1.0):
+            plan = _random_plan(rng, n_pus, n_nodes, p_ok)
+            got = scan_reduce(*plan, LQC)
+            monkeypatch.setenv("REPRO_WALK_KERNEL", "ref")
+            want = scan_reduce(*plan, LQC)
+            monkeypatch.setenv("REPRO_WALK_KERNEL", "jax")
+            assert got[:3] == want[:3]
+            # jitted reduce may run f32 without jax_enable_x64
+            assert got[3] == pytest.approx(want[3], rel=1e-5, abs=1e-9)
