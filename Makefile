@@ -1,7 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-compile bench-session bench-des bench-des-smoke
+.PHONY: test bench bench-compile bench-session bench-des bench-des-smoke \
+        bench-serve bench-serve-smoke
 
 # tier-1 verification (see ROADMAP.md)
 test:
@@ -32,3 +33,15 @@ bench-des:
 # seconds-scale DES parity + mapping-throughput smoke (CI)
 bench-des-smoke:
 	python -m benchmarks.des --smoke
+
+# online serving continuum: seeded Poisson + diurnal traffic through the
+# session-resident ServeLoop at mult=8 and mult=64; writes BENCH_serve.json
+# (requests/sec, p99/p999 latency, per-tenant SLA attainment) and fails on
+# a >20% wall_rps or p99 regression, a >2-point SLA-attainment drop, or
+# any full TimelineEngine rebuild after warmup (engine_opens != 1)
+bench-serve:
+	python -m benchmarks.serve --check
+
+# seconds-scale serving-loop smoke at mult=2 (CI)
+bench-serve-smoke:
+	python -m benchmarks.serve --smoke

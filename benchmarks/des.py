@@ -156,6 +156,12 @@ def run(smoke: bool = False, check: bool = False) -> Table:
     completion_ms = float(np.mean(list(per.values()))) * 1e3
     t.add(f"weak_mining_x{bmult}_completion", completion_ms, "ms",
           devices=sum(ec.values()) + sum(sc.values()), tasks=n_wtasks)
+    # tail metrics via the shared percentile definitions (same as the
+    # online ServeStats — see benchmarks/serve.py / docs/serving.md)
+    pct = stats.latency_percentiles(wcfg)
+    t.add(f"x{bmult}_latency_p50_ms", pct[50.0] * 1e3, "ms")
+    t.add(f"x{bmult}_latency_p99_ms", pct[99.0] * 1e3, "ms")
+    t.add(f"x{bmult}_latency_p999_ms", pct[99.9] * 1e3, "ms")
     t.add(f"x{bmult}_map_s", map_s, "s")
     t.add(f"x{bmult}_map_tasks_per_sec", n_wtasks / map_s, "tasks/s",
           tasks=n_wtasks)

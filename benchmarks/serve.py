@@ -1,0 +1,141 @@
+"""Online serving continuum throughput: ServeLoop co-simulation gates.
+
+Drives seeded open-loop traffic (a Poisson tenant + a diurnal tenant,
+rates scaled with ``mult``) through the session-resident timeline on the
+Fig. 13 mining topology at mult=8 and mult=64 (smoke: mult=2).  Each run
+asserts the zero-rebuild guarantee (``engine_opens == 1``) and records
+
+* sustained co-simulation throughput (``wall_rps`` — requests processed
+  per wall-clock second, the gated metric),
+* tail latency (p50/p99/p999, simulated time — deterministic per seed),
+* per-tenant SLA attainment (a reject counts as a miss) and
+  rejected/deferred counts.
+
+Emits ``BENCH_serve.json``; ``--check`` fails (exit 1) when ``wall_rps``
+at either scale regresses >20% vs the checked-in baseline, when p99
+drifts >20% (it is seed-deterministic, so drift means the engine's event
+order changed), or when SLA attainment drops >2 points; ``--smoke`` runs
+a seconds-scale variant for CI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.core import (DiurnalArrivals, PoissonArrivals, ServeLoop,
+                        TenantSpec, build_orchestrators, build_testbed,
+                        ground_truth_traverser, heye_traverser,
+                        single_task_request)
+from repro.serve.admission import AdmissionController
+
+from .common import Table
+from .scaling import mining_counts
+
+_JSON = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+# ~115 * mult offered rps over a horizon that shrinks with mult, so every
+# scale serves a comparable ~1.1k-request stream and wall_rps isolates
+# per-request co-simulation cost (bigger fleet, same request count)
+_MINING_RATE = 75.0
+_VISION_BASE, _VISION_PEAK = 20.0, 60.0
+_HORIZON = 10.0
+
+
+def _serve_once(mult: int):
+    ec, sc = mining_counts(mult)
+    tb = build_testbed(edge_counts=ec, server_counts=sc)
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    horizon = _HORIZON / mult
+    tenants = [
+        TenantSpec("mining",
+                   PoissonArrivals(rate=_MINING_RATE * mult, seed=11),
+                   single_task_request("svm", origin=tb.edges[0], sla=0.10),
+                   sla=0.10),
+        TenantSpec("vision",
+                   DiurnalArrivals(base_rate=_VISION_BASE * mult,
+                                   peak_rate=_VISION_PEAK * mult,
+                                   period=horizon, seed=12),
+                   single_task_request("mlp", origin=tb.edges[1], sla=0.15),
+                   sla=0.15),
+    ]
+    loop = ServeLoop(tb.graph, root, tenants,
+                     truth=ground_truth_traverser(tb.graph, 0),
+                     admission=AdmissionController(slack=4.0,
+                                                   defer_delay=0.005,
+                                                   max_defers=1),
+                     horizon=horizon)
+    stats = loop.run()
+    if stats.engine_opens != 1:
+        raise AssertionError(
+            f"x{mult}: {stats.engine_opens} TimelineEngine builds "
+            "(the resident-timeline guarantee is exactly 1)")
+    return stats
+
+
+def run(smoke: bool = False, check: bool = False) -> Table:
+    t = Table("serve", "online serving continuum: resident-timeline loop")
+    baseline = json.loads(_JSON.read_text()) if _JSON.exists() else None
+
+    mults = [2] if smoke else [8, 64]
+    for mult in mults:
+        t0 = time.perf_counter()
+        stats = _serve_once(mult)
+        s = stats.summary()
+        t.add(f"x{mult}_requests", s["requests"], "req",
+              accepted=s["accepted"], rejected=s["rejected"],
+              deferrals=s["deferrals"])
+        t.add(f"x{mult}_wall_rps", s["wall_rps"], "req/s",
+              wall_s=round(stats.wall_s, 3))
+        t.add(f"x{mult}_served_rps", s["served_rps"], "req/s",
+              offered_rps=round(s["offered_rps"], 1))
+        t.add(f"x{mult}_p50_ms", s["p50_ms"], "ms")
+        t.add(f"x{mult}_p99_ms", s["p99_ms"], "ms")
+        t.add(f"x{mult}_p999_ms", s["p999_ms"], "ms")
+        t.add(f"x{mult}_sla_attainment", s["sla_attainment"], "frac",
+              **{f"sla_{k}": round(v, 4)
+                 for k, v in s["sla_by_tenant"].items()})
+        t.add(f"x{mult}_engine_opens", s["engine_opens"], "builds",
+              n_events=s["n_events"], mapped_tasks=s["mapped_tasks"],
+              total_s=round(time.perf_counter() - t0, 2))
+
+    payload = {
+        "figure": t.figure,
+        "smoke": smoke,
+        "rows": {r.name: {"value": r.value, "unit": r.unit, **r.extra}
+                 for r in t.rows},
+    }
+    if not smoke:
+        _JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    if check and baseline is not None and not smoke:
+        rows = baseline["rows"]
+        for mult in mults:
+            old = rows.get(f"x{mult}_wall_rps", {}).get("value")
+            new = t.get(f"x{mult}_wall_rps")
+            if old is not None and new < 0.8 * old:
+                t.print_csv()
+                print(f"REGRESSION: x{mult}_wall_rps {new:.0f} < 80% of "
+                      f"baseline {old:.0f}")
+                sys.exit(1)
+            old_p99 = rows.get(f"x{mult}_p99_ms", {}).get("value")
+            new_p99 = t.get(f"x{mult}_p99_ms")
+            if old_p99 is not None and new_p99 > 1.2 * old_p99:
+                t.print_csv()
+                print(f"REGRESSION: x{mult}_p99_ms {new_p99:.2f} > 120% of "
+                      f"baseline {old_p99:.2f} (seed-deterministic: the "
+                      "event order changed)")
+                sys.exit(1)
+            old_att = rows.get(f"x{mult}_sla_attainment", {}).get("value")
+            new_att = t.get(f"x{mult}_sla_attainment")
+            if old_att is not None and new_att < old_att - 0.02:
+                t.print_csv()
+                print(f"REGRESSION: x{mult}_sla_attainment {new_att:.4f} "
+                      f"< baseline {old_att:.4f} - 0.02")
+                sys.exit(1)
+    return t
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    run(smoke="--smoke" in args, check="--check" in args).print_csv()

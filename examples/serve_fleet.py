@@ -1,16 +1,27 @@
-"""Multi-tenant serving on a TPU fleet, placed by the H-EYE Orchestrator.
+"""Multi-tenant serving on a TPU fleet, driven by the online ServeLoop.
 
-    PYTHONPATH=src python examples/serve_fleet.py
+    PYTHONPATH=src python examples/serve_fleet.py             # online loop
+    PYTHONPATH=src python examples/serve_fleet.py --offline   # old batch flow
 
 The paper's mechanism, transplanted to the hardware-adaptation target:
 request streams with latency SLOs arrive at a two-pod fleet; each pod-level
 ORC only sees its own hosts (resource segregation), the fleet ORC only sees
-pod aggregates.  Whole admission waves place in one ``map_batch`` call, the
-Traverser's multi-tenancy slowdown keeps co-located streams within SLO, and
-a host failure (mark_dead — absorbed by an incremental snapshot delta, no
-recompile) triggers a batched re-map via the FT manager — the
-dynamic-adaptability path of §5.4 driving elastic serving.
-One stream is then actually executed with the continuous-batching engine.
+pod aggregates.
+
+**Online (default):** two tenants' open-loop streams (steady Poisson +
+a diurnal burst) flow through ``ServeLoop`` — one session-resident
+``TimelineEngine`` serves the whole run, every admission wave is mapped
+against *current* occupancy, the admission controller defers bursts and
+rejects projected SLO misses, and the report is tail latency + per-tenant
+SLA attainment (docs/serving.md).
+
+**Offline (--offline):** the original place-then-execute comparison —
+one whole wave in a single ``map_batch`` call, then a host failure
+(mark_dead -> incremental snapshot delta, no recompile) triggering a
+batched re-map via the FT manager (the dynamic-adaptability path of §5.4).
+
+Either way, one stream is then actually executed with the
+continuous-batching token engine.
 """
 import sys
 
@@ -22,12 +33,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (Task, build_orchestrators, heye_traverser)
+from repro.core import (DiurnalArrivals, PoissonArrivals, ServeLoop, Task,
+                        TaskGraph, TenantSpec, build_orchestrators,
+                        heye_traverser)
 from repro.core.predict import CallableModel
 from repro.core.topology import build_tpu_fleet
 from repro.ft.manager import FTManager
 from repro.models import ParallelCtx, build_model
+from repro.serve.admission import AdmissionController
 from repro.serve.engine import Request, ServeEngine
+
+OFFLINE = "--offline" in sys.argv[1:]
 
 # --- fleet + performance model ----------------------------------------------
 tb = build_tpu_fleet(n_pods=2, hosts_per_pod=2, chips_per_host=4)
@@ -41,36 +57,76 @@ trav = heye_traverser(g)
 root = build_orchestrators(g, trav)
 print("fleet:", g.summary())
 
-# --- place a whole admission wave (one map_batch call) ----------------------
-def stream(origin_host):
-    t = Task(kind="stream", deadline=0.050, usage={"pu": 1.0, "mem": 0.7})
+
+def stream(origin_host, deadline=0.050):
+    t = Task(kind="stream", deadline=deadline, usage={"pu": 1.0, "mem": 0.7})
     t.origin = origin_host
     return t
 
-N = 28     # pod0 holds 8 chips x 3 tenants = 24; the rest must spill to pod1
-wave = [stream("pod0.host0") for _ in range(N)]
-results = root.map_batch(wave, now=0.0, route=True)
-by_chip: dict[str, int] = {}
-for res in results:
-    by_chip[res.pu] = by_chip.get(res.pu, 0) + 1
-print(f"placed {N} streams on {len(by_chip)} chips in one batch "
-      f"(max {max(by_chip.values())} tenants/chip; SLO-bounded)")
-cross_pod = sum(1 for res in results if res and "pod1" in res.pu)
-print(f"{cross_pod} streams escalated to pod1 via the fleet ORC "
-      "(pod0's ORC never saw pod1's internals)")
 
-# --- a host fails: batched re-map of its streams ------------------------------
-ft = FTManager(g)
-victims = [t for t, res in zip(wave, results) if res and "pod0.host0" in res.pu]
-ft.on_failure(["pod0.host0"])           # mark_dead -> incremental delta patch
-for t in victims:
-    root.ledger.remove(t)
-    t.origin = "pod0.host1"
-re_placed = ft.remap(root, victims, now=0.0)
-print(f"host failure: {len(victims)} streams re-mapped in one batch "
-      f"(snapshot deltas: {g.delta_count}, full recompiles: "
-      f"{g.recompile_count}), new chips:",
-      sorted({res.pu for res in re_placed}))
+if not OFFLINE:
+    # --- online: open-loop tenant streams through the resident timeline -----
+    def stream_request(origin_host, deadline):
+        def make(rid, t):
+            cfg = TaskGraph(f"stream#{rid}")
+            task = stream(origin_host, deadline)
+            task.release_time = t
+            cfg.add(task)
+            return cfg
+        return make
+
+    HORIZON = 2.0
+    tenants = [
+        TenantSpec("steady", PoissonArrivals(rate=500.0, seed=1),
+                   stream_request("pod0.host0", 0.050), sla=0.050),
+        TenantSpec("bursty",
+                   DiurnalArrivals(base_rate=50.0, peak_rate=1500.0,
+                                   period=HORIZON, seed=2),
+                   stream_request("pod1.host0", 0.080), sla=0.080),
+    ]
+    loop = ServeLoop(g, root, tenants,
+                     admission=AdmissionController(slack=1.5,
+                                                   defer_delay=0.01,
+                                                   max_defers=3),
+                     horizon=HORIZON)
+    stats = loop.run()
+    s = stats.summary()
+    print(f"served {s['requests']} requests over {HORIZON:.0f}s sim "
+          f"({s['offered_rps']:.0f} offered rps) with "
+          f"{s['engine_opens']} engine build: "
+          f"{s['accepted']} accepted, {s['rejected']} rejected "
+          f"({s['reject_reasons']}), {s['deferrals']} deferrals")
+    print(f"tail latency: p50 {s['p50_ms']:.1f}ms  p99 {s['p99_ms']:.1f}ms  "
+          f"p999 {s['p999_ms']:.1f}ms")
+    for ten, att in s["sla_by_tenant"].items():
+        print(f"  SLA attainment[{ten}]: {att:.3f}")
+else:
+    # --- offline: place a whole admission wave (one map_batch call) ---------
+    N = 28     # pod0 holds 8 chips x 3 tenants = 24; the rest spill to pod1
+    wave = [stream("pod0.host0") for _ in range(N)]
+    results = root.map_batch(wave, now=0.0, route=True)
+    by_chip: dict[str, int] = {}
+    for res in results:
+        by_chip[res.pu] = by_chip.get(res.pu, 0) + 1
+    print(f"placed {N} streams on {len(by_chip)} chips in one batch "
+          f"(max {max(by_chip.values())} tenants/chip; SLO-bounded)")
+    cross_pod = sum(1 for res in results if res and "pod1" in res.pu)
+    print(f"{cross_pod} streams escalated to pod1 via the fleet ORC "
+          "(pod0's ORC never saw pod1's internals)")
+
+    # --- a host fails: batched re-map of its streams ------------------------
+    ft = FTManager(g)
+    victims = [t for t, res in zip(wave, results)
+               if res and "pod0.host0" in res.pu]
+    ft.on_failure(["pod0.host0"])       # mark_dead -> incremental delta patch
+    for t in victims:
+        root.ledger.remove(t)
+        t.origin = "pod0.host1"
+    re_placed = ft.remap(root, victims, now=0.0)
+    print(f"host failure: {len(victims)} streams re-mapped in one batch "
+          f"(snapshot deltas: {g.delta_count}, full recompiles: "
+          f"{g.recompile_count}), new chips:",
+          sorted({res.pu for res in re_placed}))
 
 # --- actually run one stream with continuous batching ------------------------
 cfg = get_config("gemma3-1b").smoke()
@@ -82,4 +138,6 @@ reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=3).astype(np.int32
                 max_new=6) for i in range(8)]
 done = eng.run(reqs)
 print(f"engine: {len(done)} requests served, "
-      f"{sum(len(r.out) for r in done)} tokens generated")
+      f"{sum(len(r.out) for r in done)} tokens generated "
+      f"({eng.admitted_total} slot admissions, "
+      f"{eng.slot_rejections} slot-exhaustion refusals)")

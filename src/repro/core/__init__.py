@@ -9,6 +9,8 @@ Public surface:
   Traverser / Timeline / TaskPrediction          — contention intervals (§3.4)
   Orchestrator / build_orchestrators / ActiveLedger — Alg. 1 (§3.5)
   SchedulerSession                               — batch-first mapping API
+  ServeLoop / ServeStats / TenantSpec            — online serving continuum
+  PoissonArrivals / DiurnalArrivals              — open-loop traffic models
   build_testbed / build_tpu_fleet                — topologies (Fig. 4, TPU)
   Runtime / policies                             — experiment harness (§5)
 """
@@ -18,7 +20,10 @@ from .hwgraph import (EdgeAttr, HWGraph, Node, NodeKind, Predictable,
 from .orchestrator import (ActiveLedger, MapResult, OrcConfig, Orchestrator,
                            build_orchestrators)
 from .predict import CallableModel, PerfModel, ProfiledModel, RooflineModel
-from .session import RunStats, SchedulerSession
+from .serving import (DiurnalArrivals, PoissonArrivals, ServeLoop,
+                      ServeRequest, ServeStats, TenantSpec,
+                      single_task_request)
+from .session import RunStats, SchedulerSession, percentiles
 from .simulator import (AcePolicy, LatsPolicy, OrchestratorPolicy,
                         Runtime, ground_truth_traverser, heye_traverser)
 from .slowdown import (DecoupledSlowdown, NoSlowdown, SlowdownParams,

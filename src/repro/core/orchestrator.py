@@ -224,6 +224,22 @@ class ActiveLedger:
         if kill.any():
             self._kill(np.nonzero(kill)[0])
 
+    def retire(self, uids) -> int:
+        """Batch-remove *actually completed* tasks (serving-loop ledger
+        reconciliation: the resident timeline's ``drain_finished`` feed,
+        vs. ``prune``'s estimated-finish beliefs).  Returns rows killed;
+        uids already pruned or never ledgered are ignored."""
+        if not self._n:
+            return 0
+        uids = np.asarray(list(uids), dtype=np.int64)
+        if not len(uids):
+            return 0
+        kill = self._live[:self._n] & np.isin(self._uid[:self._n], uids)
+        n = int(kill.sum())
+        if n:
+            self._kill(np.nonzero(kill)[0])
+        return n
+
     def count(self, pu: str) -> int:
         return self._count.get(pu, 0)
 

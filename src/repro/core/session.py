@@ -38,7 +38,25 @@ import numpy as np
 from .hwgraph import HWGraph
 from .orchestrator import MapResult, Orchestrator
 from .task import Task, TaskGraph
+from .timeline import TimelineEngine
 from .traverser import TaskPrediction, Timeline, Traverser
+
+
+def percentiles(values: Iterable[float],
+                qs: Iterable[float] = (50.0, 99.0, 99.9)) -> dict[float, float]:
+    """Tail percentiles (numpy linear interpolation) keyed by q; nan on an
+    empty sample.  Shared by offline ``RunStats`` and online ``ServeStats``
+    so p50/p99/p999 mean the same thing in both reports."""
+    arr = np.asarray([v for v in values], dtype=np.float64)
+    if arr.size == 0:
+        return {float(q): float("nan") for q in qs}
+    qlist = [float(q) for q in qs]
+    vals = np.percentile(arr, qlist)
+    return dict(zip(qlist, (float(v) for v in vals)))
+
+
+def _tenant_of(task: Task) -> str:
+    return str(task.attrs.get("tenant", "default"))
 
 
 @dataclass
@@ -68,6 +86,51 @@ class RunStats:
             if exec_t > 0 and t.uid in self.overhead:
                 ratios.append(self.overhead[t.uid] / exec_t)
         return float(np.mean(ratios)) if ratios else 0.0
+
+    # -- tail metrics (same definitions as serving.ServeStats) -------------
+    def latencies(self, cfg: TaskGraph) -> list[float]:
+        """Per-task ready-to-finish latencies over ``cfg``, in cfg order
+        (tasks that never finished — partial timelines — are skipped)."""
+        return [self.timeline.latency(t) for t in cfg
+                if t.uid in self.timeline.finish]
+
+    def latency_percentiles(self, cfg: TaskGraph,
+                            qs: Iterable[float] = (50.0, 99.0, 99.9),
+                            ) -> dict[float, float]:
+        """p50/p99/p999 task latency — the offline counterpart of the
+        serving report's request tails."""
+        return percentiles(self.latencies(cfg), qs)
+
+    def latencies_by_tenant(self, cfg: TaskGraph) -> dict[str, list[float]]:
+        """Latencies grouped by each task's ``attrs["tenant"]`` (tasks
+        without one land in the "default" group)."""
+        out: dict[str, list[float]] = {}
+        for t in cfg:
+            if t.uid in self.timeline.finish:
+                out.setdefault(_tenant_of(t), []).append(
+                    self.timeline.latency(t))
+        return out
+
+    def latency_percentiles_by_tenant(
+            self, cfg: TaskGraph,
+            qs: Iterable[float] = (50.0, 99.0, 99.9),
+            ) -> dict[str, dict[float, float]]:
+        return {ten: percentiles(vals, qs)
+                for ten, vals in self.latencies_by_tenant(cfg).items()}
+
+    def sla_attainment(self, cfg: TaskGraph) -> dict[str, float]:
+        """Per-tenant fraction of deadline-carrying tasks that met their
+        deadline (tenants with no deadlines are omitted)."""
+        tot: dict[str, int] = {}
+        ok: dict[str, int] = {}
+        for t in cfg:
+            if t.deadline is None or t.uid not in self.timeline.finish:
+                continue
+            ten = _tenant_of(t)
+            tot[ten] = tot.get(ten, 0) + 1
+            ok[ten] = ok.get(ten, 0) + (1 if self.timeline.deadline_met(t)
+                                        else 0)
+        return {ten: ok[ten] / tot[ten] for ten in tot}
 
 
 def _any_supporting(graph: HWGraph, task: Task) -> Optional[MapResult]:
@@ -125,6 +188,10 @@ class SchedulerSession:
         self.results: dict[int, Optional[MapResult]] = {}
         self.mapping: dict[int, str] = {}
         self.unmapped: list[int] = []
+        # session-resident timeline (serving mode); opens count full engine
+        # builds — a healthy serving run opens exactly once
+        self.engine: Optional[TimelineEngine] = None
+        self.engine_opens = 0
 
     # -- submission ---------------------------------------------------------
     def submit(self, work: Union[TaskGraph, Iterable[Task]]) -> "SchedulerSession":
@@ -184,10 +251,16 @@ class SchedulerSession:
             return batch(wave, now)
         return [pol(t, now) for t in wave]
 
-    def map_pending(self) -> dict[int, Optional[MapResult]]:
+    def map_pending(self, fallback: bool = True,
+                    ) -> dict[int, Optional[MapResult]]:
         """Drive the wave loop over everything submitted but not yet
         mapped; commits assignments and charges overhead.  Returns the
-        results of this call only."""
+        results of this call only.
+
+        ``fallback=False`` records a declined task as ``None`` instead of
+        degrading to any supporting PU — the admission-control path, where
+        infeasibility must surface as a reject/defer signal rather than a
+        desperate placement (withdraw the task afterwards)."""
         out: dict[int, Optional[MapResult]] = {}
         comp = self.graph.compiled()
         for now, wave in self._waves():
@@ -202,6 +275,10 @@ class SchedulerSession:
                 self._mapped.add(t.uid)
                 if res is None:
                     self.unmapped.append(t.uid)
+                    if not fallback:
+                        out[t.uid] = None
+                        self.results[t.uid] = None
+                        continue
                     # fall back to any supporting PU so execution remains
                     # defined
                     res = _any_supporting(self.graph, t)
@@ -214,13 +291,64 @@ class SchedulerSession:
                     t.release_time += res.overhead
         return out
 
-    # -- execution ----------------------------------------------------------
-    def execute(self) -> RunStats:
-        """Run everything mapped so far through the ground-truth engine."""
+    def withdraw(self, task: Task) -> None:
+        """Undo a mapping commit and drop ``task`` from the session — the
+        admission-rejection path.  Reverts the overhead charge, clears the
+        ledger belief and ``assigned_pu``, and removes the task from the
+        session CFG.  Tasks already injected into a resident timeline
+        cannot be withdrawn (their intervals are settled history)."""
+        if self.engine is not None and task.uid in self.engine.slot_of:
+            raise ValueError(
+                f"{task} is already injected into the resident timeline")
+        res = self.results.pop(task.uid, None)
+        self.mapping.pop(task.uid, None)
+        self._mapped.discard(task.uid)
+        if task.uid in self.unmapped:
+            self.unmapped.remove(task.uid)
+        if res is not None:
+            if self.charge_overhead:
+                task.release_time -= res.overhead
+            task.assigned_pu = None
+            if isinstance(self.policy, Orchestrator):
+                self.policy.ledger.remove(task)
+        self._cfg.remove(task)
+
+    # -- resident timeline (online serving) ---------------------------------
+    def open_timeline(self, interventions=()) -> TimelineEngine:
+        """Open the session-resident DES timeline: built once, advanced to
+        each admission instant, fed by ``inject``.  The engine shares this
+        session's CFG and mapping dict, so later ``map_pending`` commits
+        are visible without copying.  Anything already submitted must be
+        mapped first (its releases enter the event heap at open)."""
+        if self.engine is not None:
+            raise RuntimeError("resident timeline already open")
         if self.truth is None:
             from .simulator import ground_truth_traverser
             self.truth = ground_truth_traverser(self.graph)
-        tl = self.truth.traverse(self._cfg, self.mapping)
+        self.engine = TimelineEngine.open(
+            self.truth, cfg=self._cfg, mapping=self.mapping,
+            interventions=interventions)
+        self.engine_opens += 1
+        return self.engine
+
+    def inject(self, tasks: Iterable[Task]) -> None:
+        """Push freshly mapped tasks into the resident timeline."""
+        if self.engine is None:
+            raise RuntimeError("open_timeline() first")
+        self.engine.inject(list(tasks))
+
+    def finalize_online(self, drain: bool = True) -> RunStats:
+        """Collect RunStats from the resident timeline.  ``drain=True``
+        advances to quiescence first (every injected task finishes);
+        ``drain=False`` snapshots mid-flight (partial timeline)."""
+        if self.engine is None:
+            raise RuntimeError("open_timeline() first")
+        if drain:
+            self.engine.advance()
+        return self._stats(self.engine.timeline(partial=not drain))
+
+    # -- execution ----------------------------------------------------------
+    def _stats(self, tl: Timeline) -> RunStats:
         stats = RunStats(timeline=tl, mapping=dict(self.mapping),
                          unmapped=list(self.unmapped))
         for uid, res in self.results.items():
@@ -229,6 +357,15 @@ class SchedulerSession:
                 stats.queries[uid] = res.queries
                 stats.hops[uid] = res.hops
         return stats
+
+    def execute(self) -> RunStats:
+        """Run everything mapped so far through the ground-truth engine
+        (a fresh one-shot traverse — the offline path)."""
+        if self.truth is None:
+            from .simulator import ground_truth_traverser
+            self.truth = ground_truth_traverser(self.graph)
+        tl = self.truth.traverse(self._cfg, self.mapping)
+        return self._stats(tl)
 
     def run(self, work: Optional[Union[TaskGraph, Iterable[Task]]] = None,
             ) -> RunStats:

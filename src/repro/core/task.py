@@ -85,6 +85,18 @@ class TaskGraph:
             prev = t
         return out
 
+    def remove(self, task: Task) -> None:
+        """Withdraw ``task`` from the graph (the admission-rejection
+        path).  Dependents of a removed task lose the dependency edge;
+        callers withdrawing whole requests remove every member."""
+        self.tasks = [t for t in self.tasks if t.uid != task.uid]
+        for s in self._succ.pop(task.uid, []):
+            self._pred[s.uid] = [p for p in self._pred.get(s.uid, [])
+                                 if p.uid != task.uid]
+        for p in self._pred.pop(task.uid, []):
+            self._succ[p.uid] = [s for s in self._succ.get(p.uid, [])
+                                 if s.uid != task.uid]
+
     # -- queries -----------------------------------------------------------
     def preds(self, task: Task) -> list[Task]:
         return self._pred.get(task.uid, [])

@@ -41,6 +41,20 @@ reprices every active device pool and link set at that instant.  Both
 engines implement the hook identically, so churn runs stay pinned to
 the 1e-9 parity bound.
 
+**Resident mode** (the serving path): ``TimelineEngine.open(...)``
+brings an engine live without draining it, ``advance(until)`` drains
+every event up to a wall-clock ``now`` and parks there, and
+``inject(tasks)`` lands newly mapped work in the live job/transfer
+tables mid-run — new rows append to the struct-of-arrays columns
+(growable, +inf eta fill), releases enter the same event heap, and any
+output handed over by an already-finished producer is priced by the
+same one-flush reprice path as churn interventions.  Submitting a full
+workload upfront through a resident engine reproduces ``run()`` (and
+therefore the seed loop) to 1e-9: ingest builds the identical tables
+and event sequence.  ``drain_finished``/``finish_of``/
+``timeline(partial=True)`` observe progress without disturbing it; see
+``docs/serving.md``.
+
 Noise semantics: the ground-truth engine draws per-task irregularity
 noise at job start, in event order — the array engine preserves the
 draw order of the seed loop (timed events in push order, completions in
@@ -218,9 +232,11 @@ _ONE = np.ones(1)
 
 
 class TimelineEngine:
-    """One traverse of a CFG under a fixed mapping, on SoA state.
+    """A DES timeline over SoA state: one-shot (``run()``) or resident
+    (``open``/``advance``/``inject``).
 
-    Instantiated per ``Traverser.traverse`` call; the engine freezes the
+    Instantiated per ``Traverser.traverse`` call — or opened once per
+    ``SchedulerSession`` for online serving; the engine freezes the
     compiled snapshot for transfer routes/device names (seed semantics)
     while slowdown factors read the *live* compiled snapshot through the
     model — exactly like the seed loop — so interventions that patch the
@@ -245,89 +261,68 @@ class TimelineEngine:
         self.mapping = mapping
         self.background = list(background)
         self.interventions = list(interventions)
+        self._opened = False
 
     # -- setup --------------------------------------------------------------
-    def _setup(self) -> None:
-        cfg, mapping = self.cfg, self.mapping
+    _JCAP0 = 64         # initial job-table capacity (doubles on growth)
+
+    def _jgrow(self, cap: int) -> None:
+        """Grow the numpy job columns to ``cap`` slots.  The tail fill of
+        ``eta`` is +inf so whole-array scans (``eta.min()``, the
+        completion compare) never see unused capacity."""
+        for col, fill in (("W", 0.0), ("rate", 1.0), ("t_last", 0.0),
+                          ("eta", np.inf), ("U", 1.0), ("memraw", 1.0)):
+            old = getattr(self, col, None)
+            arr = np.full(cap, fill)
+            if old is not None:
+                arr[:len(old)] = old
+            setattr(self, col, arr)
+        for col in ("cstamp", "pu_i", "uid_col"):
+            old = getattr(self, col, None)
+            arr = np.zeros(cap, dtype=np.int64)
+            if old is not None:
+                arr[:len(old)] = old
+            setattr(self, col, arr)
+
+    def _init_state(self) -> None:
         g = self.graph
         comp = g.compiled()          # frozen: routes + device name space
         self.comp = comp
-        tasks = list(cfg)
-        self.tasks = tasks
-        nt = len(tasks)
-        self.nt = nt
-        n = nt + len(self.background)
-        self.n = n
-        slot_of: dict[int, int] = {}
-        pu_i = np.empty(n, dtype=np.int64)
-        for i, t in enumerate(tasks):
-            if t.uid not in mapping:
-                raise KeyError(f"{t} has no mapping")
-            pu_name = mapping[t.uid]
-            pu = g.nodes[pu_name]
-            assert isinstance(pu, ProcessingUnit), pu_name
-            slot_of[t.uid] = i
-            pu_i[i] = comp.pu_index[pu_name]
-        for k, (bt, bpu, _) in enumerate(self.background):
-            slot_of[bt.uid] = nt + k
-            pu_i[nt + k] = comp.pu_index[bpu]
-        self.slot_of = slot_of
-        self.pu_i = pu_i
-        dev_o = comp.pu_dev_ord[pu_i]
-        self.pu_il = pu_i.tolist()
-        self.dev_ol = dev_o.tolist()
-        self.dev_name = [comp.dev_ord_names[o] for o in self.dev_ol]
-        pu_names = [comp.pu_names[p] for p in self.pu_il]
-        self.pu_name = pu_names
-        # per-slot task columns (slowdown inputs + noise irregularity);
-        # numpy for the flush gathers, lists for the scalar handlers
-        bg_tasks = [bt for bt, _, _ in self.background]
-        allt = tasks + bg_tasks
-        self.allt = allt
-        self.uid_col = np.fromiter((t.uid for t in allt),
-                                   dtype=np.int64, count=n)
-        self.uidl = self.uid_col.tolist()
+        self.n = 0
+        self.slot_of: dict[int, int] = {}
+        self._jgrow(self._JCAP0)
+        self.pu_il: list[int] = []
+        self.dev_ol: list[int] = []
+        self.dev_name: list[str] = []
+        self.pu_name: list[str] = []
+        self.allt: list[Task] = []
+        self.is_bg: list[bool] = []
+        self.uidl: list[int] = []
         # generated workloads hand tasks over in uid order: slot order IS
         # uid order and the per-flush pool sorts drop the Python key fn
-        self._uid_monotone = all(a < b for a, b in
-                                 zip(self.uidl, self.uidl[1:]))
-        self.U = np.fromiter((t.usage.get("pu", 1.0) for t in allt),
-                             dtype=np.float64, count=n)
-        self.memraw = np.fromiter((t.usage.get("mem", 1.0) for t in allt),
-                                  dtype=np.float64, count=n)
-        self.irr = [t.attrs.get("irregularity", 1.0) for t in allt]
-        self.rel = [t.release_time for t in tasks]
-        self.in_bytes = [t.input_bytes for t in tasks]
-        # standalone predictions are pure per (task, PU): one table upfront
-        self.sa = [g.nodes[pu_names[i]].predict(t)
-                   for i, t in enumerate(tasks)]
-        self.sa.extend(brem for _, _, brem in self.background)
-        # dependency structure as slot lists
-        self.preds = [[slot_of[p.uid] for p in cfg.preds(t)] for t in tasks]
-        self.succs = [[slot_of[s.uid] for s in cfg.succs(t)] for t in tasks]
-        self.waiting = [len(p) + 1 for p in self.preds]   # +1: release event
-        # pre-churn route freeze: one batched pass instead of a lazy
-        # Dijkstra at each source's first mid-run transfer
-        warm_transfer_routes(comp, cfg, mapping)
-        # work state (vector-settled)
-        self.W = np.zeros(n)
-        self.rate = np.ones(n)
-        self.t_last = np.zeros(n)
-        self.eta = np.full(n, np.inf)
+        self._uid_monotone = True
+        self.irr: list[float] = []
+        self.rel: list[float] = []
+        self.in_bytes: list[float] = []
+        self.sa: list[float] = []
+        self.preds: list[list[int]] = []
+        self.succs: list[list[int]] = []
+        self.waiting: list[int] = []
         # reprice stamps emulate the reference heap's push sequence so
         # *simultaneous* completions settle in the seed's event order
         # (noise draw order is observable); see _complete_* argsorts
-        self.cstamp = np.zeros(n, dtype=np.int64)
         self._stamp = 0
         # timeline columns
-        nan = float("nan")
-        self.start = [nan] * n
-        self.finish = [nan] * n
-        self.standalone = [nan] * n
-        self.ready_t = [nan] * n
-        self.comm_t = [nan] * n
-        self.qwait = [nan] * n
-        self.ready_at = [nan] * n
+        self.start: list[float] = []
+        self.finish: list[float] = []
+        self.standalone: list[float] = []
+        self.ready_t: list[float] = []
+        self.comm_t: list[float] = []
+        self.qwait: list[float] = []
+        self.ready_at: list[float] = []
+        # completion log for resident consumers (``drain_finished``)
+        self._finish_log: list[int] = []
+        self._finish_cursor = 0
         # tenancy
         self.pu_running = [0] * len(comp.pu_names)
         self.max_ten = comp.max_tenancy.tolist()
@@ -375,6 +370,180 @@ class TimelineEngine:
         # snapshot: topology churn drops the cache with the snapshot.
         self._fcache: dict = {}
         self._fcache_comp = None
+
+    def _ingest(self, new_tasks: Sequence[Task]) -> None:
+        """Append ``new_tasks`` to the live job tables.
+
+        Dependencies must point at tasks in this batch or at ones already
+        ingested (inject producers before — or together with — their
+        consumers).  A producer that already *finished* hands its output
+        over at the current instant: the cross-device transfer launches
+        now and is priced by the caller's flush, exactly the churn
+        repricing path."""
+        cfg, mapping, g, comp = self.cfg, self.mapping, self.graph, self.comp
+        base = self.n
+        need = base + len(new_tasks)
+        if need > len(self.W):
+            cap = len(self.W)
+            while cap < need:
+                cap *= 2
+            self._jgrow(cap)
+        slot_of = self.slot_of
+        last_uid = self.uidl[-1] if self.uidl else None
+        mono = self._uid_monotone
+        nan = float("nan")
+        for i, t in enumerate(new_tasks):
+            s = base + i
+            if t.uid in slot_of:
+                raise ValueError(f"{t} is already in the timeline")
+            if t.uid not in mapping:
+                raise KeyError(f"{t} has no mapping")
+            pu_name = mapping[t.uid]
+            pu = g.nodes[pu_name]
+            assert isinstance(pu, ProcessingUnit), pu_name
+            slot_of[t.uid] = s
+            p = int(comp.pu_index[pu_name])
+            self.pu_i[s] = p
+            self.pu_il.append(p)
+            d = int(comp.pu_dev_ord[p])
+            self.dev_ol.append(d)
+            self.dev_name.append(comp.dev_ord_names[d])
+            self.pu_name.append(comp.pu_names[p])
+            self.allt.append(t)
+            self.is_bg.append(False)
+            self.uid_col[s] = t.uid
+            if mono and last_uid is not None and t.uid <= last_uid:
+                mono = False
+            last_uid = t.uid
+            self.uidl.append(t.uid)
+            self.U[s] = t.usage.get("pu", 1.0)
+            self.memraw[s] = t.usage.get("mem", 1.0)
+            self.irr.append(t.attrs.get("irregularity", 1.0))
+            self.rel.append(t.release_time)
+            self.in_bytes.append(t.input_bytes)
+            # standalone predictions are pure per (task, PU)
+            self.sa.append(g.nodes[pu_name].predict(t))
+            self.W[s] = 0.0
+            self.rate[s] = 1.0
+            self.t_last[s] = 0.0
+            self.eta[s] = np.inf
+            self.cstamp[s] = 0
+            for col in (self.start, self.finish, self.standalone,
+                        self.ready_t, self.comm_t, self.qwait,
+                        self.ready_at):
+                col.append(nan)
+        self._uid_monotone = mono
+        self.n = need
+        # dependency structure as slot lists: within-batch edges are wired
+        # from cfg order (one-shot parity); cross-batch producers get this
+        # consumer appended to their successor lists
+        done_preds: list[tuple[int, int]] = []
+        for i, t in enumerate(new_tasks):
+            s = base + i
+            pl: list[int] = []
+            for pt in cfg.preds(t):
+                ps = slot_of.get(pt.uid)
+                if ps is None:
+                    raise ValueError(
+                        f"dependency {pt} of {t} is not in the timeline — "
+                        "inject producers before (or together with) their "
+                        "consumers")
+                pl.append(ps)
+                if ps < base:
+                    self.succs[ps].append(s)
+                    if self.finish[ps] == self.finish[ps]:   # already done
+                        done_preds.append((s, ps))
+            self.preds.append(pl)
+            self.succs.append([slot_of[x.uid] for x in cfg.succs(t)
+                               if slot_of.get(x.uid, -1) >= base])
+            self.waiting.append(len(pl) + 1)   # +1: release event
+        # pre-churn route freeze, batched per ingest (the incremental form
+        # of warm_transfer_routes): origins of roots with off-device input
+        # payloads, producer devices with off-device consumers
+        srcs: set[str] = set()
+        for i, t in enumerate(new_tasks):
+            s = base + i
+            dev = self.dev_name[s]
+            if (t.origin is not None and t.input_bytes > 0
+                    and not self.preds[s] and t.origin != dev):
+                srcs.add(t.origin)
+            if t.output_bytes > 0 and any(
+                    self.dev_name[ss] != dev for ss in self.succs[s]):
+                srcs.add(dev)
+            for ps in self.preds[s]:
+                if ps < base and self.allt[ps].output_bytes > 0 \
+                        and self.dev_name[ps] != dev:
+                    srcs.add(self.dev_name[ps])
+        ensure = getattr(comp, "ensure_routes", None)
+        if srcs and ensure is not None:
+            ensure(srcs)
+        # producers that finished before this batch arrived hand their
+        # output over now; the release event still gates readiness (the
+        # waiting floor is 1 until it drains), so a direct decrement never
+        # starts compute early
+        for s, ps in done_preds:
+            ob = self.allt[ps].output_bytes
+            if not self._launch(s, self.dev_name[ps], self.dev_name[s], ob):
+                self.waiting[s] -= 1
+
+    def _ingest_background(self) -> None:
+        """Background jobs occupy their PU from t=0 with known remaining
+        standalone work; they have no deps, releases, or successors."""
+        comp = self.comp
+        base = self.n
+        need = base + len(self.background)
+        if need > len(self.W):
+            cap = len(self.W)
+            while cap < need:
+                cap *= 2
+            self._jgrow(cap)
+        last_uid = self.uidl[-1] if self.uidl else None
+        mono = self._uid_monotone
+        nan = float("nan")
+        for k, (bt, bpu, brem) in enumerate(self.background):
+            s = base + k
+            self.slot_of[bt.uid] = s
+            p = int(comp.pu_index[bpu])
+            self.pu_i[s] = p
+            self.pu_il.append(p)
+            d = int(comp.pu_dev_ord[p])
+            self.dev_ol.append(d)
+            self.dev_name.append(comp.dev_ord_names[d])
+            self.pu_name.append(comp.pu_names[p])
+            self.allt.append(bt)
+            self.is_bg.append(True)
+            self.uid_col[s] = bt.uid
+            if mono and last_uid is not None and bt.uid <= last_uid:
+                mono = False
+            last_uid = bt.uid
+            self.uidl.append(bt.uid)
+            self.U[s] = bt.usage.get("pu", 1.0)
+            self.memraw[s] = bt.usage.get("mem", 1.0)
+            self.irr.append(bt.attrs.get("irregularity", 1.0))
+            self.rel.append(bt.release_time)
+            self.in_bytes.append(0.0)
+            self.sa.append(brem)
+            self.preds.append([])
+            self.succs.append([])
+            self.waiting.append(0)
+            # running from t=0: occupy the PU and dirty its device pool
+            self.W[s] = brem
+            self.rate[s] = 1.0
+            self.t_last[s] = 0.0
+            self.eta[s] = np.inf
+            for col, v in ((self.start, 0.0), (self.finish, nan),
+                           (self.standalone, brem), (self.ready_t, nan),
+                           (self.comm_t, nan), (self.qwait, nan),
+                           (self.ready_at, nan)):
+                col.append(v)
+            self.pu_running[p] += 1
+            m = self.dev_members.get(d)
+            if m is None:
+                m = self.dev_members[d] = set()
+            m.add(s)
+            self.dirty_devs.add(d)
+        self._uid_monotone = mono
+        self.n = need
 
     def _xgrow(self, cap: int) -> None:
         for col in self.xcols:
@@ -507,13 +676,14 @@ class TimelineEngine:
         self.finish[s] = t
         d = self.dev_ol[s]
         self.dev_members[d].discard(s)
-        if s < self.nt:
-            # successors: dependency bookkeeping + inter-device transfers
-            out_bytes = self.tasks[s].output_bytes
-            src = self.dev_name[s]
-            for ss in self.succs[s]:
-                if not self._launch(ss, src, self.dev_name[ss], out_bytes):
-                    self._arrived(ss)
+        self._finish_log.append(s)
+        # successors: dependency bookkeeping + inter-device transfers
+        # (background slots carry empty successor lists)
+        out_bytes = self.allt[s].output_bytes
+        src = self.dev_name[s]
+        for ss in self.succs[s]:
+            if not self._launch(ss, src, self.dev_name[ss], out_bytes):
+                self._arrived(ss)
         q = self.pu_queue.get(p)
         if q:
             self._start_compute(q.popleft())
@@ -710,25 +880,109 @@ class TimelineEngine:
             else:
                 self._arrived(self.xconsumer[k])
 
-    # -- main loop ----------------------------------------------------------
-    def run(self) -> Timeline:
-        self._setup()
+    # -- lifecycle ----------------------------------------------------------
+    def _start(self) -> None:
+        """Bring the engine live: ingest the initial CFG + background jobs,
+        price the opening intervals, and enqueue releases.  Event push
+        order (interventions, then releases) replays the one-shot loop's
+        sequence numbers exactly."""
+        if self._opened:
+            raise RuntimeError("TimelineEngine is already open")
+        self._init_state()
+        self._ingest(list(self.cfg))
         for t, fn in self.interventions:
             self._push(float(t), _INTERVENE, fn)
-        # background jobs run from t=0 with known remaining standalone work
-        for k, (bt, bpu, brem) in enumerate(self.background):
-            s = self.nt + k
-            self.W[s] = brem
-            self.start[s] = 0.0
-            self.standalone[s] = brem
-            self.pu_running[self.pu_il[s]] += 1
-            d = self.dev_ol[s]
-            self.dev_members.setdefault(d, set()).add(s)
-            self.dirty_devs.add(d)
+        self._ingest_background()
         self._flush()
-        for i, t in enumerate(self.tasks):
-            self._push(t.release_time, _RELEASE, i)
+        for t in self.cfg:
+            self._push(t.release_time, _RELEASE, self.slot_of[t.uid])
+        self._opened = True
 
+    @classmethod
+    def open(cls, traverser, cfg: Optional[TaskGraph] = None,
+             mapping: Optional[dict[int, str]] = None,
+             background: Sequence[tuple[Task, str, float]] = (),
+             interventions: Sequence[tuple[float, Callable[[], Any]]] = (),
+             ) -> "TimelineEngine":
+        """Open a **session-resident** engine: live immediately, advanced
+        incrementally (``advance``), and accepting ``inject`` mid-run.
+
+        ``cfg``/``mapping`` may start empty (the serving case) or carry an
+        initial workload; ``mapping`` is read live, so a dict shared with
+        a ``SchedulerSession`` picks up later commits without copying.
+        Noisy *slowdown models* (rng-bearing ``factor()``) are rejected:
+        their draw stream only replays on the reference loop, which has
+        no resident form."""
+        eng = cls(traverser,
+                  cfg if cfg is not None else TaskGraph("resident"),
+                  mapping if mapping is not None else {},
+                  background, interventions)
+        noisy = getattr(eng.slowdown, "_noisy", None)
+        if noisy is not None and noisy():
+            raise ValueError(
+                "resident timelines require a deterministic slowdown "
+                "model (noisy factor() draws only replay on "
+                "Traverser.traverse_reference)")
+        eng._start()
+        return eng
+
+    def inject(self, tasks: Sequence[Task],
+               mapping: Optional[dict[int, str]] = None) -> "TimelineEngine":
+        """Land newly mapped work in the live job tables mid-run.
+
+        Each task enters at its own ``release_time`` (>= the engine clock:
+        injecting into the past would rewrite settled intervals).  Output
+        handed over by an already-finished producer launches its transfer
+        immediately and is priced by the same one-flush reprice path as
+        churn interventions."""
+        if not self._opened:
+            raise RuntimeError(
+                "inject() requires an open engine — TimelineEngine.open() "
+                "or SchedulerSession.open_timeline()")
+        tasks = list(tasks)
+        if mapping:
+            self.mapping.update(mapping)
+        for t in tasks:
+            if t.release_time < self.time:
+                raise ValueError(
+                    f"{t} releases at {t.release_time:.6g}, before the "
+                    f"engine clock {self.time:.6g}")
+        self._ingest(tasks)
+        for t in tasks:
+            self._push(t.release_time, _RELEASE, self.slot_of[t.uid])
+        if self.dirty_devs or self.dirty_edges:
+            self._flush()
+        return self
+
+    def schedule(self, t: float, fn: Callable[[], Any]) -> None:
+        """Queue a churn intervention at simulated time ``t`` — the
+        resident counterpart of the ``interventions=`` argument."""
+        self._push(float(t), _INTERVENE, fn)
+
+    def finish_of(self, uid: int) -> float:
+        """Finish time of task ``uid`` (nan while pending or running)."""
+        s = self.slot_of.get(uid)
+        return float("nan") if s is None else self.finish[s]
+
+    def drain_finished(self) -> list[Task]:
+        """Tasks that completed since the previous drain (background slots
+        excluded) — the ledger-reconciliation feed for serving loops."""
+        log = self._finish_log
+        out = [self.allt[s] for s in log[self._finish_cursor:]
+               if not self.is_bg[s]]
+        self._finish_cursor = len(log)
+        return out
+
+    @property
+    def live_jobs(self) -> int:
+        """Compute jobs currently occupying a PU."""
+        return int(sum(self.pu_running))
+
+    # -- main loop ----------------------------------------------------------
+    def advance(self, until: float = np.inf) -> "TimelineEngine":
+        """Drain every event with timestamp <= ``until``, then park the
+        clock at ``until`` (when finite).  ``advance()`` with no bound
+        drains to quiescence — the one-shot behaviour."""
         heap = self.heap
         eta = self.eta
         while True:
@@ -739,7 +993,7 @@ class TimelineEngine:
                 t_next = em
             if xm < t_next:
                 t_next = xm
-            if t_next == np.inf:
+            if t_next == np.inf or t_next > until:
                 break
             if t_next > self.time:
                 self.time = t_next
@@ -749,13 +1003,12 @@ class TimelineEngine:
             # (zero-duration pileups surface as fresh same-time work)
             first = True
             while True:
-                ne = self.n_events
                 while heap and heap[0][0] <= time:
                     _, _, kind, payload = heapq.heappop(heap)
                     self.n_events += 1
                     if kind == _RELEASE:
                         s = payload
-                        task = self.tasks[s]
+                        task = self.allt[s]
                         # initial input payload from the origin device
                         if (task.origin is not None and self.in_bytes[s] > 0
                                 and not self.preds[s]):
@@ -785,35 +1038,54 @@ class TimelineEngine:
                 if em > time and xm > time and not (heap and
                                                     heap[0][0] <= time):
                     break
+        if until != np.inf and until > self.time:
+            self.time = until
+        return self
+
+    def run(self) -> Timeline:
+        """One-shot traverse: open, drain to quiescence, report."""
+        self._start()
+        self.advance()
         return self._timeline()
 
-    def _timeline(self) -> Timeline:
-        missing = [t.uid for i, t in enumerate(self.tasks)
-                   if self.finish[i] != self.finish[i]]
-        if missing:
-            raise RuntimeError(f"traverse deadlock: unfinished {missing[:5]}")
+    def timeline(self, partial: bool = False) -> Timeline:
+        """Snapshot the timeline.  ``partial=True`` reports whatever has
+        happened so far (pending/running tasks simply lack entries);
+        ``partial=False`` asserts quiescence, as ``run()`` does."""
+        return self._timeline(partial=partial)
+
+    def _timeline(self, partial: bool = False) -> Timeline:
+        if not partial:
+            missing = [self.uidl[s] for s in range(self.n)
+                       if not self.is_bg[s]
+                       and self.finish[s] != self.finish[s]]
+            if missing:
+                raise RuntimeError(
+                    f"traverse deadlock: unfinished {missing[:5]}")
         tl = Timeline(mapping=dict(self.mapping))
         tl.n_intervals = self.n_intervals
         tl.n_events = self.n_events
-        for i, t in enumerate(self.tasks):
-            uid = t.uid
-            tl.start[uid] = self.start[i]
-            tl.finish[uid] = self.finish[i]
-            tl.standalone[uid] = self.standalone[i]
-            if not math.isnan(self.ready_t[i]):
-                tl.ready[uid] = self.ready_t[i]
-                tl.comm[uid] = self.comm_t[i]
-            if not math.isnan(self.qwait[i]):
-                tl.queue_wait[uid] = self.qwait[i]
-        # background tasks may legitimately still be running; report their
-        # projected finish assuming the final interval persists
-        for k, (bt, _, _) in enumerate(self.background):
-            s = self.nt + k
-            tl.start[bt.uid] = self.start[s]
-            tl.standalone[bt.uid] = self.standalone[s]
+        for s in range(self.n):
+            uid = self.uidl[s]
+            if self.is_bg[s]:
+                # background jobs may legitimately still be running; report
+                # a projected finish assuming the final interval persists
+                tl.start[uid] = self.start[s]
+                tl.standalone[uid] = self.standalone[s]
+                if not math.isnan(self.finish[s]):
+                    tl.finish[uid] = self.finish[s]
+                elif s in self.dev_members.get(self.dev_ol[s], ()):
+                    tl.finish[uid] = self.time + float(self.W[s]
+                                                       / self.rate[s])
+                continue
+            if not math.isnan(self.standalone[s]):
+                tl.start[uid] = self.start[s]
+                tl.standalone[uid] = self.standalone[s]
             if not math.isnan(self.finish[s]):
-                tl.finish[bt.uid] = self.finish[s]
-            elif s in self.dev_members.get(self.dev_ol[s], ()):
-                tl.finish[bt.uid] = self.time + float(self.W[s]
-                                                      / self.rate[s])
+                tl.finish[uid] = self.finish[s]
+            if not math.isnan(self.ready_t[s]):
+                tl.ready[uid] = self.ready_t[s]
+                tl.comm[uid] = self.comm_t[s]
+            if not math.isnan(self.qwait[s]):
+                tl.queue_wait[uid] = self.qwait[s]
         return tl

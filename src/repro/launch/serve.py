@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import (SchedulerSession, Task, build_orchestrators,
-                        heye_traverser)
+                        heye_traverser, percentiles)
 from repro.core.topology import build_tpu_fleet
 from repro.models import ParallelCtx, build_model
 from repro.serve.engine import Request, ServeEngine
@@ -97,12 +97,28 @@ def main(argv=None) -> int:
             for i in range(args.requests)]
     eng = ServeEngine(model, params, max_slots=args.slots,
                       max_len=args.max_len)
+    # continuous batching with per-request wall latency (all requests
+    # arrive at t0: open-loop burst, so latency includes slot queueing)
     t0 = time.time()
-    done = eng.run(reqs)
+    pending, done, lat = list(reqs), [], []
+    while pending or eng.active:
+        if pending and eng.free:
+            admitted = eng.admit_many(pending[:len(eng.free)])
+            del pending[:len(admitted)]
+        for r in eng.step():
+            lat.append(time.time() - t0)
+            done.append(r)
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {eng._tokens_decoded} decode steps)")
+    # tail metrics share the percentile definitions with ServeStats /
+    # RunStats (docs/serving.md)
+    pct = percentiles(lat)
+    print(f"[serve] wall latency p50 {pct[50.0] * 1e3:.0f}ms  "
+          f"p99 {pct[99.0] * 1e3:.0f}ms  p999 {pct[99.9] * 1e3:.0f}ms  "
+          f"({eng.admitted_total} slot admissions, "
+          f"{eng.slot_rejections} slot-exhaustion refusals)")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.out}")
     return 0

@@ -1,0 +1,122 @@
+"""Multi-tenant admission control for the online serving continuum.
+
+Decides per request — **accept**, **reject**, or **defer** — against
+per-tenant SLA deadlines, using the Orchestrator's own Alg. 1 signals:
+
+* *feasibility* — ``Orchestrator.map_batch`` returning ``None`` for a
+  task means no PU passed the constraint walk at current occupancy
+  (eligibility, tenancy, memory, the l.15 deadline re-check of resident
+  tasks), so the request cannot be placed without degrading someone;
+* *projected slowdown* — for a placed task, ``MapResult.prediction.total``
+  is the orchestrator's own end-to-end estimate (standalone x slowdown
+  + comm); a projection beyond ``deadline * slack`` is an SLA miss the
+  controller can refuse up front instead of discovering at p99.
+
+Deferral re-enqueues the request ``defer_delay`` seconds later, up to
+``max_defers`` times — the knob that turns a hard burst into a short
+queue instead of a reject storm.  ``ServeEngine`` slot admission
+(`serve/engine.py`) reports through the same shared claim/telemetry
+path so a controller can treat simulator and token-serving admission
+uniformly.
+
+This module is dependency-light on purpose (no jax, no numpy): it is
+imported by ``core.serving`` and usable from the jax-side serving stack
+alike.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+from typing import Optional, Sequence
+
+
+class Verdict(Enum):
+    ACCEPT = "accept"
+    REJECT = "reject"
+    DEFER = "defer"
+
+
+@dataclass
+class Decision:
+    """One admission outcome.  ``retry_at`` is set iff deferred."""
+
+    verdict: Verdict
+    reason: str = ""
+    retry_at: Optional[float] = None
+
+    @classmethod
+    def accept(cls) -> "Decision":
+        return cls(Verdict.ACCEPT)
+
+    @classmethod
+    def reject(cls, reason: str) -> "Decision":
+        return cls(Verdict.REJECT, reason)
+
+    @classmethod
+    def defer(cls, reason: str, retry_at: float) -> "Decision":
+        return cls(Verdict.DEFER, reason, retry_at)
+
+
+class AdmissionController:
+    """Accept / reject / defer per-tenant bursts against SLA deadlines.
+
+    Knobs:
+
+    ``slack``
+        Projected-completion multiplier: a task whose mapped
+        ``prediction.total`` exceeds ``deadline * slack`` is refused.
+        ``slack=1.0`` admits only what the orchestrator projects to meet
+        its deadline outright; ``>1`` tolerates optimistic projections
+        (the prediction ignores future arrivals); ``float("inf")``
+        disables the projection check (feasibility-only, see
+        :func:`admit_all`).
+    ``defer_delay`` / ``max_defers``
+        A refused request is re-enqueued ``defer_delay`` seconds later
+        instead of rejected, up to ``max_defers`` times per request.
+        ``max_defers=0`` (default) rejects immediately.
+    ``max_inflight``
+        Global per-tenant concurrent-request cap, checked before mapping
+        (a tenant's own ``TenantSpec.max_inflight`` overrides it).
+    """
+
+    def __init__(self, slack: float = 1.0, defer_delay: float = 0.0,
+                 max_defers: int = 0,
+                 max_inflight: Optional[int] = None) -> None:
+        self.slack = float(slack)
+        self.defer_delay = float(defer_delay)
+        self.max_defers = int(max_defers)
+        self.max_inflight = max_inflight
+
+    def _back_off(self, req, now: float, reason: str) -> Decision:
+        if self.defer_delay > 0.0 and req.defers < self.max_defers:
+            return Decision.defer(reason, retry_at=now + self.defer_delay)
+        return Decision.reject(reason)
+
+    def pre_admit(self, req, now: float,
+                  inflight: int) -> Optional[Decision]:
+        """Quota gate before any mapping work is spent.  ``None`` means
+        proceed to mapping; a Decision is a refusal."""
+        cap = req.max_inflight if req.max_inflight is not None \
+            else self.max_inflight
+        if cap is not None and inflight >= cap:
+            return self._back_off(req, now, "inflight_cap")
+        return None
+
+    def post_admit(self, req, results: Sequence, now: float) -> Decision:
+        """Judge the mapped placement: ``results`` holds one
+        ``MapResult`` (or ``None``) per task of the request, from
+        ``map_pending(fallback=False)``."""
+        if any(r is None for r in results):
+            return self._back_off(req, now, "infeasible")
+        if self.slack != float("inf"):
+            for t, r in zip(req.tasks, results):
+                if (t.deadline is not None
+                        and r.prediction.total > t.deadline * self.slack):
+                    return self._back_off(req, now, "projected_sla")
+        return Decision.accept()
+
+
+def admit_all() -> AdmissionController:
+    """Feasibility-only controller: admit everything the orchestrator can
+    place at all, regardless of projected SLA."""
+    return AdmissionController(slack=float("inf"))

@@ -31,6 +31,16 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class SlotAdmission:
+    """Outcome of one slot-claim pass: who got a slot, who hit slot
+    exhaustion.  The shared report for ``admit`` and ``admit_many`` so
+    an admission controller can treat both uniformly."""
+
+    admitted: list[Request] = field(default_factory=list)
+    rejected: list[Request] = field(default_factory=list)
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, max_slots: int = 4,
                  max_len: int = 128, cache_dtype=jnp.float32) -> None:
@@ -44,10 +54,33 @@ class ServeEngine:
         self.pos = np.zeros(max_slots, np.int32)
         self._decode = jax.jit(model.decode_step)
         self._tokens_decoded = 0
+        # slot-admission telemetry (shared by admit / admit_many)
+        self.admitted_total = 0
+        self.slot_rejections = 0
+        self.last_admission: Optional[SlotAdmission] = None
 
     # -- slot management ------------------------------------------------------
+    def _claim_slots(self, reqs: list[Request]) -> SlotAdmission:
+        """The one slot-claim path: every admission route reports slot
+        exhaustion through the same counters and ``last_admission``."""
+        report = SlotAdmission()
+        for req in reqs:
+            if not self.free:
+                report.rejected.append(req)
+                continue
+            req.slot = self.free.pop()
+            self.active[req.slot] = req
+            report.admitted.append(req)
+        self.admitted_total += len(report.admitted)
+        self.slot_rejections += len(report.rejected)
+        self.last_admission = report
+        return report
+
     def admit(self, req: Request) -> bool:
-        """One-request shim over :meth:`admit_many` (kept for compatibility)."""
+        """One-request shim over :meth:`admit_many`: same claim, prefill,
+        and slot-exhaustion telemetry path (``last_admission`` /
+        ``slot_rejections``), so a False return is observably identical
+        to the request landing in ``admit_many``'s leftover set."""
         return bool(self.admit_many([req]))
 
     def admit_many(self, reqs: list[Request]) -> list[Request]:
@@ -55,14 +88,9 @@ class ServeEngine:
         fit, then prefill *all* claimed slots together — one decode step
         per prompt position across the batch instead of one per token per
         request (mirrors the scheduler's frontier batching).  Returns the
-        admitted requests; the rest stay with the caller."""
-        admitted: list[Request] = []
-        for req in reqs:
-            if not self.free:
-                break
-            req.slot = self.free.pop()
-            self.active[req.slot] = req
-            admitted.append(req)
+        admitted requests; the rest stay with the caller (and are listed
+        in ``last_admission.rejected``)."""
+        admitted = self._claim_slots(reqs).admitted
         if not admitted:
             return admitted
         last: dict[int, np.ndarray] = {}

@@ -55,6 +55,35 @@ def test_engine_slot_recycling(served):
     assert len(eng.free) == 2 and not eng.active
 
 
+def test_admit_matches_admit_many_telemetry(served):
+    """The one-request ``admit`` shim reports slot exhaustion through the
+    identical claim/telemetry path as ``admit_many``."""
+    cfg, model, params = served
+    eng = ServeEngine(model, params, max_slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=np.array([i + 1], np.int32), max_new=2)
+            for i in range(4)]
+    assert eng.admit(reqs[0]) is True
+    assert eng.admitted_total == 1 and eng.slot_rejections == 0
+    assert [r.rid for r in eng.last_admission.admitted] == [0]
+    # batch path: one slot left, two requests -> one in, one reported out
+    leftover = eng.admit_many(reqs[1:3])
+    assert [r.rid for r in leftover] == [1]
+    assert eng.admitted_total == 2 and eng.slot_rejections == 1
+    assert [r.rid for r in eng.last_admission.rejected] == [2]
+    # shim on a full pool: same counters + last_admission shape as the
+    # batch path's leftover set
+    assert eng.admit(reqs[3]) is False
+    assert eng.slot_rejections == 2
+    assert eng.last_admission.admitted == []
+    assert [r.rid for r in eng.last_admission.rejected] == [3]
+    assert reqs[3].slot == -1
+    # drain; recycled slots admit again through the same path
+    while eng.active:
+        eng.step()
+    assert eng.admit(reqs[3]) is True
+    assert eng.admitted_total == 3
+
+
 # ---------------------------------------------------------------------------
 # fault tolerance
 # ---------------------------------------------------------------------------
