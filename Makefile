@@ -23,14 +23,17 @@ bench-session:
 	python -m benchmarks.graph_compile session --check
 
 # array-native DES engine vs the seed heapq loop at mult=8 oversubscribed,
-# plus the mult=128 lazy snapshot build and the fused wave-batched mapping
-# walk over the whole fleet; writes BENCH_des.json and fails on a >20%
-# events/sec or mapped-tasks/sec regression, a <3x speedup vs the seed
-# loop, or mult=128 mapping breaching its absolute 2 s budget
+# plus the mult=128 lazy snapshot build and the group-sharded wave-batched
+# mapping walk over the whole mult=128 and mult=256 fleets (shard-count
+# rows + sharded-vs-fused bit-identity at mult=8); writes BENCH_des.json
+# and fails on a >20% events/sec or mapped-tasks/sec (x128 or x256)
+# regression, a <3x speedup vs the seed loop, or the absolute mapping
+# walls (x128 3 s, x256 12 s)
 bench-des:
 	python -m benchmarks.des --check
 
-# seconds-scale DES parity + mapping-throughput smoke (CI)
+# seconds-scale DES parity + mapping-throughput smoke, incl. the mult=8
+# sharded-walk parity assert (CI)
 bench-des-smoke:
 	python -m benchmarks.des --smoke
 

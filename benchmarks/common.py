@@ -1,8 +1,12 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 
 import numpy as np
 
@@ -40,6 +44,92 @@ class Table:
 
     def get(self, name: str) -> float:
         return next(r.value for r in self.rows if r.name == name)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json schema: one writer + one gate checker for every benchmark
+# ---------------------------------------------------------------------------
+def bench_payload(t: Table, smoke: bool = False,
+                  gates: dict | None = None) -> dict:
+    """The shared ``BENCH_*.json`` layout every benchmark writes:
+
+    ``figure``/``smoke``      what ran (smoke payloads are never written),
+    ``meta``                  run metadata (host shape + wall time) so a
+                              checked-in baseline carries the machine it
+                              was measured on,
+    ``gates``                 the regression thresholds the ``--check``
+                              mode enforced when the file was written
+                              (documentation for the next reader, and the
+                              CI diff shows threshold changes explicitly),
+    ``rows``                  ``{name: {value, unit, **extra}}``.
+    """
+    return {
+        "figure": t.figure,
+        "smoke": smoke,
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "cpus": os.cpu_count(),
+            "wall_s": round(time.time() - t.t0, 2),
+        },
+        "gates": gates or {},
+        "rows": {r.name: {"value": r.value, "unit": r.unit, **r.extra}
+                 for r in t.rows},
+    }
+
+
+def write_payload(t: Table, path: Path, smoke: bool = False,
+                  gates: dict | None = None) -> None:
+    """Serialize ``t`` to ``path`` in the shared schema (no-op in smoke
+    mode: smoke rows are tiny variants and must never become baselines)."""
+    if smoke:
+        return
+    path.write_text(json.dumps(bench_payload(t, smoke, gates), indent=2)
+                    + "\n")
+
+
+def check_gate(t: Table, baseline: dict | None, name: str,
+               floor_ratio: float | None = None,
+               ceil_ratio: float | None = None,
+               floor_delta: float | None = None,
+               note: str = "") -> str | None:
+    """One baseline-relative regression gate; returns the failure message
+    (or None).  Exactly one of the three thresholds applies:
+
+    * ``floor_ratio=0.8``   fail when new < 80% of baseline (throughput),
+    * ``ceil_ratio=1.2``    fail when new > 120% of baseline (latency),
+    * ``floor_delta=0.02``  fail when new < baseline - 0.02 (fractions).
+
+    Missing baseline / missing row means no gate (first run, renamed row).
+    """
+    if baseline is None:
+        return None
+    old = baseline.get("rows", {}).get(name, {}).get("value")
+    if old is None:
+        return None
+    new = t.get(name)
+    suffix = f" ({note})" if note else ""
+    if floor_ratio is not None and new < floor_ratio * old:
+        return (f"REGRESSION: {name} {new:.6g} < {floor_ratio:.0%} of "
+                f"baseline {old:.6g}{suffix}")
+    if ceil_ratio is not None and new > ceil_ratio * old:
+        return (f"REGRESSION: {name} {new:.6g} > {ceil_ratio:.0%} of "
+                f"baseline {old:.6g}{suffix}")
+    if floor_delta is not None and new < old - floor_delta:
+        return (f"REGRESSION: {name} {new:.6g} < baseline {old:.6g} - "
+                f"{floor_delta:g}{suffix}")
+    return None
+
+
+def fail_gates(t: Table, failures: list) -> None:
+    """Print the CSV + every non-None gate failure, then exit 1."""
+    import sys
+    failures = [f for f in failures if f]
+    if failures:
+        t.print_csv()
+        for f in failures:
+            print(f)
+        sys.exit(1)
 
 
 def make_policy(name: str, tb):

@@ -13,7 +13,7 @@ import time
 
 import numpy as np
 
-from repro.core import Runtime, build_testbed, vr_workload
+from repro.core import Churn, Runtime, build_testbed, vr_workload
 from repro.core.workloads import vr_frame_qos_failure
 from repro.core.topology import EDGE_FPS
 
@@ -31,7 +31,7 @@ def run() -> Table:
     for bw_gbps in (10.0, 7.5, 5.0, 2.5, 1.0):
         tb = build_testbed(edge_counts=EDGES, server_counts=SERVERS)
         target = tb.edges[0]                      # orin_agx
-        tb.graph.set_bandwidth(f"link_{target}", bw_gbps * Gb)
+        tb.graph.apply_churn(Churn(bandwidth=[(f"link_{target}", bw_gbps * Gb)]))
         cfg = vr_workload(tb, n_frames=10)
         stats = Runtime(tb.graph, seed=0).run(cfg, make_policy("heye", tb))
         fail = vr_frame_qos_failure(cfg, stats.timeline)
@@ -46,7 +46,8 @@ def run() -> Table:
         # round trip no longer fits the render share, shrink the frame until
         # it does (resolution = task size scaling)
         tb2 = build_testbed(edge_counts=EDGES, server_counts=SERVERS)
-        tb2.graph.set_bandwidth(f"link_{tb2.edges[0]}", bw_gbps * Gb)
+        tb2.graph.apply_churn(
+            Churn(bandwidth=[(f"link_{tb2.edges[0]}", bw_gbps * Gb)]))
         comm = tb2.graph.transfer_time(tb2.edges[0], tb2.servers[1], 250e3)
         period = 1.0 / EDGE_FPS["orin_agx"]
         budget = 0.33 * period                   # render+encode pipeline slice

@@ -30,7 +30,7 @@ from repro.core import (DiurnalArrivals, PoissonArrivals, ServeLoop,
                         single_task_request)
 from repro.serve.admission import AdmissionController
 
-from .common import Table
+from .common import Table, check_gate, fail_gates, write_payload
 from .scaling import mining_counts
 
 _JSON = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
@@ -100,39 +100,20 @@ def run(smoke: bool = False, check: bool = False) -> Table:
               n_events=s["n_events"], mapped_tasks=s["mapped_tasks"],
               total_s=round(time.perf_counter() - t0, 2))
 
-    payload = {
-        "figure": t.figure,
-        "smoke": smoke,
-        "rows": {r.name: {"value": r.value, "unit": r.unit, **r.extra}
-                 for r in t.rows},
-    }
-    if not smoke:
-        _JSON.write_text(json.dumps(payload, indent=2) + "\n")
-    if check and baseline is not None and not smoke:
-        rows = baseline["rows"]
-        for mult in mults:
-            old = rows.get(f"x{mult}_wall_rps", {}).get("value")
-            new = t.get(f"x{mult}_wall_rps")
-            if old is not None and new < 0.8 * old:
-                t.print_csv()
-                print(f"REGRESSION: x{mult}_wall_rps {new:.0f} < 80% of "
-                      f"baseline {old:.0f}")
-                sys.exit(1)
-            old_p99 = rows.get(f"x{mult}_p99_ms", {}).get("value")
-            new_p99 = t.get(f"x{mult}_p99_ms")
-            if old_p99 is not None and new_p99 > 1.2 * old_p99:
-                t.print_csv()
-                print(f"REGRESSION: x{mult}_p99_ms {new_p99:.2f} > 120% of "
-                      f"baseline {old_p99:.2f} (seed-deterministic: the "
-                      "event order changed)")
-                sys.exit(1)
-            old_att = rows.get(f"x{mult}_sla_attainment", {}).get("value")
-            new_att = t.get(f"x{mult}_sla_attainment")
-            if old_att is not None and new_att < old_att - 0.02:
-                t.print_csv()
-                print(f"REGRESSION: x{mult}_sla_attainment {new_att:.4f} "
-                      f"< baseline {old_att:.4f} - 0.02")
-                sys.exit(1)
+    gates = {f"x{mult}_{metric}": thr for mult in mults for metric, thr in (
+        ("wall_rps", {"floor_ratio": 0.8}),
+        ("p99_ms", {"ceil_ratio": 1.2}),
+        ("sla_attainment", {"floor_delta": 0.02}),
+    )}
+    write_payload(t, _JSON, smoke, gates)
+    if check and not smoke:
+        fail_gates(t, [msg for mult in mults for msg in (
+            check_gate(t, baseline, f"x{mult}_wall_rps", floor_ratio=0.8),
+            check_gate(t, baseline, f"x{mult}_p99_ms", ceil_ratio=1.2,
+                       note="seed-deterministic: the event order changed"),
+            check_gate(t, baseline, f"x{mult}_sla_attainment",
+                       floor_delta=0.02),
+        )])
     return t
 
 

@@ -42,8 +42,8 @@ class DirectServerPolicy(OrchestratorPolicy):
                 res.hops += 1
                 res.overhead += orc._hop_cost(self.server_orc)
         if res is None:
-            res = orc.map_task(task, now)      # fall back to full search
-            return res
+            # fall back to full search
+            return orc.map_batch([task], now)[0]
         orc.ledger.add(task, res.pu, res.prediction, now)
         task.assigned_pu = res.pu
         return res
@@ -67,7 +67,7 @@ class StickyPolicy(OrchestratorPolicy):
                 task.assigned_pu = pu
                 return MapResult(pu=pu, prediction=pred, queries=1,
                                  overhead=orc.config.local_query_cost)
-        res = orc.map_task(task, now)
+        res = orc.map_batch([task], now)[0]
         if res is not None:
             self.last[key] = res.pu
         return res
@@ -84,7 +84,7 @@ class GroupedPolicy(OrchestratorPolicy):
 
     def __call__(self, task, now):
         orc = self.root.find_device_orc(task.origin)
-        res = orc.map_task(task, now)
+        res = orc.map_batch([task], now)[0]
         if res is None:
             return None
         key = (task.origin, round(now, 9))

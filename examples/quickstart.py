@@ -41,8 +41,8 @@ print(f"dnn on {edge}.gpu: alone {alone.total * 1e3:.1f} ms, "
       f"(slowdown {busy.factor:.2f}x)")
 
 # --- 3. batch-first task mapping (Orchestrator, §3.5 Alg. 1) ----------------
-# a whole frontier of ready tasks maps in ONE call; map_task still exists
-# as a deprecated one-element shim for exploratory use
+# a whole frontier of ready tasks maps in ONE call; for a single task,
+# map a one-element frontier: map_batch([task], now)[0]
 root = build_orchestrators(g, trav)
 frontier = [make_task("render", origin=tb.edges[1], deadline=0.020,
                       input_bytes=4e3),

@@ -14,11 +14,11 @@ Public surface:
   build_testbed / build_tpu_fleet                — topologies (Fig. 4, TPU)
   Runtime / policies                             — experiment harness (§5)
 """
-from .compiled import CompiledHWGraph
-from .hwgraph import (EdgeAttr, HWGraph, Node, NodeKind, Predictable,
+from .compiled import CompiledHWGraph, ShardedHWGraph
+from .hwgraph import (Churn, EdgeAttr, HWGraph, Node, NodeKind, Predictable,
                       ProcessingUnit, Unit)
 from .orchestrator import (ActiveLedger, MapResult, OrcConfig, Orchestrator,
-                           build_orchestrators)
+                           ShardedLedger, build_orchestrators)
 from .predict import CallableModel, PerfModel, ProfiledModel, RooflineModel
 from .serving import (DiurnalArrivals, PoissonArrivals, ServeLoop,
                       ServeRequest, ServeStats, TenantSpec,

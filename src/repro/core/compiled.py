@@ -53,7 +53,8 @@ and ``tests/test_session.py`` (delta vs. fresh recompile under churn):
 """
 from __future__ import annotations
 
-from typing import Optional
+import threading
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -181,6 +182,12 @@ class CompiledHWGraph:
         self._build_pus()
         self._build_ncr()
         self._build_routes()
+        # serializes lazy route-row materialization: the sharded walk
+        # driver fans group scans out over host threads, and ``built[i]``
+        # flips True before the row's lat/ibw entries are written — the
+        # lock makes check-then-build atomic (shared across delta clones;
+        # they share the authoring graph and route-holder family anyway)
+        self._rt_lock = threading.RLock()
 
     # ------------------------------------------------------------------
     # build: PU index space
@@ -317,10 +324,13 @@ class CompiledHWGraph:
 
     def _ensure_row(self, i: int) -> None:
         if not self._rt.built[i]:
-            if _have_scipy():
-                self._build_rows_fast([i])
-            else:
-                self._rebuild_route_row(i)
+            with self._rt_lock:
+                if self._rt.built[i]:
+                    return
+                if _have_scipy():
+                    self._build_rows_fast([i])
+                else:
+                    self._rebuild_route_row(i)
 
     def _node_space(self) -> tuple[list, dict]:
         """Global node name list / index map in ``graph.nodes`` order —
@@ -355,20 +365,21 @@ class CompiledHWGraph:
         goes through the batched builder (one multi-source Dijkstra — its
         per-call setup amortizes even for a single row on fleet-sized
         graphs); the per-row heapq path remains the no-scipy fallback."""
-        idxs: list[int] = []
-        seen: set[int] = set()
-        for s in srcs:
-            i = self.routable_index.get(s) if isinstance(s, str) else int(s)
-            if i is None or i in seen or self._rt.built[i]:
-                continue
-            seen.add(i)
-            idxs.append(i)
-        if idxs and _have_scipy():
-            self._build_rows_fast(idxs)
-        else:
-            for i in idxs:
-                self._rebuild_route_row(i)
-        return len(idxs)
+        with self._rt_lock:
+            idxs: list[int] = []
+            seen: set[int] = set()
+            for s in srcs:
+                i = self.routable_index.get(s) if isinstance(s, str) else int(s)
+                if i is None or i in seen or self._rt.built[i]:
+                    continue
+                seen.add(i)
+                idxs.append(i)
+            if idxs and _have_scipy():
+                self._build_rows_fast(idxs)
+            else:
+                for i in idxs:
+                    self._rebuild_route_row(i)
+            return len(idxs)
 
     def _build_rows_fast(self, idxs: list) -> None:
         """Materialize many route rows at once: one multi-source scipy
@@ -580,6 +591,8 @@ class CompiledHWGraph:
         c.version = self.version + 1
         # the batched-builder ctx bakes in aliveness; re-derive post-delta
         c.__dict__.pop("_fast_route_ctx", None)
+        # per-group shard views slice aliveness/NCR state; re-slice lazily
+        c.__dict__.pop("_sharded", None)
         return c
 
     def _delta_bandwidth(self, edge_name: str) -> "CompiledHWGraph":
@@ -840,3 +853,125 @@ class CompiledHWGraph:
         return (f"CompiledHWGraph({P} PUs, {len(self.resource_names)} resources, "
                 f"{len(self.rclass_names)} rclasses, "
                 f"{len(self.routable_names)} routable, v{self.version})")
+
+    # ------------------------------------------------------------------
+    # per-ORC-group shard views (the sharded orchestration snapshot)
+    # ------------------------------------------------------------------
+    def sharded(self, groups: dict, validate: bool = True,
+                ) -> "ShardedHWGraph":
+        """Slice this snapshot into block-diagonal per-group views.
+
+        ``groups`` maps a shard name (an ORC device-group subtree, e.g. a
+        root ORC child) to the device-group names it owns.  The result is
+        cached per (snapshot, partition) — ``_clone`` drops the cache, so
+        post-delta snapshots re-slice lazily.  See ``docs/sharding.md``.
+        """
+        key = tuple(sorted((k, tuple(v)) for k, v in groups.items()))
+        hit = self.__dict__.get("_sharded")
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        sh = ShardedHWGraph(self, groups, validate=validate)
+        self._sharded = (key, sh)
+        return sh
+
+
+class GroupShard:
+    """Block-diagonal view of one ORC device group: the group's PU rows
+    remapped into a dense local index space, its NCR block, and slices of
+    the per-PU state columns.  ``pu_idx`` maps local ordinals back to the
+    parent snapshot's global PU ordinals (ascending, so slicing preserves
+    global order)."""
+
+    __slots__ = ("name", "devices", "pu_idx", "pu_names", "local_index",
+                 "pu_alive", "mem_cap", "max_tenancy", "ncr_res",
+                 "ncr_rclass", "pu_dev_ord")
+
+    def __init__(self, comp: CompiledHWGraph, name: str,
+                 devices: Sequence[str]) -> None:
+        self.name = name
+        self.devices = tuple(devices)
+        ords = [comp.dev_ord[d] for d in self.devices if d in comp.dev_ord]
+        sel = (np.flatnonzero(np.isin(comp.pu_dev_ord, ords)) if ords
+               else np.zeros(0, dtype=np.int64))
+        self.pu_idx = sel
+        self.pu_names = [comp.pu_names[i] for i in sel]
+        self.local_index = {n: k for k, n in enumerate(self.pu_names)}
+        self.pu_alive = comp.pu_alive[sel]
+        self.mem_cap = comp.mem_cap[sel]
+        self.max_tenancy = comp.max_tenancy[sel]
+        self.ncr_res = comp.ncr_res[np.ix_(sel, sel)]
+        self.ncr_rclass = comp.ncr_rclass[np.ix_(sel, sel)]
+        self.pu_dev_ord = comp.pu_dev_ord[sel]
+
+    def __len__(self) -> int:
+        return len(self.pu_names)
+
+    def __repr__(self) -> str:
+        return (f"GroupShard({self.name}: {len(self.pu_names)} PUs, "
+                f"{len(self.devices)} devices)")
+
+
+class ShardedHWGraph:
+    """``CompiledHWGraph`` sliced into per-ORC-group :class:`GroupShard`
+    block-diagonal views.
+
+    The slices are sound because compute paths never cross device (and a
+    fortiori group) boundaries: every cross-group NCR entry is ``-1`` by
+    construction, which ``validate=True`` asserts pairwise.  The route
+    table is **shared copy-on-write** with the parent snapshot — shards
+    reference the same ``_RouteTable`` holder; ``apply_delta`` replaces
+    the holder on a *clone* (never patches shared rows in place), and the
+    clone re-slices its shards, so a shard's route view can never go
+    half-patched.  Cross-group work (the root ORC's boundary scan) keeps
+    using the parent snapshot's full matrices — reconciliation happens
+    through the NCR matrix, not through any shard."""
+
+    def __init__(self, comp: CompiledHWGraph, groups: dict,
+                 validate: bool = True) -> None:
+        self.comp = comp
+        self.routes = comp._rt           # shared COW route layer
+        self.shards: list[GroupShard] = [
+            GroupShard(comp, name, devs) for name, devs in groups.items()]
+        self.shard_index = {s.name: i for i, s in enumerate(self.shards)}
+        self.shard_of_device: dict[str, str] = {}
+        claimed = np.zeros(len(comp.pu_names), dtype=bool)
+        for s in self.shards:
+            if claimed[s.pu_idx].any():
+                raise ValueError(
+                    f"shard {s.name!r} overlaps an earlier shard")
+            claimed[s.pu_idx] = True
+            for d in s.devices:
+                self.shard_of_device[d] = s.name
+        if validate:
+            self._validate_block_diagonal()
+
+    def _validate_block_diagonal(self) -> None:
+        """The boundary-reconciliation invariant: PUs of different groups
+        share no compute-path resource, so every cross-shard NCR entry is
+        -1 and per-shard constraint checks compose exactly."""
+        for a in self.shards:
+            for b in self.shards:
+                if a is b or not len(a.pu_idx) or not len(b.pu_idx):
+                    continue
+                blk = self.comp.ncr_res[np.ix_(a.pu_idx, b.pu_idx)]
+                if (blk != -1).any():
+                    raise ValueError(
+                        f"groups {a.name!r} and {b.name!r} share a "
+                        "compute-path resource: the partition is not "
+                        "block-diagonal")
+
+    def shard(self, name: str) -> GroupShard:
+        return self.shards[self.shard_index[name]]
+
+    def shard_of(self, device: str) -> Optional[str]:
+        """Owning shard name of a device group (None when unclaimed)."""
+        return self.shard_of_device.get(device)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def summary(self) -> str:
+        parts = ", ".join(f"{s.name}:{len(s)}" for s in self.shards)
+        return (f"ShardedHWGraph(v{self.comp.version}, "
+                f"{len(self.shards)} shards [{parts}])")

@@ -29,10 +29,11 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import warnings
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Iterable, Optional, Sequence
 
 
 class NodeKind(Enum):
@@ -132,6 +133,39 @@ class ProcessingUnit(Node, Predictable):
 
     def invalidate(self) -> None:
         self._compute_path = None
+
+
+@dataclass(frozen=True)
+class Churn:
+    """One batch of topology churn — the consolidated delta surface.
+
+    Replaces the three per-call entrypoints (``mark_dead`` /
+    ``mark_alive`` / ``set_bandwidth``): a single ``Churn`` value can be
+    applied immediately (``HWGraph.apply_churn``), scheduled on a running
+    timeline (``TimelineEngine.schedule(t, churn)``), injected mid-run
+    through the one-flush reprice path (``TimelineEngine.apply_churn``),
+    or routed through all three by ``SchedulerSession.churn``.
+
+    Application order within a batch is deaths, then revivals, then
+    bandwidth changes; each mutation delta-patches the compiled snapshot
+    via ``CompiledHWGraph.apply_delta`` exactly as the old sequential
+    calls did."""
+
+    dead: Sequence[str] = ()
+    alive: Sequence[str] = ()
+    bandwidth: Sequence[tuple[str, float]] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "dead", tuple(self.dead))
+        object.__setattr__(self, "alive", tuple(self.alive))
+        object.__setattr__(self, "bandwidth",
+                           tuple((e, float(b)) for e, b in self.bandwidth))
+
+    def __bool__(self) -> bool:
+        return bool(self.dead or self.alive or self.bandwidth)
+
+    def __len__(self) -> int:
+        return len(self.dead) + len(self.alive) + len(self.bandwidth)
 
 
 class HWGraph:
@@ -340,20 +374,33 @@ class HWGraph:
             stack.extend(self._children.get(cur, []))
         return out
 
-    def mark_dead(self, name: str) -> None:
+    def apply_churn(self, churn: "Churn") -> None:
+        """Apply one :class:`Churn` delta batch — the single topology-churn
+        entrypoint (deaths, then revivals, then bandwidth changes).  Each
+        mutation routes through ``_after_mutation`` exactly like the old
+        per-call surface, so ``CompiledHWGraph.apply_delta`` sees the same
+        sequence of patches and parity with sequential churn holds."""
+        for name in churn.dead:
+            self._mark_dead(name)
+        for name in churn.alive:
+            self._mark_alive(name)
+        for edge_name, bandwidth in churn.bandwidth:
+            self._set_bandwidth(edge_name, bandwidth)
+
+    def _mark_dead(self, name: str) -> None:
         """Node failure: the node (and its subtree) stops being schedulable."""
         names = self._subtree(name)
         for cur in names:
             self.nodes[cur].alive = False
         self._after_mutation("mark_dead", names=names)
 
-    def mark_alive(self, name: str) -> None:
+    def _mark_alive(self, name: str) -> None:
         names = self._subtree(name)
         for cur in names:
             self.nodes[cur].alive = True
         self._after_mutation("mark_alive", names=names)
 
-    def set_bandwidth(self, edge_name: str, bandwidth: float) -> None:
+    def _set_bandwidth(self, edge_name: str, bandwidth: float) -> None:
         """Dynamic network conditions (paper §5.4.1)."""
         found = False
         for adj in self._adj.values():
@@ -364,6 +411,35 @@ class HWGraph:
         if not found:
             raise KeyError(f"no edge named {edge_name!r}")
         self._after_mutation("set_bandwidth", edge_name=edge_name)
+
+    # -- deprecated per-call churn shims ------------------------------------
+    def mark_dead(self, name: str) -> None:
+        """.. deprecated:: batch churn through :meth:`apply_churn` (or
+        ``SchedulerSession.churn``)."""
+        warnings.warn(
+            "HWGraph.mark_dead is deprecated: apply churn as a delta batch "
+            "via HWGraph.apply_churn(Churn(dead=[...])) or "
+            "SchedulerSession.churn(...)", DeprecationWarning, stacklevel=2)
+        self._mark_dead(name)
+
+    def mark_alive(self, name: str) -> None:
+        """.. deprecated:: batch churn through :meth:`apply_churn` (or
+        ``SchedulerSession.churn``)."""
+        warnings.warn(
+            "HWGraph.mark_alive is deprecated: apply churn as a delta batch "
+            "via HWGraph.apply_churn(Churn(alive=[...])) or "
+            "SchedulerSession.churn(...)", DeprecationWarning, stacklevel=2)
+        self._mark_alive(name)
+
+    def set_bandwidth(self, edge_name: str, bandwidth: float) -> None:
+        """.. deprecated:: batch churn through :meth:`apply_churn` (or
+        ``SchedulerSession.churn``)."""
+        warnings.warn(
+            "HWGraph.set_bandwidth is deprecated: apply churn as a delta "
+            "batch via HWGraph.apply_churn(Churn(bandwidth=[(edge, bw)])) "
+            "or SchedulerSession.churn(...)", DeprecationWarning,
+            stacklevel=2)
+        self._set_bandwidth(edge_name, bandwidth)
 
     def _after_mutation(self, kind: str, names=(), edge_name=None) -> None:
         """Invalidate object-layer caches, then delta-patch the compiled

@@ -23,12 +23,21 @@ views.  Mapping is optimistic-concurrency: every task is first scored
 against the ledger as it stood at the start of the batch, then committed in
 task order; a task is re-scored only when an earlier commit landed on a
 device its search actually scored, which keeps ``map_batch`` bit-identical
-to N sequential ``map_task`` calls (pinned by ``tests/test_session.py``).
+to N sequential one-task batches (pinned by ``tests/test_session.py``).
 
-``map_task`` survives as a thin one-element shim over ``map_batch`` and is
-**deprecated** for hot paths: callers that map task-by-task pay Python
-dispatch per task exactly where the compiled engine made the math cheap.
-Use ``core.session.SchedulerSession`` (or ``map_batch`` directly) instead.
+``map_task`` was removed in PR 8 (deprecated since PR 3): map one-element
+frontiers with ``map_batch([task], now)[0]`` or drive whole TaskGraphs
+through ``core.session.SchedulerSession``.
+
+At a root ORC with two or more group subtrees the walk additionally runs
+**group-sharded** (``REPRO_SHARDED_WALK``, default on): the compiled
+snapshot is partitioned into block-diagonal per-group views
+(``CompiledHWGraph.sharded``), the ledger into per-group shards
+(``ShardedLedger``), and each group's phase-1 walks drive their scan-plan
+reduces independently — batched entry reduces where shapes align, host
+threads across groups — reconciling only at the root ORC boundary via the
+NCR matrix.  ``REPRO_SHARDED_WALK=0`` keeps the fused single-shard walk as
+a bit-identical parity oracle (see ``docs/sharding.md``).
 
 All candidate PUs of an ORC are scored in one vectorized constraint check
 (``_check_candidates``) against the graph's compiled arrays — eligibility
@@ -40,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import warnings
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Iterable, Optional, Sequence
 
@@ -53,6 +62,7 @@ from .traverser import TaskPrediction, Traverser
 QUERY_BYTES = 1024.0          # size of a MapTask query/response message
 
 _SCAN_REDUCE = None
+_SCAN_REDUCE_BATCH = None
 
 
 def _scan_reduce_kernel():
@@ -64,6 +74,17 @@ def _scan_reduce_kernel():
         from ..kernels.walk_kernel import scan_reduce
         _SCAN_REDUCE = scan_reduce
     return _SCAN_REDUCE
+
+
+def _scan_reduce_batch_kernel():
+    """Lazily bind ``kernels.walk_kernel.scan_reduce_batch`` (stacked
+    same-shape scans reduced in one call; jax path vmaps, numpy path is
+    a bit-identical row loop)."""
+    global _SCAN_REDUCE_BATCH
+    if _SCAN_REDUCE_BATCH is None:
+        from ..kernels.walk_kernel import scan_reduce_batch
+        _SCAN_REDUCE_BATCH = scan_reduce_batch
+    return _SCAN_REDUCE_BATCH
 
 
 @dataclass
@@ -243,6 +264,13 @@ class ActiveLedger:
     def count(self, pu: str) -> int:
         return self._count.get(pu, 0)
 
+    def shard_for(self, dev: str) -> "ActiveLedger":
+        """The ledger shard owning device ``dev`` — a monolithic ledger
+        is its own (only) shard.  The single dispatch point the batch
+        context and walk drivers use, so :class:`ShardedLedger` routes
+        per-device accesses without any call-site branching."""
+        return self
+
     # -- array views -------------------------------------------------------
     def _fill_pu_idx(self, comp) -> None:
         """(Re)fill the compiled-index column for this snapshot family —
@@ -366,6 +394,174 @@ class ActiveLedger:
                 for i in self._device_rows(comp).get(dev, ())]
 
     def pairs_on_device(self, graph: HWGraph, pu_name: str) -> list[tuple[Task, str]]:
+        return [(e.task, e.pu) for e in self.on_device(graph, pu_name)]
+
+
+class _ShardDevVersions:
+    """Dict-shaped dispatch of per-device version stamps to the owning
+    ledger shard (the surface scan states read via ``dev_version.get``)."""
+
+    __slots__ = ("_led",)
+
+    def __init__(self, led: "ShardedLedger") -> None:
+        self._led = led
+
+    def get(self, dev: str, default: int = 0) -> int:
+        return self._led.shard_for(dev).dev_version.get(dev, default)
+
+
+class ShardedLedger:
+    """Per-ORC-group :class:`ActiveLedger` shards behind the monolithic
+    ledger surface.
+
+    Each shard owns exactly the rows of its group's devices (commits
+    dispatch by the committed PU's enclosing device), so per-device reads
+    — the unit every constraint check consumes — hit one shard with no
+    cross-shard coordination, and independent groups' walks can fan out
+    over threads without sharing ledger state.  The **thin cross-group
+    reconciler** is :meth:`live_view`: the root ORC's boundary scan is the
+    only consumer that needs all groups at once, and the merged view
+    interleaves the shards' device segments back into global device-
+    ordinal order (stable, preserving per-device insertion order), which
+    makes it bit-identical to the monolithic ledger's global view.
+
+    Installed by ``Orchestrator.prepare`` when group sharding is enabled;
+    every content-bearing accessor returns exactly what a monolithic
+    ledger holding the same rows would (the sharded-vs-fused parity suite
+    pins this)."""
+
+    def __init__(self, comp, sharded_hw) -> None:
+        self.hw = sharded_hw
+        self.shards: list[ActiveLedger] = [ActiveLedger()
+                                           for _ in sharded_hw.shards]
+        self._pu_dev: dict[str, str] = {}      # shared by every shard
+        self._by_dev: dict[str, ActiveLedger] = {}
+        self._by_pu: dict[str, ActiveLedger] = {}
+        self._default = self.shards[0]
+        for gs, led in zip(sharded_hw.shards, self.shards):
+            led._pu_dev = self._pu_dev
+            for d in gs.devices:
+                self._by_dev[d] = led
+            for p in gs.pu_names:
+                self._by_pu[p] = led
+        self._pu_dev.update(comp._pu_device_name)
+        self._dev_versions = _ShardDevVersions(self)
+        self._merged: Optional[tuple] = None
+
+    # -- shard dispatch ----------------------------------------------------
+    def shard_for(self, dev: str) -> ActiveLedger:
+        return self._by_dev.get(dev, self._default)
+
+    def _shard_for_pu(self, pu: str) -> ActiveLedger:
+        led = self._by_pu.get(pu)
+        if led is None:
+            dev = self._pu_dev.get(pu)
+            led = self._by_dev.get(dev, self._default) if dev is not None \
+                else self._default
+        return led
+
+    # -- monolithic surface ------------------------------------------------
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    @property
+    def version(self) -> int:
+        return sum(s.version for s in self.shards)
+
+    @property
+    def dev_epoch(self) -> int:
+        return sum(s.dev_epoch for s in self.shards)
+
+    @property
+    def dev_version(self) -> _ShardDevVersions:
+        return self._dev_versions
+
+    @property
+    def _live_view(self) -> Optional[tuple]:
+        return self._merged
+
+    @_live_view.setter
+    def _live_view(self, value) -> None:
+        # map_batch drops the cross-batch global view (release times may
+        # have been charged since); propagate to every shard's cache
+        self._merged = value
+        if value is None:
+            for s in self.shards:
+                s._live_view = None
+
+    def add(self, task: Task, pu: str, pred: TaskPrediction,
+            now: float) -> ActiveEntry:
+        return self._shard_for_pu(pu).add(task, pu, pred, now)
+
+    def prune(self, now: float) -> None:
+        for s in self.shards:
+            s.prune(now)
+
+    def remove(self, task: Task) -> None:
+        for s in self.shards:
+            s.remove(task)
+
+    def retire(self, uids) -> int:
+        uids = list(uids)
+        return sum(s.retire(uids) for s in self.shards)
+
+    def count(self, pu: str) -> int:
+        return self._shard_for_pu(pu).count(pu)
+
+    def _fill_pu_idx(self, comp) -> None:
+        for s in self.shards:
+            s._fill_pu_idx(comp)
+
+    def device_view(self, comp, dev: str) -> _LedgerView:
+        return self.shard_for(dev).device_view(comp, dev)
+
+    def live_view(self, comp) -> _LedgerView:
+        """The cross-group reconciler: every shard's live rows interleaved
+        back into global device-ordinal order.  Within one device ordinal
+        all rows come from the one shard owning that device, already in
+        insertion order, so a stable sort over the concatenation is
+        bit-identical to the monolithic global view."""
+        cached = self._merged
+        if cached is not None and cached[0] is comp \
+                and cached[1] == self.version:
+            return cached[2]
+        views = [s.live_view(comp) for s in self.shards]
+        v = _LedgerView()
+        D = np.concatenate([w.Da for w in views])
+        order = np.argsort(D, kind="stable")
+        v.Da = D[order]
+        for col in ("rows", "P", "est", "fac", "dl", "rel", "upu",
+                    "umem", "Ma", "uid"):
+            v_col = np.concatenate([getattr(w, col) for w in views])
+            setattr(v, col, v_col[order])
+        names = [n for w in views for n in w.pu_names]
+        tasks = [t for w in views for t in w.tasks]
+        idx = order.tolist()
+        v.pu_names = [names[i] for i in idx]
+        v.tasks = [tasks[i] for i in idx]
+        nd = len(comp.dev_ord_names)
+        v.na = (np.bincount(v.Da, minlength=nd) if len(v.Da)
+                else np.zeros(nd, dtype=np.int64))
+        v.astart = np.cumsum(v.na) - v.na
+        self._merged = (comp, self.version, v)
+        return v
+
+    # -- object-view compatibility accessors -------------------------------
+    @property
+    def by_pu(self) -> dict[str, list[ActiveEntry]]:
+        out: dict[str, list[ActiveEntry]] = {}
+        for s in self.shards:
+            for pu, entries in s.by_pu.items():
+                out.setdefault(pu, []).extend(entries)
+        return out
+
+    def on_device(self, graph: HWGraph, pu_name: str) -> list[ActiveEntry]:
+        comp = graph.compiled()
+        dev = comp.device_name(pu_name)
+        return self.shard_for(dev).on_device(graph, pu_name)
+
+    def pairs_on_device(self, graph: HWGraph,
+                        pu_name: str) -> list[tuple[Task, str]]:
         return [(e.task, e.pu) for e in self.on_device(graph, pu_name)]
 
 
@@ -572,7 +768,7 @@ class _BatchContext:
         return hit[0]
 
     def view(self, dev: str) -> _LedgerView:
-        led = self.ledger
+        led = self.ledger.shard_for(dev)
         key = (dev, led.dev_epoch, led.dev_version.get(dev, 0))
         v = self._views.get(key)
         if v is None:
@@ -592,7 +788,7 @@ class _BatchContext:
 
     def _extend_view(self, prev: _LedgerView,
                      dev: str) -> Optional[_LedgerView]:
-        led = self.ledger
+        led = self.ledger.shard_for(dev)
         comp = self.comp
         rows = led._device_rows(comp).get(dev)
         if rows is None or len(rows) != len(prev.rows) + 1:
@@ -680,6 +876,7 @@ class Orchestrator:
         self._hop_cache: Optional[tuple] = None
         self._plan_cache: Optional[tuple] = None   # (comp, _ScanPlan)
         self._child_cache: Optional[tuple] = None  # (comp, _ChildPlan)
+        self._sharded_hw: Optional["ShardedHWGraph"] = None  # root only
 
     # -- hierarchy ----------------------------------------------------------
     def add_child(self, child: "Orchestrator") -> "Orchestrator":
@@ -720,7 +917,44 @@ class Orchestrator:
             orc._scan_plan(comp)
             if orc.children:
                 orc._child_plan(comp)
+        if self._sharding_enabled():
+            self._install_sharding(comp)
         return self
+
+    # -- group sharding ------------------------------------------------------
+    def _sharding_enabled(self) -> bool:
+        """Group sharding applies at a root ORC with >=2 group subtrees
+        and is oracle-gated: ``REPRO_SHARDED_WALK=0`` keeps the fused
+        single-shard walk (and the monolithic ledger) as the bit-identical
+        parity baseline."""
+        return (self.parent is None and len(self.children) > 1
+                and os.environ.get("REPRO_SHARDED_WALK", "1") != "0")
+
+    def _install_sharding(self, comp) -> None:
+        """Shard the snapshot and ledger per root-child ORC group.
+
+        Builds the :class:`ShardedHWGraph` partition (one shard per root
+        child, owning that subtree's device groups), validates the
+        block-diagonal NCR invariant, and swaps the whole tree's (empty)
+        ledger for a :class:`ShardedLedger` over that partition.  A
+        non-empty or already-sharded ledger, or a partition that fails
+        validation, leaves the monolithic setup untouched."""
+        if type(self.ledger) is not ActiveLedger or len(self.ledger):
+            return
+        sharded = getattr(comp, "sharded", None)
+        if sharded is None:
+            return
+        groups = {c.group: [o.group for o in c.iter_tree()
+                            if o.is_device_orc()]
+                  for c in self.children}
+        try:
+            shg = sharded(groups)
+        except ValueError:
+            return                    # not block-diagonal: stay monolithic
+        led = ShardedLedger(comp, shg)
+        for orc in self.iter_tree():
+            orc.ledger = led
+        self._sharded_hw = shg
 
     # -- canonical factor-cache visibility (bench JSON / CI smoke) ----------
     @property
@@ -740,7 +974,7 @@ class Orchestrator:
                   route: bool = False) -> list[Optional[MapResult]]:
         """Map a frontier of ready tasks in one call (Alg. 1 per task).
 
-        Semantics are identical to calling ``map_task`` once per task in
+        Semantics are identical to running Alg. 1 once per task in
         order (the parity suite pins this at 1e-9): tasks are scored
         optimistically against the ledger as of batch start, committed in
         order, and re-scored only when an earlier commit touched a device
@@ -775,7 +1009,10 @@ class Orchestrator:
         # per task in phase 2)
         tentative: list[tuple["Orchestrator", Optional[MapResult], set]] = []
         if fast:
-            walks = self._walk_wave(tasks, now, ctx, route)
+            if self._sharding_enabled():
+                walks = self._walk_wave_sharded(tasks, now, ctx, route)
+            else:
+                walks = self._walk_wave(tasks, now, ctx, route)
             for t in tasks:
                 orc = self._entry_orc(t) if route else self
                 w = walks[self._task_signature(orc, t)]
@@ -833,21 +1070,9 @@ class Orchestrator:
             out.append(res)
         return out
 
-    def map_task(self, task: Task, now: float = 0.0,
-                 commit: bool = True) -> Optional[MapResult]:
-        """One-element shim over :meth:`map_batch`.
-
-        .. deprecated:: kept for compatibility; per-task mapping pays
-           Python dispatch per call.  Prefer ``map_batch`` over a ready
-           frontier, or drive whole TaskGraphs through
-           ``core.session.SchedulerSession``.
-        """
-        warnings.warn(
-            "Orchestrator.map_task is deprecated: map frontiers with "
-            "map_batch(...) or drive whole TaskGraphs through "
-            "core.session.SchedulerSession.submit(...)",
-            DeprecationWarning, stacklevel=2)
-        return self.map_batch([task], now, commit=commit)[0]
+    # ``map_task`` was deprecated in PR 3 and removed in PR 8: map
+    # one-element frontiers with ``map_batch([task], now)[0]`` or drive
+    # whole TaskGraphs through ``core.session.SchedulerSession``.
 
     # -- fused wave-batched walk (the array lowering of Alg. 1) --------------
     def _scan_plan(self, comp) -> _ScanPlan:
@@ -1088,7 +1313,9 @@ class Orchestrator:
         cache = ctx.eff_cache
         cache[ck] = [st, len(log), ok, cm, key]
         if len(cache) > 24:
-            cache.pop(next(iter(cache)))
+            # pop-with-default: group threads of the sharded walk may race
+            # on evicting the same oldest entry
+            cache.pop(next(iter(cache)), None)
         return ok, cm, key
 
     def _scan_reduce(self, ok_d: np.ndarray, cm_d: np.ndarray,
@@ -1258,13 +1485,10 @@ class Orchestrator:
             st.f[cols] = f_
             st.wait[cols] = w_
 
-    def _walk_wave(self, tasks: list, now: float, ctx: "_BatchContext",
-                   route: bool) -> dict:
-        """Phase 1: walk every distinct task signature against the frozen
-        ledger, advancing all walks in lockstep so each escalation depth's
-        constraint checks batch into one kernel call and each depth's
-        route rows warm in one batched Dijkstra."""
-        comp = ctx.comp
+    def _dedup_walks(self, tasks: list, route: bool,
+                     ) -> tuple[dict, list["_Walk"]]:
+        """Dedup a frontier by task signature: identical tasks walk once
+        in phase 1 (commits are replayed per task in phase 2)."""
         walks: dict = {}
         order: list[_Walk] = []
         for t in tasks:
@@ -1273,13 +1497,20 @@ class Orchestrator:
             if key not in walks:
                 w = walks[key] = _Walk(orc, t)
                 order.append(w)
-        self._batch_checks(
-            ctx, [(w.orc, w.task, w.orc._scan_plan(comp)) for w in order],
-            now)
-        for w in order:
-            w.res = w.orc._traverse_fast(w.task, now, ctx, w.scored)
-        active = [w for w in order
-                  if w.res is None and w.cur.parent is not None]
+        return walks, order
+
+    def _escalate_walks(self, active: list["_Walk"], now: float,
+                        ctx: "_BatchContext",
+                        stop_root: bool = False) -> None:
+        """Advance unresolved walks through AskParent levels in lockstep,
+        batching each escalation depth's constraint checks into one
+        kernel call and each depth's route rows into one batched
+        Dijkstra.  With ``stop_root=True`` walks park *below* the root
+        level (``cur.parent.parent is None``) instead of asking it — the
+        group-sharded driver escalates intra-group levels on group
+        threads and reserves the root scan (the only cross-group one)
+        for serial boundary reconciliation."""
+        comp = ctx.comp
         while active:
             er = getattr(comp, "ensure_routes", None)
             if er is not None:
@@ -1299,9 +1530,162 @@ class Orchestrator:
                 w.res = w.cur._ask_level_fast(w.task, now, ctx, w.scored)
                 if w.res is None:
                     w.cur = w.cur.parent
-                    if w.cur.parent is not None:
+                    if w.cur.parent is not None and not (
+                            stop_root and w.cur.parent.parent is None):
                         nxt.append(w)
             active = nxt
+
+    def _drive_wave(self, order: list["_Walk"], now: float,
+                    ctx: "_BatchContext", stop_root: bool = False) -> None:
+        """Resolve a set of deduped walks: batched entry checks, one
+        tracked entry scan per walk, then lockstep escalation."""
+        comp = ctx.comp
+        self._batch_checks(
+            ctx, [(w.orc, w.task, w.orc._scan_plan(comp)) for w in order],
+            now)
+        self._entry_reduce_batch(order, now, ctx)
+        active = [w for w in order
+                  if w.res is None and w.cur.parent is not None and not (
+                      stop_root and w.cur.parent.parent is None)]
+        self._escalate_walks(active, now, ctx, stop_root=stop_root)
+
+    def _walk_wave(self, tasks: list, now: float, ctx: "_BatchContext",
+                   route: bool) -> dict:
+        """Phase 1: walk every distinct task signature against the frozen
+        ledger, advancing all walks in lockstep so each escalation depth's
+        constraint checks batch into one kernel call and each depth's
+        route rows warm in one batched Dijkstra."""
+        walks, order = self._dedup_walks(tasks, route)
+        self._drive_wave(order, now, ctx)
+        if self.config.allow_best_effort:
+            for w in order:
+                if w.res is None:
+                    w.res = w.orc._best_effort(w.task, now, ctx, w.scored)
+        return walks
+
+    def _entry_reduce_batch(self, ws: list["_Walk"], now: float,
+                            ctx: "_BatchContext") -> None:
+        """Resolve every walk's entry TraverseChildren scan, stacking
+        same-shape scan-plan reduces into one ``scan_reduce_batch`` call
+        (jax path vmaps the stack; numpy path is a bit-identical row
+        loop).  ``min_load`` walks fall back to the per-walk reduce —
+        their selection key reads live ledger counts."""
+        comp = ctx.comp
+        buckets: dict = {}
+        for w in ws:
+            orc = w.orc
+            plan = orc._scan_plan(comp)
+            w.scored.update(plan.leaf_groups)
+            if not plan.pus:
+                w.res = None
+                continue
+            st = orc._tracked_checks(w.task, plan, now, ctx)
+            ok, cm, key = orc._effective(w.task, st, plan, now, ctx)
+            if (orc.config.objective == "min_load" or key is None
+                    or not ok.any()):
+                w.res = orc._scan_reduce(ok, cm, st, plan, key_d=key)
+                continue
+            shape = (len(plan.pus), len(plan.pu_lo),
+                     orc.config.local_query_cost)
+            buckets.setdefault(shape, []).append((w, plan, st, ok, cm, key))
+        for (n_pus, n_nodes, lqc), rows in buckets.items():
+            if len(rows) == 1:
+                w, plan, st, ok, cm, key = rows[0]
+                w.res = w.orc._scan_reduce(ok, cm, st, plan, key_d=key)
+                continue
+            ok_s = np.stack([r[3] for r in rows])
+            key_s = np.stack([r[5] for r in rows])
+            lo_s = np.stack([r[1].pu_lo for r in rows])
+            hi_s = np.stack([r[1].pu_hi for r in rows])
+            leaf_s = np.stack([r[1].leafcnt for r in rows])
+            nch_s = np.stack([r[1].nchild for r in rows])
+            hop_s = np.stack([r[1].hopsum for r in rows])
+            dep_s = np.stack([r[1].depth for r in rows])
+            wv, qv, hv, ov = _scan_reduce_batch_kernel()(
+                ok_s, key_s, lo_s, hi_s, leaf_s, nch_s, hop_s, dep_s, lqc)
+            for i, (w, plan, st, ok, cm, key) in enumerate(rows):
+                wi = int(wv[i])
+                if wi < 0:
+                    w.res = None
+                    continue
+                pred = TaskPrediction(float(st.sa[wi]), float(st.f[wi]),
+                                      float(cm[wi]))
+                w.res = MapResult(pu=plan.pus[wi], prediction=pred,
+                                  overhead=float(ov[i]),
+                                  queries=int(qv[i]), hops=int(hv[i]))
+
+    def _shard_root_of(self, orc: "Orchestrator",
+                       ) -> Optional["Orchestrator"]:
+        """The root-child subtree (= group shard) an ORC belongs to, or
+        None for the root itself (serial bucket)."""
+        while orc.parent is not None and orc.parent.parent is not None:
+            orc = orc.parent
+        return orc if orc.parent is not None else None
+
+    def _walk_wave_sharded(self, tasks: list, now: float,
+                           ctx: "_BatchContext", route: bool) -> dict:
+        """Group-sharded phase 1: partition the deduped walks by root
+        child (= ORC device group), drive each group's walks on its own
+        host thread up to (but excluding) the root escalation level, then
+        reconcile at the group boundary — the root's child-plan scan, the
+        only one whose NCR rows cross groups — serially.
+
+        Bit-identity to :meth:`_walk_wave` holds because phase 1 is pure
+        against the frozen ledger and every scan an intra-group walk
+        touches (entry subtree, intra-group child plans) reads only its
+        own group's PU columns: the partition of walks is a partition of
+        all reads, so per-group batched checks see exactly the inputs the
+        global batch would."""
+        comp = ctx.comp
+        walks, order = self._dedup_walks(tasks, route)
+        buckets: dict = {}
+        serial: list[_Walk] = []
+        for w in order:
+            root = self._shard_root_of(w.orc)
+            if root is None:
+                serial.append(w)
+            else:
+                buckets.setdefault(id(root), []).append(w)
+        groups = list(buckets.values())
+        if len(groups) < 2:
+            self._drive_wave(order, now, ctx)
+        else:
+            # host-thread fan-out only where it can win: >=2 cores and a
+            # wave big enough to amortize pool spawn + route pre-warm
+            # (small waves and 1-vCPU hosts drive the same group buckets
+            # serially — identical results, no thread overhead)
+            nthreads = min(len(groups), os.cpu_count() or 1)
+            if nthreads < 2 or len(order) < 64 * len(groups):
+                for ws in groups:
+                    self._drive_wave(ws, now, ctx, stop_root=True)
+            else:
+                # warm every route row any group thread could need up
+                # front: one batched Dijkstra instead of contended lazy
+                # builds
+                er = getattr(comp, "ensure_routes", None)
+                if er is not None:
+                    warm: set = set()
+                    for w in order:
+                        if w.task.origin is not None:
+                            warm.add(w.task.origin)
+                        warm.update(w.task.attrs.get("src_devices") or ())
+                        cur = w.orc
+                        while cur is not None:
+                            warm.add(cur.group)
+                            cur = cur.parent
+                    er(warm)
+                with ThreadPoolExecutor(max_workers=nthreads) as ex:
+                    list(ex.map(
+                        lambda ws: self._drive_wave(ws, now, ctx,
+                                                    stop_root=True),
+                        groups))
+            if serial:
+                self._drive_wave(serial, now, ctx)
+            # boundary reconciliation: walks that exhausted their group
+            # escalate through the root's cross-group scan, serially
+            pend = [w for w in order
+                    if w.res is None and w.cur.parent is not None]
+            self._escalate_walks(pend, now, ctx)
         if self.config.allow_best_effort:
             for w in order:
                 if w.res is None:

@@ -35,7 +35,7 @@ from typing import Callable, Iterable, Optional, Union
 
 import numpy as np
 
-from .hwgraph import HWGraph
+from .hwgraph import Churn, HWGraph
 from .orchestrator import MapResult, Orchestrator
 from .task import Task, TaskGraph
 from .timeline import TimelineEngine
@@ -336,6 +336,31 @@ class SchedulerSession:
         if self.engine is None:
             raise RuntimeError("open_timeline() first")
         self.engine.inject(list(tasks))
+
+    def churn(self, delta: "Churn", at: Optional[float] = None) -> None:
+        """Apply (or schedule) one :class:`~.hwgraph.Churn` delta batch —
+        the consolidated churn entrypoint.
+
+        * ``at`` set: queued on the resident timeline at simulated time
+          ``at`` (requires an open engine), replacing the old
+          ``interventions=[(t, fn)]`` plumbing.
+        * engine open, ``at`` omitted: applied at the current engine
+          clock through the one-flush reprice path (the serve-loop
+          mid-run delta case).
+        * no engine: applied to the graph immediately; the compiled
+          snapshot absorbs it via ``apply_delta`` and the next
+          ``map_pending`` sees the new topology.
+        """
+        if at is not None:
+            if self.engine is None:
+                raise RuntimeError(
+                    "churn(at=...) schedules on the resident timeline — "
+                    "open_timeline() first (or omit `at`)")
+            self.engine.schedule(at, delta)
+        elif self.engine is not None:
+            self.engine.apply_churn(delta)
+        else:
+            self.graph.apply_churn(delta)
 
     def finalize_online(self, drain: bool = True) -> RunStats:
         """Collect RunStats from the resident timeline.  ``drain=True``

@@ -48,6 +48,7 @@ backend, or ``=pallas`` to force the kernel.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -199,6 +200,10 @@ class DecoupledSlowdown:
         self._canon_cache: Optional[tuple] = None
         self.factor_cache_hits = 0
         self.factor_cache_misses = 0
+        # the sharded walk drives group threads through the canon cache
+        # concurrently; the counter read-modify-writes are the only
+        # non-atomic mutations (cache fills are idempotent equal values)
+        self._counter_lock = threading.Lock()
 
     # -- helpers -----------------------------------------------------------
     def nearest_shared(self, pu_a: str, pu_b: str) -> Optional[str]:
@@ -713,14 +718,16 @@ class DecoupledSlowdown:
         hit = self._canon_cache_dict(comp).get(key)
         if hit is None:
             return None
-        self.factor_cache_hits += 1
+        with self._counter_lock:
+            self.factor_cache_hits += 1
         new_f, ci, rel_ai, act_pf = hit
         return new_f, ci, rel_ai + base, act_pf
 
     def _canon_store(self, key, base, result) -> None:
         # _canon_lookup always ran first, so the per-snapshot dict exists
         cache = self._canon_cache[1]
-        self.factor_cache_misses += 1
+        with self._counter_lock:
+            self.factor_cache_misses += 1
         if len(cache) > 100_000:            # runaway-key backstop
             cache.clear()
         new_f, ci, ai, act_pf = result

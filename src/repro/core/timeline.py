@@ -816,8 +816,14 @@ class TimelineEngine:
                 flushed = True
         return flushed
 
-    def _intervene(self, fn: Callable[[], Any]) -> None:
-        fn()
+    def _intervene(self, fn) -> None:
+        from .hwgraph import Churn
+        if isinstance(fn, Churn):
+            # declarative delta batch: apply through the consolidated
+            # churn surface instead of calling into user code
+            self.graph.apply_churn(fn)
+        else:
+            fn()
         # an intervention may mutate anything factors depend on (topology
         # OR model params): drop the memoized pool factors outright
         self._fcache = {}
@@ -954,10 +960,21 @@ class TimelineEngine:
             self._flush()
         return self
 
-    def schedule(self, t: float, fn: Callable[[], Any]) -> None:
-        """Queue a churn intervention at simulated time ``t`` — the
-        resident counterpart of the ``interventions=`` argument."""
+    def schedule(self, t: float, fn) -> None:
+        """Queue an intervention at simulated time ``t`` — the resident
+        counterpart of the ``interventions=`` argument.  ``fn`` is either
+        a zero-arg callable or a declarative :class:`~.hwgraph.Churn`
+        delta batch."""
         self._push(float(t), _INTERVENE, fn)
+
+    def apply_churn(self, churn) -> "TimelineEngine":
+        """Apply a :class:`~.hwgraph.Churn` delta batch (or a zero-arg
+        callable) at the current engine clock, through the same one-flush
+        reprice path as scheduled interventions: mutate, drop memoized
+        pool factors, reprice every occupied pool and active link set."""
+        self._intervene(churn)
+        self._flush()
+        return self
 
     def finish_of(self, uid: int) -> float:
         """Finish time of task ``uid`` (nan while pending or running)."""

@@ -151,26 +151,39 @@ class Traverser:
     def traverse(self, cfg: TaskGraph, mapping: dict[int, str],
                  background: list[tuple[Task, str, float]] = (),
                  interventions: list[tuple[float, Any]] = (),
+                 engine: str = "fused",
                  ) -> Timeline:
         """Simulate ``cfg`` under ``mapping`` (task.uid -> pu name).
 
         ``background``: (task, pu, remaining_standalone_seconds) triples of
         already-running tasks that contend but whose dependencies are done.
         ``interventions``: (t, fn) pairs applied at simulated time ``t``
-        (topology churn mid-run: ``set_bandwidth`` / ``mark_dead`` / ...);
-        every active device pool and link set is repriced at that instant.
+        — ``fn`` a zero-arg callable or a :class:`~.hwgraph.Churn` delta
+        batch; every active device pool and link set is repriced at that
+        instant.
 
-        Runs on the array-native :class:`core.timeline.TimelineEngine`.
-        A *noisy slowdown model* (rng-bearing) draws inside ``factor()``
-        in per-device pool order, which only the seed event loop
-        reproduces byte-for-byte — those configurations route to
-        :meth:`traverse_reference` (note: the ground-truth engine's
-        per-task work noise is NOT this case; it is drawn at job start
-        and the array engine preserves its stream).
+        ``engine`` selects the event loop — the single selector over the
+        two DES implementations:
+
+        * ``"fused"`` (default): the array-native
+          :class:`core.timeline.TimelineEngine`.  A *noisy slowdown
+          model* (rng-bearing) draws inside ``factor()`` in per-device
+          pool order, which only the seed event loop reproduces
+          byte-for-byte — those configurations fall back to the
+          reference engine automatically (note: the ground-truth
+          engine's per-task work noise is NOT this case; it is drawn at
+          job start and the array engine preserves its stream).
+        * ``"reference"``: the seed's per-job heapq event loop, kept
+          verbatim — the 1e-9 parity oracle and the ``bench-des``
+          object-path baseline.
         """
-        if bool(getattr(self.slowdown, "_noisy", lambda: False)()):
-            return self.traverse_reference(cfg, mapping, background,
-                                           interventions)
+        if engine not in ("fused", "reference"):
+            raise ValueError(
+                f"engine must be 'fused' or 'reference', got {engine!r}")
+        if (engine == "reference"
+                or bool(getattr(self.slowdown, "_noisy", lambda: False)())):
+            return self._traverse_seed(cfg, mapping, background,
+                                       interventions)
         return TimelineEngine(self, cfg, mapping, background,
                               interventions).run()
 
@@ -178,6 +191,16 @@ class Traverser:
                            background: list[tuple[Task, str, float]] = (),
                            interventions: list[tuple[float, Any]] = (),
                            ) -> Timeline:
+        """Alias for ``traverse(..., engine="reference")`` (the historical
+        oracle entrypoint; kept because benches and parity suites name
+        it)."""
+        return self.traverse(cfg, mapping, background, interventions,
+                             engine="reference")
+
+    def _traverse_seed(self, cfg: TaskGraph, mapping: dict[int, str],
+                       background: list[tuple[Task, str, float]] = (),
+                       interventions: list[tuple[float, Any]] = (),
+                       ) -> Timeline:
         """The seed's per-job heapq event loop, kept verbatim: the parity
         oracle for ``TimelineEngine`` (1e-9) and the ``bench-des``
         object-path baseline."""
@@ -416,7 +439,11 @@ class Traverser:
                 elif kind == "intervene":
                     # churn boundary: apply the mutation, then reprice
                     # every occupied device pool and active link set
-                    payload()
+                    from .hwgraph import Churn
+                    if isinstance(payload, Churn):
+                        self.graph.apply_churn(payload)
+                    else:
+                        payload()
                     for dev, members in dev_members.items():
                         if members:
                             dirty_devs.add(dev)

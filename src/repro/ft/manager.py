@@ -3,9 +3,9 @@
 The same dynamic-adaptability machinery the paper demonstrates on edge
 fleets (§5.4: bandwidth drops, nodes joining) handles TPU-fleet failures:
 
-* a failed host is ``mark_dead`` in the HW-GRAPH — the compiled scheduling
-  snapshot absorbs this via ``CompiledHWGraph.apply_delta`` (no full
-  recompile), and ``remap`` pushes the orphaned work back through the
+* a failed host is marked dead via a ``Churn`` delta batch — the compiled
+  scheduling snapshot absorbs this via ``CompiledHWGraph.apply_delta`` (no
+  full recompile), and ``remap`` pushes the orphaned work back through the
   batch-first scheduling surface (``Orchestrator.map_batch`` /
   ``SchedulerSession``) in one frontier instead of task-by-task;
 * the manager recomputes the largest healthy mesh (elastic rescale) and
@@ -24,7 +24,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.hwgraph import HWGraph
+from repro.core.hwgraph import Churn, HWGraph
 from repro.checkpoint import AsyncSaver
 
 
@@ -87,12 +87,11 @@ class FTManager:
 
     # -- failure / elastic rescale ---------------------------------------------
     def on_failure(self, hosts: list[str]) -> RecoveryPlan:
-        for h in hosts:
-            self.graph.mark_dead(h)
+        self.graph.apply_churn(Churn(dead=tuple(hosts)))
         return self.plan_mesh()
 
     def on_join(self, host: str) -> RecoveryPlan:
-        self.graph.mark_alive(host)
+        self.graph.apply_churn(Churn(alive=(host,)))
         return self.plan_mesh()
 
     def remap(self, scheduler, tasks, now: float = 0.0):

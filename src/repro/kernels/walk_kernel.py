@@ -35,7 +35,7 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["scan_reduce", "scan_reduce_ref"]
+__all__ = ["scan_reduce", "scan_reduce_batch", "scan_reduce_ref"]
 
 
 def scan_reduce_ref(ok: np.ndarray, key: np.ndarray, pu_lo: np.ndarray,
@@ -97,11 +97,9 @@ def scan_reduce_ref(ok: np.ndarray, key: np.ndarray, pu_lo: np.ndarray,
     return w, queries, hops, overhead
 
 
-def _jax_reduce():
-    import jax
+def _jax_reduce_raw():
     import jax.numpy as jnp
 
-    @jax.jit
     def reduce(ok, key, pu_lo, pu_hi, leafcnt, nchild, hopsum, depth, lqc):
         cs = jnp.concatenate([jnp.zeros(1, jnp.int64),
                               jnp.cumsum(ok.astype(jnp.int64))])
@@ -119,6 +117,12 @@ def _jax_reduce():
         return w, queries, hops, overhead
 
     return reduce
+
+
+def _jax_reduce():
+    import jax
+
+    return jax.jit(_jax_reduce_raw())
 
 
 _JAX_REDUCE = None
@@ -156,3 +160,47 @@ def scan_reduce(ok, key, pu_lo, pu_hi, leafcnt, nchild, hopsum, depth,
         return int(w), int(q), int(h), float(ov)
     return scan_reduce_ref(ok, key, pu_lo, pu_hi, leafcnt, nchild,
                            hopsum, depth, lqc)
+
+
+_JAX_REDUCE_BATCH = None
+
+
+def scan_reduce_batch(ok, key, pu_lo, pu_hi, leafcnt, nchild, hopsum,
+                      depth, lqc: float,
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """Reduce a stack of same-shape scans in one call.
+
+    All array inputs are 2-D with one scan per row (``ok``/``key`` over
+    each row's plan PU order, the remaining five over its plan nodes);
+    ``lqc`` is shared.  Returns per-row ``(winners, queries, hops,
+    overheads)`` arrays; ``winners[i] == -1`` marks an infeasible row.
+
+    The numpy path loops :func:`scan_reduce_ref` per row — bit-identical
+    to the unbatched calls by construction.  The jax path vmaps the
+    jitted reduce over the stack (one fused dispatch for the whole
+    group of scans), used where the sharded walk driver stacks
+    same-shape group slices."""
+    if _use_jax():
+        global _JAX_REDUCE_BATCH
+        if _JAX_REDUCE_BATCH is None:
+            import jax
+            _JAX_REDUCE_BATCH = jax.jit(jax.vmap(
+                _jax_reduce_raw(),
+                in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None)))
+        w, q, h, ov = _JAX_REDUCE_BATCH(ok, key, pu_lo, pu_hi, leafcnt,
+                                        nchild, hopsum, depth, lqc)
+        return (np.asarray(w, dtype=np.int64),
+                np.asarray(q, dtype=np.int64),
+                np.asarray(h, dtype=np.int64),
+                np.asarray(ov, dtype=np.float64))
+    n = len(ok)
+    winners = np.empty(n, dtype=np.int64)
+    queries = np.empty(n, dtype=np.int64)
+    hops = np.empty(n, dtype=np.int64)
+    overheads = np.empty(n, dtype=np.float64)
+    for i in range(n):
+        winners[i], queries[i], hops[i], overheads[i] = scan_reduce_ref(
+            ok[i], key[i], pu_lo[i], pu_hi[i], leafcnt[i], nchild[i],
+            hopsum[i], depth[i], lqc)
+    return winners, queries, hops, overheads

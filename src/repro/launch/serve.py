@@ -34,8 +34,8 @@ def place_tenants(n_tenants: int, slo_s: float, est_s: float):
     returns {tenant -> chip} and the scheduling overhead ledger.
 
     The whole tenant wave goes through ``SchedulerSession`` /
-    ``Orchestrator.map_batch`` (origin-routed), replacing the deprecated
-    per-tenant ``map_task`` loop — the assignments are identical (batch
+    ``Orchestrator.map_batch`` (origin-routed), replacing the removed
+    per-tenant single-task loop — the assignments are identical (batch
     parity is pinned by tests/test_session.py) but the wave is scored in
     one kernel call."""
     tb = build_tpu_fleet(n_pods=1, hosts_per_pod=2, chips_per_host=4)

@@ -41,7 +41,7 @@ def test_local_first_assignment(setup):
     e = tb.edges[0]
     orc = root.find_device_orc(e)
     t = make_task("capture", origin=e, deadline=0.1)
-    res = orc.map_task(t)
+    res = orc.map_batch([t])[0]
     assert res is not None
     assert res.pu.startswith(e + ".")       # stayed local
     assert res.hops == 0                    # no remote queries
@@ -53,7 +53,7 @@ def test_escalation_to_server(setup):
     e = tb.edges[1]                         # orin_nano: render at 90 ms
     orc = root.find_device_orc(e)
     t = make_task("render", origin=e, deadline=0.030, input_bytes=4e3)
-    res = orc.map_task(t)
+    res = orc.map_batch([t])[0]
     assert res is not None
     dev = tb.graph.device_of(res.pu).name
     assert dev in tb.servers                # escalated off-device
@@ -67,7 +67,7 @@ def test_pinned_stays_local(setup):
     orc = root.find_device_orc(e)
     t = make_task("capture", origin=e, deadline=0.1)
     t.attrs["pinned"] = True
-    res = orc.map_task(t)
+    res = orc.map_batch([t])[0]
     assert tb.graph.device_of(res.pu).name == e
 
 
@@ -97,13 +97,13 @@ def test_best_effort_when_nothing_fits(setup):
     e = tb.edges[0]
     orc = root.find_device_orc(e)
     t = make_task("render", origin=e, deadline=1e-9)   # impossible deadline
-    res = orc.map_task(t)
+    res = orc.map_batch([t])[0]
     assert res is not None                  # degraded, not dropped
     t2 = make_task("render", origin=e, deadline=1e-9)
     cfg = OrcConfig(allow_best_effort=False)
     orc2 = build_orchestrators(tb.graph, heye_traverser(tb.graph),
                                config=cfg).find_device_orc(e)
-    assert orc2.map_task(t2) is None
+    assert orc2.map_batch([t2])[0] is None
 
 
 def test_ledger_prune_and_remove(setup):
@@ -128,8 +128,8 @@ def test_first_fit_cheaper_than_best_fit(setup):
     best = build_orchestrators(tb.graph, trav, config=OrcConfig())
     first = build_orchestrators(tb.graph, trav,
                                 config=OrcConfig(objective="first_fit"))
-    r_bf = best.find_device_orc(e).map_task(t_bf)
-    r_ff = first.find_device_orc(e).map_task(t_ff)
+    r_bf = best.find_device_orc(e).map_batch([t_bf])[0]
+    r_ff = first.find_device_orc(e).map_batch([t_ff])[0]
     assert r_ff.queries <= r_bf.queries
 
 
@@ -140,7 +140,7 @@ def test_dead_pu_not_assigned(setup):
     root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
     orc = root.find_device_orc(e)
     t = make_task("dnn", origin=e, deadline=1.0)
-    res = orc.map_task(t)
+    res = orc.map_batch([t])[0]
     assert res is not None and res.pu != f"{e}.gpu"
     tb.graph.mark_alive(f"{e}.gpu")
 
@@ -149,9 +149,9 @@ def test_overhead_scales_with_remote_search(setup):
     tb, _, root = setup
     e = tb.edges[1]
     orc = root.find_device_orc(e)
-    local = orc.map_task(make_task("capture", origin=e, deadline=1.0))
-    remote = orc.map_task(make_task("render", origin=e, deadline=0.030,
-                                    input_bytes=4e3))
+    local = orc.map_batch([make_task("capture", origin=e, deadline=1.0)])[0]
+    remote = orc.map_batch([make_task("render", origin=e, deadline=0.030,
+                                      input_bytes=4e3)])[0]
     assert remote.overhead > local.overhead
 
 
@@ -169,15 +169,27 @@ _PARITY_EDGES = {"orin_agx": 2, "xavier_agx": 1, "orin_nano": 2,
 _PARITY_SERVERS = {"server1": 1, "server2": 1}
 
 
-def _run_mode(monkeypatch, fused, workload, churn=None):
+def _run_mode(monkeypatch, mode, workload, churn=None, counts=None):
     """Map ``workload(tb)``'s batches through a fresh session in one walk
-    mode, with optional ``churn(tb, i)`` graph mutations between batches.
-    Returns one list of result rows per batch, in sorted-uid order (uids
-    differ between twin sessions; creation order does not)."""
+    mode — ``"sharded"`` (group-parallel driver), ``"fused"``
+    (single-shard fused walk), ``"oracle"`` (sequential object walk);
+    ``True``/``False`` alias fused/oracle — with optional ``churn(tb, i)``
+    graph mutations between batches.  Returns one list of result rows per
+    batch, in sorted-uid order (uids differ between twin sessions;
+    creation order does not)."""
     from repro.core import SchedulerSession
-    monkeypatch.setenv("REPRO_FUSED_WALK", "1" if fused else "0")
-    tb = build_testbed(edge_counts=dict(_PARITY_EDGES),
-                       server_counts=dict(_PARITY_SERVERS))
+    if mode is True:
+        mode = "fused"
+    elif mode is False:
+        mode = "oracle"
+    monkeypatch.setenv("REPRO_FUSED_WALK",
+                       "0" if mode == "oracle" else "1")
+    monkeypatch.setenv("REPRO_SHARDED_WALK",
+                       "1" if mode == "sharded" else "0")
+    tb = build_testbed(edge_counts=dict(counts[0] if counts
+                                        else _PARITY_EDGES),
+                       server_counts=dict(counts[1] if counts
+                                          else _PARITY_SERVERS))
     root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
     sess = SchedulerSession(tb.graph, root)
     batches = []
@@ -268,3 +280,173 @@ def test_set_bandwidth_invalidates_fused_comm(monkeypatch):
     _assert_parity(fused, oracle)
     before, after = fused[0][0], fused[1][0]
     assert after[3] != before[3]            # comm reflects the new network
+
+
+# ---------------------------------------------------------------------------
+# group-sharded walk vs the fused single-shard walk
+# ---------------------------------------------------------------------------
+# ``REPRO_SHARDED_WALK=1`` (default) partitions the snapshot and ledger per
+# root-child ORC group and drives independent groups' walks on host threads,
+# reconciling only at the root (NCR) boundary; ``=0`` keeps the fused
+# single-shard walk.  The contract is **bit-identical mappings** — stricter
+# than the fused-vs-oracle 1e-9 overhead tolerance, because the sharded
+# driver runs the very same reduces over the very same arrays, only
+# partitioned.
+
+# Fig. 13 mining topology at mult=64 (mining_counts(64) in
+# benchmarks/scaling.py): the scale ROADMAP item 2 targets
+_X64_EDGES = {"orin_agx": 192, "xavier_agx": 192, "orin_nano": 128,
+              "xavier_nx": 128}
+_X64_SERVERS = {"server1": 64, "server2": 64, "server3": 64}
+
+
+def _assert_bit_identical(sharded_batches, fused_batches):
+    assert len(sharded_batches) == len(fused_batches)
+    for sb, fb in zip(sharded_batches, fused_batches):
+        assert sb == fb
+
+
+def test_sharded_walk_matches_fused_mining_x64(monkeypatch):
+    """Whole-session Fig. 13 mining at mult=64: the group-sharded driver
+    must reproduce the fused single-shard mappings bit for bit."""
+    from repro.core import mining_workload
+    wl = lambda tb: [mining_workload(tb, n_sensors=256, n_readings=1)]
+    _assert_bit_identical(
+        _run_mode(monkeypatch, "sharded", wl,
+                  counts=(_X64_EDGES, _X64_SERVERS)),
+        _run_mode(monkeypatch, "fused", wl,
+                  counts=(_X64_EDGES, _X64_SERVERS)))
+
+
+def test_sharded_walk_matches_fused_vr_x64(monkeypatch):
+    """Fig. 7 VR (serial CFGs, pinned stages, src_devices provenance) at
+    the mult=64 fleet, bit-identical across the sharded driver."""
+    from repro.core import vr_workload
+    wl = lambda tb: [vr_workload(tb, n_frames=2)]
+    _assert_bit_identical(
+        _run_mode(monkeypatch, "sharded", wl,
+                  counts=(_X64_EDGES, _X64_SERVERS)),
+        _run_mode(monkeypatch, "fused", wl,
+                  counts=(_X64_EDGES, _X64_SERVERS)))
+
+
+def test_sharded_walk_parity_across_churn(monkeypatch):
+    """mark_dead + set_bandwidth between waves: apply_delta clones the
+    snapshot, so the sharded views and ledger shard maps must re-derive
+    against the new clone — bit-identical to the fused walk throughout."""
+    from repro.core import mining_workload
+
+    def wl(tb):
+        return [mining_workload(tb, n_sensors=12, n_readings=1),
+                mining_workload(tb, n_sensors=12, n_readings=1)]
+
+    dead = {}
+
+    def churn(tb, i):
+        if i == 0:
+            dead["pu"] = f"{tb.edges[0]}.gpu"
+            tb.graph.mark_dead(dead["pu"])
+            tb.graph.set_bandwidth(f"link_{tb.edges[1]}", 1e6)
+
+    sharded = _run_mode(monkeypatch, "sharded", wl, churn=churn)
+    fused = _run_mode(monkeypatch, "fused", wl, churn=churn)
+    _assert_bit_identical(sharded, fused)
+    assert all(row[0] != dead["pu"] for row in sharded[1])
+
+
+def test_sharded_cross_group_escalation(monkeypatch):
+    """A deadline only servers can meet forces the walk out of the edge
+    group: the escalation must cross the ORC boundary through the root's
+    cross-group scan (serial boundary reconciliation) and still match the
+    fused walk bit for bit."""
+
+    def wl(tb):
+        e = next(x for x in tb.edges if tb.edge_kind[x] == "orin_nano")
+        return [[make_task("render", origin=e, deadline=0.030,
+                           input_bytes=4e3) for _ in range(3)]]
+
+    sharded = _run_mode(monkeypatch, "sharded", wl)
+    fused = _run_mode(monkeypatch, "fused", wl)
+    _assert_bit_identical(sharded, fused)
+    # the mapping actually crossed groups (edge origin -> server PU)
+    assert all(row[0].split(".")[0].startswith("server")
+               for row in sharded[0])
+    assert all(row[5] > 0 for row in sharded[0])       # hops charged
+
+
+def test_sharded_session_state(monkeypatch):
+    """The sharded session installs a ShardedLedger over the root-child
+    groups, and the shared counters (engine opens, recompiles, factor
+    cache) aggregate across shards exactly as in the monolithic setup."""
+    from repro.core import SchedulerSession, mining_workload
+    from repro.core.orchestrator import ShardedLedger
+    monkeypatch.setenv("REPRO_FUSED_WALK", "1")
+    monkeypatch.setenv("REPRO_SHARDED_WALK", "1")
+    tb = build_testbed(edge_counts=dict(_PARITY_EDGES),
+                       server_counts=dict(_PARITY_SERVERS))
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    sess = SchedulerSession(tb.graph, root)
+    assert isinstance(root.ledger, ShardedLedger)
+    assert len(root.ledger.shards) == len(root.children) >= 2
+    # every device ORC routes through the same sharded ledger facade
+    assert all(o.ledger is root.ledger for o in root.iter_tree())
+    sess.submit(mining_workload(tb, n_sensors=8, n_readings=1))
+    res = sess.map_pending()
+    assert res and all(r is not None for r in res.values())
+    # ledger totals aggregate across shards
+    assert len(root.ledger) == sum(len(s) for s in root.ledger.shards)
+    assert len(root.ledger) == len(res)
+    # shared counters see the whole run, not one shard's slice
+    assert root.factor_cache_hits + root.factor_cache_misses > 0
+    # sharding never forces extra snapshot recompiles
+    assert tb.graph.recompile_count <= 1
+    stats = sess.execute()
+    assert sess.engine_opens <= 1
+    assert stats is not None
+
+
+def test_sharded_hwgraph_slicing():
+    """ShardedHWGraph unit surface: PU index remap, per-group NCR blocks,
+    block-diagonal validation, and device -> shard lookup."""
+    import numpy as np
+    from repro.core.compiled import ShardedHWGraph
+    tb = build_testbed(edge_counts=dict(_PARITY_EDGES),
+                       server_counts=dict(_PARITY_SERVERS))
+    comp = tb.graph.compiled()
+    groups = {"edge_cluster": list(tb.edges),
+              "server_cluster": list(tb.servers)}
+    sh = comp.sharded(groups)
+    assert isinstance(sh, ShardedHWGraph)
+    assert sh.n_shards == 2
+    assert comp.sharded(groups) is sh          # cached per partition
+    names = set()
+    for shard in sh.shards:
+        # remap: local PU names are exactly the global names at pu_idx
+        assert [comp.pu_names[i] for i in shard.pu_idx] == shard.pu_names
+        assert all(shard.local_index[n] == j
+                   for j, n in enumerate(shard.pu_names))
+        # per-group NCR block matches the global matrix's slice
+        np.testing.assert_array_equal(
+            shard.ncr_res, comp.ncr_res[np.ix_(shard.pu_idx, shard.pu_idx)])
+        names.update(shard.pu_names)
+        for d in shard.devices:
+            assert sh.shard_of(d) == shard.name
+    assert names == set(comp.pu_names)         # partition covers the fleet
+    # cross-shard NCR entries are empty (-1): the partition is
+    # block-diagonal by construction
+    a, b = sh.shards
+    assert (comp.ncr_res[np.ix_(a.pu_idx, b.pu_idx)] == -1).all()
+    # a partition that splits one shared-resource device across groups
+    # must be rejected
+    e = tb.edges[0]
+    bad = {"g1": [e], "g2": [d for d in tb.edges if d != e] + tb.servers}
+    pus = [p for p in comp.pu_names if p.startswith(e + ".")]
+    if len(pus) > 1 and not (
+            comp.ncr_res[np.ix_(
+                [comp.pu_index[pus[0]]],
+                [comp.pu_index[p] for p in pus[1:]])] == -1).all():
+        bad2 = {"g1": [e], "g2": [e]}          # overlapping groups
+        with pytest.raises(ValueError):
+            comp.sharded(bad2)
+    with pytest.raises(ValueError):
+        comp.sharded({"g1": [e], "g2": [e, *tb.servers]})

@@ -36,8 +36,8 @@ def test_virtual_orcs_preserve_mapping():
                    input_bytes=4e3)
     t2 = make_task("render", origin=tb.edges[0], deadline=0.030,
                    input_bytes=4e3)
-    r_flat = flat_root.find_device_orc(tb.edges[0]).map_task(t1)
-    r_deep = deep_root.find_device_orc(tb.edges[0]).map_task(t2)
+    r_flat = flat_root.find_device_orc(tb.edges[0]).map_batch([t1])[0]
+    r_deep = deep_root.find_device_orc(tb.edges[0]).map_batch([t2])[0]
     assert r_flat is not None and r_deep is not None
     # both find a server-grade PU meeting the deadline
     assert tb.graph.device_of(r_flat.pu).name in tb.servers

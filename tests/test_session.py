@@ -53,14 +53,14 @@ def _frontier(tb, n=36, seed_uid=50_000):
 
 
 # ---------------------------------------------------------------------------
-# map_batch vs sequential map_task
+# map_batch vs sequential one-element batches
 # ---------------------------------------------------------------------------
 def test_map_batch_matches_sequential_map_task():
     tb1, tb2 = _testbed(), _testbed()
     w1, w2 = _frontier(tb1), _frontier(tb2)
     root1 = build_orchestrators(tb1.graph, heye_traverser(tb1.graph))
     root2 = build_orchestrators(tb2.graph, heye_traverser(tb2.graph))
-    seq = [root1._entry_orc(t).map_task(t, 0.0) for t in w1]
+    seq = [root1._entry_orc(t).map_batch([t], 0.0)[0] for t in w1]
     bat = root2.map_batch(w2, 0.0, route=True)
     assert len(seq) == len(bat)
     for i, (a, b) in enumerate(zip(seq, bat)):
@@ -92,7 +92,7 @@ def test_map_batch_same_device_cascade_parity():
                     deadline=0.2) for i in range(12)]
     root1 = build_orchestrators(tb1.graph, heye_traverser(tb1.graph))
     root2 = build_orchestrators(tb2.graph, heye_traverser(tb2.graph))
-    seq = [root1.find_device_orc(e1).map_task(t, 0.0) for t in w1]
+    seq = [root1.find_device_orc(e1).map_batch([t], 0.0)[0] for t in w1]
     bat = root2.find_device_orc(e2).map_batch(w2, 0.0)
     assert [r.pu.split(".")[-1] for r in seq] == \
         [r.pu.split(".")[-1] for r in bat]
@@ -113,11 +113,15 @@ def test_map_batch_commit_false_leaves_ledger_untouched():
     assert all(t.assigned_pu is None for t in w)
 
 
-def test_map_task_shim_still_commits():
+def test_map_task_removed():
+    """The ``map_task`` shim (deprecated since PR 3) is gone: the public
+    mapping surface is ``map_batch`` + ``SchedulerSession``."""
     tb = _testbed()
     root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    assert not hasattr(root, "map_task")
+    # one-element batches cover the old single-task call shape
     t = make_task("dnn", origin=tb.edges[0], deadline=1.0)
-    res = root.find_device_orc(tb.edges[0]).map_task(t)
+    res = root.find_device_orc(tb.edges[0]).map_batch([t])[0]
     assert res is not None and t.assigned_pu == res.pu
     assert root.ledger.count(res.pu) == 1
 
@@ -416,3 +420,124 @@ def test_runtime_frontier_flag_matches_policy_batching():
         build_orchestrators(tb.graph, heye_traverser(tb.graph)))
     stats = Runtime(tb.graph, seed=0).run(cfg, pol, frontier=True)
     assert stats.qos_failure_rate(cfg) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# consolidated Churn delta-batch API
+# ---------------------------------------------------------------------------
+def test_churn_graph_direct_matches_old_entrypoints():
+    """With no resident engine, ``session.churn`` mutates the graph
+    exactly like the three legacy calls did — same eligibility masks,
+    same delta-patched snapshot (never a rebuild)."""
+    from repro.core import Churn
+    tb1, tb2 = _testbed(), _testbed()
+    e, lk = tb1.edges[1], f"link_{tb1.edges[0]}"
+    s1 = SchedulerSession(tb1.graph, build_orchestrators(
+        tb1.graph, heye_traverser(tb1.graph)))
+    tb2.graph.compiled()                       # both snapshots built once
+    n1, n2 = tb1.graph.recompile_count, tb2.graph.recompile_count
+    with pytest.warns(DeprecationWarning):
+        tb2.graph.mark_dead(e)
+    with pytest.warns(DeprecationWarning):
+        tb2.graph.set_bandwidth(lk, 1e6)
+    s1.churn(Churn(dead=[e], bandwidth=[(lk, 1e6)]))
+    assert not tb1.graph.nodes[e].alive
+    # both paths absorbed the churn as deltas — no extra rebuilds
+    assert tb1.graph.recompile_count == n1
+    assert tb2.graph.recompile_count == n2
+    c1, c2 = tb1.graph.compiled(), tb2.graph.compiled()
+    assert np.array_equal(c1.pu_alive, c2.pu_alive)
+    bws = [sorted((e.name, e.bandwidth) for adj in tb.graph._adj.values()
+                  for _, e in adj) for tb in (tb1, tb2)]
+    assert bws[0] == bws[1]
+    # revival goes back through the same single entrypoint
+    s1.churn(Churn(alive=[e]))
+    assert tb1.graph.nodes[e].alive
+
+
+def test_churn_scheduled_matches_callable_interventions():
+    """A ``Churn`` scheduled at t on the resident timeline reprices at
+    the same instant as the legacy ``interventions=[(t, fn)]`` plumbing:
+    identical finish times, event-for-event."""
+    from repro.core import Churn
+
+    def drive(use_churn):
+        task_mod._task_counter = itertools.count(70_000)
+        tb = _testbed()
+        s = SchedulerSession(tb.graph, build_orchestrators(
+            tb.graph, heye_traverser(tb.graph)))
+        s.submit(mining_workload(tb, n_sensors=12, n_readings=2))
+        s.map_pending()
+        e = tb.edges[1]
+        if use_churn:
+            s.open_timeline()
+            s.churn(Churn(dead=[e]), at=0.03)
+            s.churn(Churn(alive=[e]), at=0.12)
+        else:
+            s.open_timeline(interventions=[
+                (0.03, lambda: tb.graph._mark_dead(e)),
+                (0.12, lambda: tb.graph._mark_alive(e))])
+        return s.finalize_online(drain=True)
+
+    st_new, st_old = drive(True), drive(False)
+    assert set(st_new.timeline.finish) == set(st_old.timeline.finish)
+    for k, v in st_old.timeline.finish.items():
+        assert st_new.timeline.finish[k] == pytest.approx(v, abs=TOL), k
+    assert st_new.timeline.n_intervals == st_old.timeline.n_intervals
+
+
+def test_churn_engine_resident_one_flush():
+    """With an open engine and no ``at``, the delta lands at the current
+    clock through ``TimelineEngine.apply_churn`` — one flush, visible to
+    everything injected afterwards."""
+    from repro.core import Churn
+    task_mod._task_counter = itertools.count(72_000)
+    tb = _testbed()
+    s = SchedulerSession(tb.graph, build_orchestrators(
+        tb.graph, heye_traverser(tb.graph)))
+    s.open_timeline()
+    e = tb.edges[0]
+    s.churn(Churn(dead=[e]))
+    assert not tb.graph.nodes[e].alive
+    # a task from the dead edge must escalate off it
+    t = make_task("render", origin=tb.edges[1], deadline=0.5)
+    s.submit([t]); s.map_pending(); s.inject([t])
+    st = s.finalize_online(drain=True)
+    assert t.uid in st.timeline.finish
+    assert not s.mapping[t.uid].startswith(e)
+
+
+def test_churn_at_requires_engine():
+    from repro.core import Churn
+    tb = _testbed()
+    s = SchedulerSession(tb.graph, build_orchestrators(
+        tb.graph, heye_traverser(tb.graph)))
+    with pytest.raises(RuntimeError, match="open_timeline"):
+        s.churn(Churn(dead=[tb.edges[0]]), at=0.1)
+
+
+def test_churn_dataclass_surface():
+    """Churn normalizes to tuples, is truthy only when non-empty, and
+    sizes as the number of individual mutations."""
+    from repro.core import Churn
+    c = Churn(dead=["a"], alive=["b"], bandwidth=[("l", 1e6)])
+    assert c.dead == ("a",) and c.bandwidth == (("l", 1e6),)
+    assert bool(c) and len(c) == 3
+    assert not Churn() and len(Churn()) == 0
+
+
+def test_legacy_churn_shims_warn():
+    """mark_dead / mark_alive / set_bandwidth survive as deprecation
+    shims that still mutate (one release of grace)."""
+    tb = _testbed()
+    e, lk = tb.edges[0], f"link_{tb.edges[0]}"
+    with pytest.warns(DeprecationWarning, match="Churn"):
+        tb.graph.mark_dead(e)
+    assert not tb.graph.nodes[e].alive
+    with pytest.warns(DeprecationWarning, match="Churn"):
+        tb.graph.mark_alive(e)
+    assert tb.graph.nodes[e].alive
+    with pytest.warns(DeprecationWarning, match="Churn"):
+        tb.graph.set_bandwidth(lk, 1e5)
+    assert any(e.bandwidth == 1e5 for adj in tb.graph._adj.values()
+               for _, e in adj if e.name == lk)
