@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test bench bench-compile bench-session bench-des bench-des-smoke \
-        bench-serve bench-serve-smoke
+        bench-churn-smoke bench-serve bench-serve-smoke
 
 # tier-1 verification (see ROADMAP.md)
 test:
@@ -36,6 +36,13 @@ bench-des:
 # sharded-walk parity assert (CI)
 bench-des-smoke:
 	python -m benchmarks.des --smoke
+
+# bandwidth-volatile wireless-edge scenario at mult=8: seeded uplink
+# degrade/recover Churn waves interleaved with mapping, driven under both
+# the group-sharded walk and the fused oracle — asserts bit-identical
+# placements and zero route-topology copies (CI)
+bench-churn-smoke:
+	python -m benchmarks.des --churn-smoke
 
 # online serving continuum: seeded Poisson + diurnal traffic through the
 # session-resident ServeLoop at mult=8 and mult=64; writes BENCH_serve.json

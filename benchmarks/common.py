@@ -50,28 +50,33 @@ class Table:
 # BENCH_*.json schema: one writer + one gate checker for every benchmark
 # ---------------------------------------------------------------------------
 def bench_payload(t: Table, smoke: bool = False,
-                  gates: dict | None = None) -> dict:
+                  gates: dict | None = None,
+                  extra_meta: dict | None = None) -> dict:
     """The shared ``BENCH_*.json`` layout every benchmark writes:
 
     ``figure``/``smoke``      what ran (smoke payloads are never written),
     ``meta``                  run metadata (host shape + wall time) so a
                               checked-in baseline carries the machine it
-                              was measured on,
+                              was measured on, plus any benchmark-supplied
+                              ``extra_meta`` (e.g. the run's route-table
+                              copy counters),
     ``gates``                 the regression thresholds the ``--check``
                               mode enforced when the file was written
                               (documentation for the next reader, and the
                               CI diff shows threshold changes explicitly),
     ``rows``                  ``{name: {value, unit, **extra}}``.
     """
+    meta = {
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "cpus": os.cpu_count(),
+        "wall_s": round(time.time() - t.t0, 2),
+    }
+    meta.update(extra_meta or {})
     return {
         "figure": t.figure,
         "smoke": smoke,
-        "meta": {
-            "python": platform.python_version(),
-            "machine": platform.machine(),
-            "cpus": os.cpu_count(),
-            "wall_s": round(time.time() - t.t0, 2),
-        },
+        "meta": meta,
         "gates": gates or {},
         "rows": {r.name: {"value": r.value, "unit": r.unit, **r.extra}
                  for r in t.rows},
@@ -79,13 +84,15 @@ def bench_payload(t: Table, smoke: bool = False,
 
 
 def write_payload(t: Table, path: Path, smoke: bool = False,
-                  gates: dict | None = None) -> None:
+                  gates: dict | None = None,
+                  extra_meta: dict | None = None) -> None:
     """Serialize ``t`` to ``path`` in the shared schema (no-op in smoke
     mode: smoke rows are tiny variants and must never become baselines)."""
     if smoke:
         return
-    path.write_text(json.dumps(bench_payload(t, smoke, gates), indent=2)
-                    + "\n")
+    path.write_text(
+        json.dumps(bench_payload(t, smoke, gates, extra_meta), indent=2)
+        + "\n")
 
 
 def check_gate(t: Table, baseline: dict | None, name: str,

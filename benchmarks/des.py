@@ -19,10 +19,20 @@ tasks/sec and shard-count rows) with absolute wall budgets, asserts
 sharded-vs-fused bit-identity at mult=8 (the ``--smoke`` CI step always
 runs this), and reports the canonical factor-cache hit/miss counters.
 
+Also runs the **bandwidth-volatile wireless-edge scenario** at mult=64
+and mult=128: waves of seeded ``Churn`` bandwidth batches degrade and
+recover the edge uplinks between mapping waves, exercising the layered
+route table's overlay path.  The scenario asserts the delta stays
+bandwidth-only (``route_holder_copies == 0`` — no O(D^2) topology-layer
+copy ever fires) and reports the overlay-copy count alongside the
+``x{K}_bwchurn_map_s`` wall.
+
 Emits ``BENCH_des.json`` (shared schema via ``common.write_payload``);
 ``--check`` fails (exit 1) when the array engine's events/sec or the
 mult=128/256 mapping throughput regresses >20% vs the checked-in
-baseline; ``--smoke`` runs a seconds-scale variant for CI.
+baseline; ``--smoke`` runs a seconds-scale variant for CI;
+``--churn-smoke`` runs only the bandwidth-churn sharded-vs-fused parity
+assert at mult=8 (the ``make bench-churn-smoke`` CI step).
 """
 from __future__ import annotations
 
@@ -98,6 +108,104 @@ def _sharded_parity(t: Table, mult: int = 8) -> None:
             f"{len(outs[0])} tasks at mult={mult}")
     t.add(f"x{mult}_sharded_parity_tasks", len(outs[0]), "tasks",
           shards=n_shards)
+
+
+def _bwchurn(t: Table, mult: int, n_waves: int = 8) -> None:
+    """Bandwidth-volatile wireless-edge scenario: interleave seeded
+    uplink degrade/recover ``Churn`` waves with mapping waves over the
+    mult-scaled mining fleet.  The mapping walk keeps building lazy
+    route rows between churn batches, so every wave exercises the
+    overlay path against a part-built table.  Hard invariant: a
+    bandwidth-only delta must never copy the topology layer
+    (``route_holder_copies == 0``) and must absorb every wave as a
+    delta (no silent full-rebuild fallback)."""
+    from repro.core import mining_workload, wireless_churn_schedule
+    ec, sc = mining_counts(mult)
+    tb = build_testbed(edge_counts=ec, server_counts=sc)
+    tb.graph.compiled()                  # snapshot outside the churn timer
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    session = SchedulerSession(tb.graph, root)
+    waves = wireless_churn_schedule(tb, n_waves, seed=1234)
+    per_wave = max(1, (12 * mult) // n_waves)
+    g = tb.graph
+    h0, o0 = g.route_holder_copies, g.route_overlay_copies
+    d0 = g.delta_count
+    n_tasks = 0
+    t0 = time.perf_counter()
+    for churn in waves:
+        session.churn(churn)
+        cfg = mining_workload(tb, n_sensors=per_wave, n_readings=1)
+        n_tasks += len(list(cfg))
+        session.submit(cfg)
+        session.map_pending()
+    wall = time.perf_counter() - t0
+    holders = g.route_holder_copies - h0
+    overlays = g.route_overlay_copies - o0
+    if holders != 0:
+        raise AssertionError(
+            f"bandwidth-only churn at mult={mult} copied the route "
+            f"topology layer {holders}x — the overlay split has regressed "
+            "to O(D^2) per delta")
+    if g.delta_count - d0 != n_waves:
+        raise AssertionError(
+            f"bandwidth churn at mult={mult} absorbed "
+            f"{g.delta_count - d0}/{n_waves} waves as deltas — the rest "
+            "fell back to full snapshot rebuilds")
+    assert not session.unmapped, f"bwchurn mult={mult} left tasks unmapped"
+    t.add(f"x{mult}_bwchurn_map_s", wall, "s", waves=n_waves,
+          tasks=n_tasks)
+    t.add(f"x{mult}_bwchurn_tasks_per_sec", n_tasks / wall, "tasks/s")
+    t.add(f"x{mult}_route_holder_copies", holders, "copies")
+    t.add(f"x{mult}_route_overlay_copies", overlays, "copies")
+
+
+def churn_smoke(mult: int = 8, n_waves: int = 4) -> None:
+    """``make bench-churn-smoke``: drive the bandwidth-volatile scenario
+    at mult=8 under both the group-sharded walk and the fused oracle
+    (``REPRO_SHARDED_WALK=0``) and assert the mapped placements and
+    predictions are bit-identical wave for wave.  Also enforces the
+    zero-topology-copy invariant on both runs."""
+    from repro.core import mining_workload, wireless_churn_schedule
+    outs = []
+    saved = os.environ.get("REPRO_SHARDED_WALK")
+    try:
+        for flag in ("1", "0"):
+            os.environ["REPRO_SHARDED_WALK"] = flag
+            ec, sc = mining_counts(mult)
+            tb = build_testbed(edge_counts=ec, server_counts=sc)
+            tb.graph.compiled()
+            root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+            session = SchedulerSession(tb.graph, root)
+            h0 = tb.graph.route_holder_copies
+            per = []
+            for churn in wireless_churn_schedule(tb, n_waves, seed=7):
+                session.churn(churn)
+                cfg = mining_workload(tb, n_sensors=3 * mult, n_readings=1)
+                session.submit(cfg)
+                res = session.map_pending()
+                for uid in sorted(res):
+                    r = res[uid]
+                    per.append(None if r is None else
+                               (r.pu, r.prediction.total,
+                                r.prediction.factor, r.overhead,
+                                r.queries, r.hops))
+            if tb.graph.route_holder_copies != h0:
+                raise AssertionError(
+                    "bandwidth-only churn copied the route topology layer "
+                    f"(sharded={flag})")
+            outs.append(per)
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_SHARDED_WALK", None)
+        else:
+            os.environ["REPRO_SHARDED_WALK"] = saved
+    if outs[0] != outs[1]:
+        bad = sum(a != b for a, b in zip(*outs))
+        raise AssertionError(
+            f"bandwidth-churn sharded walk diverged from the fused oracle "
+            f"on {bad}/{len(outs[0])} tasks at mult={mult}")
+    print(f"# des: bwchurn sharded-vs-fused parity OK "
+          f"({len(outs[0])} tasks, {n_waves} waves, mult={mult})")
 
 
 def run(smoke: bool = False, check: bool = False) -> Table:
@@ -264,6 +372,23 @@ def run(smoke: bool = False, check: bool = False) -> Table:
                 f"mult=256 mapping took {smap_s:.2f}s (wall: 12s — the "
                 "group-sharded walk has regressed)")
 
+        # --- bandwidth-volatile wireless-edge scenario ---------------------
+        # (mult=64 informational, mult=128 gated: absolute wall + the >20%
+        # tasks/sec gate below; route_holder_copies == 0 is asserted inside)
+        del sroot, ssn, scfg, tbs
+        gc.collect()
+        _bwchurn(t, mult=64)
+        _bwchurn(t, mult=128)
+        # typical ~5.9 s on a quiet 1 vCPU (8 waves x churn + map + per-call
+        # overheads); 2x headroom for host noise, with the >20% tasks/sec
+        # gate below as the sensitive detector
+        bw_wall = t.get("x128_bwchurn_map_s")
+        if not bw_wall < 12.0:
+            raise AssertionError(
+                f"mult=128 bandwidth-churn run took {bw_wall:.2f}s "
+                "(wall: 12s, target <6s — the overlay delta path has "
+                "regressed)")
+
     gates = {
         "des_events_per_sec": {"floor_ratio": 0.8},
         "des_speedup": {"abs_min": 3.0},
@@ -273,8 +398,20 @@ def run(smoke: bool = False, check: bool = False) -> Table:
         "x256_map_s": {"abs_max_s": 12.0},
         "weak_mining_x128_completion": {"abs_max_ms": 120.0},
         "x128_snapshot_build_s": {"abs_max_s": 2.0},
+        "x128_bwchurn_map_s": {"abs_max_s": 12.0},
+        "x128_bwchurn_tasks_per_sec": {"floor_ratio": 0.8},
+        "x128_route_holder_copies": {"abs_max": 0},
     }
-    write_payload(t, _JSON, smoke, gates)
+    extra_meta = None
+    if not smoke:
+        # satellite counters: route-table copy/build behaviour of the
+        # mult=128 runs, surfaced in meta for baseline diffs
+        extra_meta = {
+            "route_holder_copies": int(t.get("x128_route_holder_copies")),
+            "route_overlay_copies": int(t.get("x128_route_overlay_copies")),
+            "route_row_builds": int(t.get("x128_route_rows_built")),
+        }
+    write_payload(t, _JSON, smoke, gates, extra_meta)
     if check and not smoke:
         speedup_ok = t.get("des_speedup") >= 3.0
         fail_gates(t, [
@@ -287,10 +424,16 @@ def run(smoke: bool = False, check: bool = False) -> Table:
             check_gate(t, baseline, "x256_map_tasks_per_sec",
                        floor_ratio=0.8,
                        note="group-sharded walk at mult=256"),
+            check_gate(t, baseline, "x128_bwchurn_tasks_per_sec",
+                       floor_ratio=0.8,
+                       note="bandwidth-churn overlay path at mult=128"),
         ])
     return t
 
 
 if __name__ == "__main__":
     args = sys.argv[1:]
+    if "--churn-smoke" in args:
+        churn_smoke()
+        sys.exit(0)
     run(smoke="--smoke" in args, check="--check" in args).print_csv()

@@ -71,7 +71,12 @@ def _serve_once(mult: int):
         raise AssertionError(
             f"x{mult}: {stats.engine_opens} TimelineEngine builds "
             "(the resident-timeline guarantee is exactly 1)")
-    return stats
+    counters = {
+        "route_holder_copies": tb.graph.route_holder_copies,
+        "route_overlay_copies": tb.graph.route_overlay_copies,
+        "route_row_builds": tb.graph.route_row_builds,
+    }
+    return stats, counters
 
 
 def run(smoke: bool = False, check: bool = False) -> Table:
@@ -79,9 +84,10 @@ def run(smoke: bool = False, check: bool = False) -> Table:
     baseline = json.loads(_JSON.read_text()) if _JSON.exists() else None
 
     mults = [2] if smoke else [8, 64]
+    counters: dict = {}
     for mult in mults:
         t0 = time.perf_counter()
-        stats = _serve_once(mult)
+        stats, counters = _serve_once(mult)
         s = stats.summary()
         t.add(f"x{mult}_requests", s["requests"], "req",
               accepted=s["accepted"], rejected=s["rejected"],
@@ -105,7 +111,10 @@ def run(smoke: bool = False, check: bool = False) -> Table:
         ("p99_ms", {"ceil_ratio": 1.2}),
         ("sla_attainment", {"floor_delta": 0.02}),
     )}
-    write_payload(t, _JSON, smoke, gates)
+    # route-table copy/build counters of the largest run, surfaced in the
+    # payload meta so baseline diffs show COW-behaviour changes
+    write_payload(t, _JSON, smoke, gates,
+                  extra_meta={k: int(v) for k, v in counters.items()})
     if check and not smoke:
         fail_gates(t, [msg for mult in mults for msg in (
             check_gate(t, baseline, f"x{mult}_wall_rps", floor_ratio=0.8),

@@ -34,6 +34,6 @@ from .topology import (EDGE_FPS, Testbed, build_edge_device, build_server,
                        vr_mining_profile)
 from .traverser import TaskPrediction, Timeline, Traverser
 from .workloads import (MINING_DEADLINE, mining_workload, vr_frame,
-                        vr_workload)
+                        vr_workload, wireless_churn_schedule)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

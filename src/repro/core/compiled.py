@@ -23,7 +23,12 @@ which produces a cheap copy-on-write clone with only the affected arrays
 patched — dead/revived PU masks, the transfer rows whose routes touch the
 mutated subtree, the inverse-bandwidth entries of routes crossing a
 re-provisioned link — so large fleets survive topology churn without
-re-running the all-pairs builds.  ``apply_delta`` returns ``None`` when a
+re-running the all-pairs builds.  The route table itself is layered:
+death/revival patches own the *topology layer* (latency/routes/built
+state, O(D^2) to copy) while ``set_bandwidth`` deltas own only a private
+*bandwidth overlay* (per-row effective inverse-bandwidth shadows,
+O(changed rows)), so bandwidth-volatile fleets never pay the holder
+copy.  ``apply_delta`` returns ``None`` when a
 mutation's effects exceed what can be patched (e.g. a cache dying under
 still-alive PUs), and the graph falls back to the full rebuild.  All
 precomputed quantities are bit-for-bit reproductions of the object-path
@@ -61,15 +66,19 @@ import numpy as np
 from .hwgraph import EdgeAttr, HWGraph, NodeKind, ProcessingUnit
 
 
-class _RouteTable:
-    """The route layer of one snapshot: dense latency / inverse-bandwidth
-    matrices over the routable nodes, the concrete ``EdgeAttr`` route
-    lists, and the per-row materialization state.
+class _RouteTopo:
+    """The **topology layer** of the route table: dense latency matrix,
+    build-time base inverse-bandwidth matrix, concrete ``EdgeAttr`` route
+    lists, per-row materialization state, and the crossed-edge id set.
 
-    The holder is the copy-on-write unit: snapshots either share one
-    table entirely (identical route state) or own a private copy —
-    mixing copied matrices with a shared route dict is what this type
-    exists to prevent."""
+    This layer is shared copy-on-write across snapshots and is owned
+    (privately copied) only by death/revival patches.  Lazy route-row
+    builds *write through* to it — every sharer sees the same ``built``
+    flags and freshly built rows, which is the invariant that used to
+    force all-or-nothing holder sharing.  Built rows are never mutated
+    while shared: bandwidth repricing lives in the per-snapshot overlay
+    (:class:`_RouteTable`), and ``_invalidate_row`` only ever runs after
+    a private topology copy."""
 
     __slots__ = ("lat", "ibw", "routes", "built", "edge_ids", "fast")
 
@@ -87,14 +96,102 @@ class _RouteTable:
         # lists materialize per pair on first route_edges() access.
         self.fast: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
-    def copy(self) -> "_RouteTable":
-        c = object.__new__(_RouteTable)
+    def copy(self) -> "_RouteTopo":
+        c = object.__new__(_RouteTopo)
         c.lat = self.lat.copy()
         c.ibw = self.ibw.copy()
         c.routes = dict(self.routes)
         c.built = self.built.copy()
         c.edge_ids = set(self.edge_ids)
         c.fast = dict(self.fast)
+        return c
+
+
+class _RouteTable:
+    """One snapshot's route view: a shared :class:`_RouteTopo` plus a
+    private **bandwidth overlay** — per-row effective inverse-bandwidth
+    shadows (``over``) and the set of links repriced since the topology
+    layer was last privately owned (``dirty``).
+
+    The two layers have different copy-on-write owners:
+
+    * ``apply_delta(kind="set_bandwidth")`` clones via
+      :meth:`overlay_clone` — the topology layer stays shared and only
+      the overlay dict is copied, so a bandwidth-only delta costs
+      O(changed rows) instead of O(D^2);
+    * death/revival patches clone via :meth:`copy` — a private topology
+      copy with the overlay flattened into the base ``ibw`` (those paths
+      mutate lat/routes/built in place, which is only legal on a private
+      topology).
+
+    Effective inverse bandwidth is read through :meth:`ibw_row` /
+    :meth:`ibw_col`; there is deliberately no ``.ibw`` attribute, so a
+    consumer reading the base matrix without the overlay fails loudly."""
+
+    __slots__ = ("topo", "over", "dirty")
+
+    def __init__(self, D: int) -> None:
+        self.topo = _RouteTopo(D)
+        self.over: dict[int, np.ndarray] = {}
+        self.dirty: set[str] = set()
+
+    # -- topology-layer views (shared; see _RouteTopo) -------------------
+    @property
+    def lat(self) -> np.ndarray:
+        return self.topo.lat
+
+    @property
+    def routes(self) -> dict:
+        return self.topo.routes
+
+    @property
+    def built(self) -> np.ndarray:
+        return self.topo.built
+
+    @property
+    def edge_ids(self) -> set:
+        return self.topo.edge_ids
+
+    @property
+    def fast(self) -> dict:
+        return self.topo.fast
+
+    # -- effective inverse bandwidth (base + overlay) --------------------
+    def ibw_row(self, i: int) -> np.ndarray:
+        """Effective inverse-bandwidth row ``i`` (overlay shadow wins)."""
+        r = self.over.get(i)
+        return r if r is not None else self.topo.ibw[i]
+
+    def ibw_col(self, rows: np.ndarray, j: int) -> np.ndarray:
+        """Effective inverse bandwidth of the pairs ``(rows, j)``."""
+        col = self.topo.ibw[rows, j]
+        if self.over:
+            for k, i in enumerate(np.asarray(rows).tolist()):
+                r = self.over.get(int(i))
+                if r is not None:
+                    col[k] = r[j]
+        return col
+
+    # -- the two copy-on-write clones ------------------------------------
+    def overlay_clone(self) -> "_RouteTable":
+        """Bandwidth-delta clone: share the topology layer, copy the
+        overlay dict (row arrays stay shared until shadowed)."""
+        c = object.__new__(_RouteTable)
+        c.topo = self.topo
+        c.over = dict(self.over)
+        c.dirty = set(self.dirty)
+        return c
+
+    def copy(self) -> "_RouteTable":
+        """Topology-delta clone: private topology copy with the overlay
+        flattened into the base ``ibw`` (O(D^2) — the death/revival
+        price, paid only on aliveness churn)."""
+        c = object.__new__(_RouteTable)
+        c.topo = self.topo.copy()
+        for i, row in self.over.items():
+            c.topo.ibw[i, :] = row
+        c.over = {}
+        c.dirty = set()
         return c
 
 
@@ -299,12 +396,17 @@ class CompiledHWGraph:
     # batch-warmed via ``ensure_routes``.  Snapshot construction therefore
     # costs O(touched routes), not O(all pairs) — the all-pairs build was
     # the mult>=64 bottleneck (ROADMAP).  The route state lives in a
-    # ``_RouteTable`` holder that ``apply_delta`` either shares untouched
-    # (mutations provably not crossing any built route) or replaces with a
-    # patched/fresh copy, so clones never see half-patched rows.  A row
-    # built lazily always reflects the authoring graph *at build time*; a
-    # stale snapshot kept across topology churn (e.g. a frozen traverse)
-    # resolves unbuilt rows against the post-churn graph.
+    # layered ``_RouteTable``: a *topology layer* (lat/routes/built/fast,
+    # shared copy-on-write, privately owned only by death/revival
+    # patches; lazy builds write through to every sharer) plus a
+    # per-snapshot *bandwidth overlay* (effective inverse-bandwidth row
+    # shadows + repriced-link set, owned by ``set_bandwidth`` deltas) —
+    # so bandwidth-only churn copies O(changed rows), not O(D^2), and
+    # clones never see half-patched rows.  A row built lazily always
+    # reflects the authoring graph *at build time*; a stale snapshot kept
+    # across topology churn (e.g. a frozen traverse) resolves unbuilt
+    # rows against the post-churn graph.  See docs/timeline.md
+    # ("Route-table layering") for the full lifecycle.
 
     def _build_routes(self) -> None:
         g = self.graph
@@ -410,20 +512,23 @@ class CompiledHWGraph:
 
     def _fill_fast_row(self, i: int, s: int, d: np.ndarray, p: np.ndarray,
                        ctx: _FastRouteCtx) -> None:
-        rt = self._rt
-        if rt.built[i]:
+        # writes go to the (possibly shared) topology layer: a lazy build
+        # is a write-through so every sharer sees the same built flags —
+        # values read the live graph, matching the stale-snapshot rule
+        topo = self._rt.topo
+        if topo.built[i]:
             # rebuilds only: a fresh row has no stale materialized routes
             for j in range(len(self.routable_names)):
-                rt.routes.pop((i, j), None)
-            rt.fast.pop(i, None)
-        rt.built[i] = True
+                topo.routes.pop((i, j), None)
+            topo.fast.pop(i, None)
+        topo.built[i] = True
         reach = np.isfinite(d)
         reach[s] = False
         vs = np.flatnonzero(reach)
         if not vs.size:
-            rt.lat[i, :] = np.inf
-            rt.lat[i, i] = 0.0
-            rt.ibw[i, :] = 0.0
+            topo.lat[i, :] = np.inf
+            topo.lat[i, i] = 0.0
+            topo.ibw[i, :] = 0.0
             return
         # per reachable node: its tree edge (pred -> node), gathered from
         # the sorted directed-pair key table
@@ -445,13 +550,13 @@ class CompiledHWGraph:
             known[v] = True
             rem = rem[~ready]
         fin = known[ctx.r_idx]
-        rt.lat[i, :] = np.where(fin, lat_to[ctx.r_idx], np.inf)
-        rt.lat[i, i] = 0.0
-        rt.ibw[i, :] = np.where(fin, ibw_to[ctx.r_idx], 0.0)
-        rt.ibw[i, i] = 0.0
+        topo.lat[i, :] = np.where(fin, lat_to[ctx.r_idx], np.inf)
+        topo.lat[i, i] = 0.0
+        topo.ibw[i, :] = np.where(fin, ibw_to[ctx.r_idx], 0.0)
+        topo.ibw[i, i] = 0.0
         ue = np.unique(ctx.kord[pos])
-        rt.fast[i] = (p, ue)
-        rt.edge_ids.update(ctx.ord_ids[ue].tolist())
+        topo.fast[i] = (p, ue)
+        topo.edge_ids.update(ctx.ord_ids[ue].tolist())
 
     def _route_from_fast(self, i: int, j: int) -> Optional[list]:
         """Materialize the concrete EdgeAttr route of pair ``(i, j)`` from
@@ -480,15 +585,15 @@ class CompiledHWGraph:
         """(Re)compute all routes from source ``i`` against the current
         authoring graph — the unit of repair/materialization."""
         g = self.graph
-        rt = self._rt
+        topo = self._rt.topo          # write-through (see _fill_fast_row)
         src = self.routable_names[i]
-        rt.lat[i, :] = np.inf
-        rt.lat[i, i] = 0.0
-        rt.ibw[i, :] = 0.0
+        topo.lat[i, :] = np.inf
+        topo.lat[i, i] = 0.0
+        topo.ibw[i, :] = 0.0
         for j in range(len(self.routable_names)):
-            rt.routes.pop((i, j), None)
-        rt.fast.pop(i, None)
-        rt.built[i] = True
+            topo.routes.pop((i, j), None)
+        topo.fast.pop(i, None)
+        topo.built[i] = True
         g.route_row_builds += 1
         if not g._adj[src]:
             return
@@ -501,11 +606,11 @@ class CompiledHWGraph:
                 seq.append(pred[seq[-1]])
             seq.reverse()
             edges = [self._best_edge[(a, b)] for a, b in zip(seq, seq[1:])]
-            rt.routes[(i, j)] = edges
-            rt.edge_ids.update(id(e) for e in edges)
-            rt.lat[i, j] = sum(e.latency for e in edges)
+            topo.routes[(i, j)] = edges
+            topo.edge_ids.update(id(e) for e in edges)
+            topo.lat[i, j] = sum(e.latency for e in edges)
             bw = min((e.bandwidth for e in edges), default=float("inf"))
-            rt.ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
+            topo.ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
 
     # ------------------------------------------------------------------
     # queries
@@ -543,7 +648,8 @@ class CompiledHWGraph:
         lat = self._rt.lat[i, j]
         if not np.isfinite(lat):
             raise KeyError(f"no path {src} -> {dst}")
-        return float(lat + (nbytes * self._rt.ibw[i, j] if nbytes > 0 else 0.0))
+        return float(lat + (nbytes * self._rt.ibw_row(i)[j]
+                            if nbytes > 0 else 0.0))
 
     def route_edges(self, src: str, dst: str) -> list[EdgeAttr]:
         """The shortest-path interconnects src -> dst (shared EdgeAttr refs,
@@ -566,6 +672,7 @@ class CompiledHWGraph:
     # incremental snapshot deltas (mark_dead / mark_alive / set_bandwidth)
     # ------------------------------------------------------------------
     def apply_delta(self, kind: str, names=(), edge_name: Optional[str] = None,
+                    edge_names: Sequence[str] = (),
                     ) -> Optional["CompiledHWGraph"]:
         """Patch this snapshot into a *new* snapshot reflecting one
         authoring-layer mutation (already applied to ``self.graph``),
@@ -574,13 +681,16 @@ class CompiledHWGraph:
         Returns a copy-on-write clone — only the arrays the mutation
         touches are copied — or ``None`` when the mutation's effects
         exceed what can be patched (the caller then rebuilds from
-        scratch).  Route repair note: where several equal-latency
-        shortest paths exist, a patched route may legitimately differ
-        from the one a fresh Dijkstra would pick; latency parity is
-        exact either way.
+        scratch).  ``kind="set_bandwidth"`` accepts many links at once
+        (``edge_names``; a coalesced ``Churn`` bandwidth batch pays one
+        overlay copy) and never copies the topology layer.  Route repair
+        note: where several equal-latency shortest paths exist, a
+        patched route may legitimately differ from the one a fresh
+        Dijkstra would pick; latency parity is exact either way.
         """
         if kind == "set_bandwidth":
-            return self._delta_bandwidth(edge_name)
+            en = tuple(edge_names) or ((edge_name,) if edge_name else ())
+            return self._delta_bandwidth(en)
         if kind in ("mark_dead", "mark_alive"):
             return self._delta_alive(kind == "mark_alive", set(names))
         return None
@@ -595,32 +705,100 @@ class CompiledHWGraph:
         c.__dict__.pop("_sharded", None)
         return c
 
-    def _delta_bandwidth(self, edge_name: str) -> "CompiledHWGraph":
+    def _delta_bandwidth(self, edge_names: Sequence[str],
+                         ) -> "CompiledHWGraph":
         # Shortest-path selection weighs latency only, so routes never
         # change with bandwidth; the EdgeAttr objects are shared with the
-        # authoring layer, so route_edges already sees the new value.
-        # Only the inverse-bandwidth entries of *built* routes crossing
-        # the edge need repair; unbuilt rows read the live bandwidth when
-        # materialized.
+        # authoring layer, so route_edges already sees the new values.
+        # Only the effective inverse bandwidth of *built* rows crossing a
+        # changed link needs repair — and that repair lives entirely in
+        # the private bandwidth overlay: the topology layer stays shared
+        # (route_holder_copies stays 0 under bandwidth-only churn) and
+        # unbuilt rows read the live bandwidth when materialized.
+        g = self.graph
+        names = set(edge_names)
+        rt = self._rt
         c = self._clone()
-        c._rt = rt = self._rt.copy()
-        for (i, j), edges in rt.routes.items():
-            if any(e.name == edge_name for e in edges):
-                bw = min((e.bandwidth for e in edges), default=float("inf"))
-                rt.ibw[i, j] = 0.0 if bw == float("inf") else 1.0 / bw
-        if rt.fast:
-            # a fast-built row's unmaterialized pairs read ibw straight
-            # from the stored row: if the row's shortest-path tree crosses
-            # the renamed link, demote the whole row to unbuilt so the
-            # rebuild reads the live bandwidth
+        changed_ids = {id(e) for adj in g._adj.values() for _, e in adj
+                       if e.name in names}
+        if not (changed_ids & rt.edge_ids):
+            return c          # no built route crosses a changed link:
+                              # share both layers untouched
+        c._rt = rt = rt.overlay_clone()
+        g.route_overlay_copies += 1
+        rt.dirty.update(names)
+        topo = rt.topo
+        # rows privately owned by *this* delta (safe to mutate in place);
+        # rows inherited from the parent overlay stay shared until copied
+        fresh: set[int] = set()
+        replayed: set[int] = set()
+        if topo.fast:
+            # a fast-built row's unmaterialized pairs read effective ibw
+            # straight off the stored row: when the row's shortest-path
+            # tree crosses a changed link, replay the tree against the
+            # live bandwidths into a private overlay row (routes are
+            # bandwidth-independent, so the stored tree stays valid — no
+            # Dijkstra, no shared-state mutation)
             name_ords = np.asarray(
                 [o for o, e in enumerate(self._edge_ord_edges())
-                 if e.name == edge_name], dtype=np.int64)
+                 if e.name in names], dtype=np.int64)
             if name_ords.size:
-                for i, (_, eords) in list(rt.fast.items()):
+                ctx = c._fast_ctx()
+                for i, (p, eords) in topo.fast.items():
                     if bool(np.isin(name_ords, eords).any()):
-                        c._invalidate_row(i)
+                        rt.over[i] = c._overlay_row_from_tree(i, p, ctx)
+                        fresh.add(i)
+                        replayed.add(i)
+        # materialized routes are authoritative per pair: repair every
+        # pair crossing a changed link, and *all* materialized pairs of
+        # tree-replayed rows (a revival-mirror pair is materialized but
+        # invisible to the stored tree, so the replay zeroed it)
+        for (i, j), edges in topo.routes.items():
+            if not (i in replayed or any(e.name in names for e in edges)):
+                continue
+            row = rt.over.get(i)
+            if i not in fresh:
+                row = rt.over[i] = (row.copy() if row is not None
+                                    else topo.ibw[i].copy())
+                fresh.add(i)
+            bw = min((e.bandwidth for e in edges), default=float("inf"))
+            row[j] = 0.0 if bw == float("inf") else 1.0 / bw
         return c
+
+    def _overlay_row_from_tree(self, i: int, p: np.ndarray,
+                               ctx: _FastRouteCtx) -> np.ndarray:
+        """Effective inverse-bandwidth row ``i`` replayed from the stored
+        shortest-path tree against the live edge bandwidths — the same
+        running-max-of-reciprocals accumulation as ``_fill_fast_row``
+        (bit-identical to ``1/min(bandwidths)``), with hop values
+        gathered from the post-mutation graph.  Hops into nodes that
+        died since the row was built gather nothing (their columns were
+        already wiped, and the finite-latency mask below zeroes them)."""
+        topo = self._rt.topo
+        row = np.zeros(len(self.routable_names))
+        vs = np.flatnonzero(p >= 0)
+        if not vs.size or not ctx.keys.size:
+            return row
+        s = int(ctx.idx[self.routable_names[i]])
+        pv = p[vs].astype(np.int64)
+        key = pv * ctx.N + vs
+        pos = np.searchsorted(ctx.keys, key).clip(0, len(ctx.keys) - 1)
+        eb = np.where(ctx.keys[pos] == key, ctx.hibw[pos], 0.0)
+        ibw_to = np.zeros(ctx.N)
+        known = np.zeros(ctx.N, dtype=bool)
+        known[s] = True
+        rem = np.arange(vs.size)
+        while rem.size:
+            ready = known[pv[rem]]
+            sel = rem[ready]
+            v = vs[sel]
+            ibw_to[v] = np.maximum(ibw_to[pv[sel]], eb[sel])
+            known[v] = True
+            rem = rem[~ready]
+        fin = known[ctx.r_idx] & np.isfinite(topo.lat[i, :])
+        row[:] = np.where(fin, ibw_to[ctx.r_idx], 0.0)
+        row[i] = 0.0
+        return row
 
     def _delta_alive(self, alive: bool,
                      names: set) -> Optional["CompiledHWGraph"]:
@@ -735,7 +913,11 @@ class CompiledHWGraph:
         live graph; everything else stays warm."""
         g = self.graph
         if alive:
+            # private topology copy (overlay flattened): aliveness repair
+            # mutates lat/routes/built in place, which is only legal on
+            # an owned topology layer
             self._rt = rt = self._rt.copy()
+            g.route_holder_copies += 1
             r_s = sorted(self.routable_index[n] for n in names
                          if n in self.routable_index)
             for r in r_s:                # rows of revived sources (eager:
@@ -753,11 +935,11 @@ class CompiledHWGraph:
                         rt.routes[(j, r)] = list(
                             reversed(rt.routes[(r, j)]))
                         rt.lat[j, r] = lat
-                        rt.ibw[j, r] = rt.ibw[r, j]
+                        rt.topo.ibw[j, r] = rt.topo.ibw[r, j]
                     else:
                         rt.routes.pop((j, r), None)
                         rt.lat[j, r] = np.inf
-                        rt.ibw[j, r] = 0.0
+                        rt.topo.ibw[j, r] = 0.0
             # transit improvements: a new shortest path through the
             # revived subtree must pass one of its boundary nodes — one
             # Dijkstra per boundary node flags exactly the built rows
@@ -797,7 +979,8 @@ class CompiledHWGraph:
                if n in self.routable_index}
         if not touched and not r_s:
             return True      # a node no built route crosses died
-        self._rt = rt = rt.copy()
+        self._rt = rt = rt.copy()    # private topology copy (see above)
+        g.route_holder_copies += 1
         # endpoints into the dead subtree become unroutable (the object
         # path raises KeyError); routes *from* dead sources stay valid —
         # Dijkstra explores outward from a dead source
@@ -815,7 +998,7 @@ class CompiledHWGraph:
         if r_s:
             cols = sorted(r_s)
             rt.lat[:, cols] = np.inf
-            rt.ibw[:, cols] = 0.0
+            rt.topo.ibw[:, cols] = 0.0
             for r in cols:
                 rt.lat[r, r] = 0.0
         for i in stale:
@@ -838,15 +1021,18 @@ class CompiledHWGraph:
         return True
 
     def _invalidate_row(self, i: int) -> None:
-        """Return row ``i`` to the unbuilt state (rebuilt on next access)."""
+        """Return row ``i`` to the unbuilt state (rebuilt on next access).
+        Only ever called on a privately owned topology layer — never
+        while the topology is shared (the overlay is empty there)."""
         rt = self._rt
         rt.built[i] = False
         rt.lat[i, :] = np.inf
         rt.lat[i, i] = 0.0
-        rt.ibw[i, :] = 0.0
+        rt.topo.ibw[i, :] = 0.0
         for j in range(len(self.routable_names)):
             rt.routes.pop((i, j), None)
         rt.fast.pop(i, None)
+        rt.over.pop(i, None)
 
     def summary(self) -> str:
         P = len(self.pu_names)
@@ -919,10 +1105,14 @@ class ShardedHWGraph:
     fortiori group) boundaries: every cross-group NCR entry is ``-1`` by
     construction, which ``validate=True`` asserts pairwise.  The route
     table is **shared copy-on-write** with the parent snapshot — shards
-    reference the same ``_RouteTable`` holder; ``apply_delta`` replaces
-    the holder on a *clone* (never patches shared rows in place), and the
-    clone re-slices its shards, so a shard's route view can never go
-    half-patched.  Cross-group work (the root ORC's boundary scan) keeps
+    reference the same layered ``_RouteTable`` (shared topology layer +
+    the parent's bandwidth overlay); ``apply_delta`` swaps the table on
+    a *clone* (a bandwidth delta re-points only the overlay, an
+    aliveness delta owns a fresh topology layer — shared built rows are
+    never patched in place), and the clone re-slices its shards, so a
+    shard's route view can never go half-patched.  Lazy row builds
+    write through to the shared topology layer, so a build triggered
+    through any shard (or the parent) is visible to all of them.  Cross-group work (the root ORC's boundary scan) keeps
     using the parent snapshot's full matrices — reconciliation happens
     through the NCR matrix, not through any shard."""
 

@@ -147,9 +147,12 @@ class Churn:
     or routed through all three by ``SchedulerSession.churn``.
 
     Application order within a batch is deaths, then revivals, then
-    bandwidth changes; each mutation delta-patches the compiled snapshot
-    via ``CompiledHWGraph.apply_delta`` exactly as the old sequential
-    calls did."""
+    bandwidth changes.  Deaths/revivals delta-patch the compiled
+    snapshot via ``CompiledHWGraph.apply_delta`` exactly as the old
+    sequential calls did; bandwidth entries are coalesced
+    last-writer-wins per link into **one** multi-edge delta, so a batch
+    of N link changes pays a single bandwidth-overlay copy and the
+    resulting snapshot is identical to applying them one by one."""
 
     dead: Sequence[str] = ()
     alive: Sequence[str] = ()
@@ -182,6 +185,12 @@ class HWGraph:
         self.recompile_count = 0     # full snapshot builds
         self.delta_count = 0         # incremental apply_delta patches
         self.route_row_builds = 0    # lazily materialized route rows (Dijkstras)
+        # layered route-table copy counters (see docs/timeline.md,
+        # "Route-table layering"): holder = O(D^2) topology-layer copies
+        # (death/revival churn only), overlay = O(changed rows) bandwidth
+        # overlay copies (one per coalesced bandwidth delta batch)
+        self.route_holder_copies = 0
+        self.route_overlay_copies = 0
 
     # -- construction ------------------------------------------------------
     def add_node(self, node: Node) -> Node:
@@ -376,16 +385,24 @@ class HWGraph:
 
     def apply_churn(self, churn: "Churn") -> None:
         """Apply one :class:`Churn` delta batch — the single topology-churn
-        entrypoint (deaths, then revivals, then bandwidth changes).  Each
-        mutation routes through ``_after_mutation`` exactly like the old
-        per-call surface, so ``CompiledHWGraph.apply_delta`` sees the same
-        sequence of patches and parity with sequential churn holds."""
+        entrypoint (deaths, then revivals, then bandwidth changes).
+        Deaths and revivals route through ``_after_mutation`` exactly
+        like the old per-call surface.  Bandwidth entries are coalesced
+        **last-writer-wins per link** and applied as one multi-edge
+        ``set_bandwidth`` delta, so N bandwidth changes in one batch pay
+        a single overlay copy; the final snapshot is identical to the
+        sequential per-entry patches (each patch reprices a route from
+        its edges' live bandwidths, and only the last write to a link
+        survives either way)."""
         for name in churn.dead:
             self._mark_dead(name)
         for name in churn.alive:
             self._mark_alive(name)
-        for edge_name, bandwidth in churn.bandwidth:
-            self._set_bandwidth(edge_name, bandwidth)
+        if churn.bandwidth:
+            final: dict[str, float] = {}
+            for edge_name, bandwidth in churn.bandwidth:
+                final[edge_name] = bandwidth
+            self._set_bandwidths(final)
 
     def _mark_dead(self, name: str) -> None:
         """Node failure: the node (and its subtree) stops being schedulable."""
@@ -400,19 +417,27 @@ class HWGraph:
             self.nodes[cur].alive = True
         self._after_mutation("mark_alive", names=names)
 
-    def _set_bandwidth(self, edge_name: str, bandwidth: float) -> None:
-        """Dynamic network conditions (paper §5.4.1)."""
-        found = False
+    def _set_bandwidths(self, updates: dict[str, float]) -> None:
+        """Dynamic network conditions (paper §5.4.1): re-provision many
+        links in one delta.  Validates every name before mutating (the
+        authoring layer is never left half-applied on a bad batch)."""
+        hit: set[str] = set()
+        edges: list[EdgeAttr] = []
         for adj in self._adj.values():
             for _, e in adj:
-                if e.name == edge_name:
-                    e.bandwidth = bandwidth
-                    found = True
-        if not found:
-            raise KeyError(f"no edge named {edge_name!r}")
-        self._after_mutation("set_bandwidth", edge_name=edge_name)
+                if e.name in updates:
+                    edges.append(e)
+                    hit.add(e.name)
+        missing = set(updates) - hit
+        if missing:
+            raise KeyError(f"no edge named {sorted(missing)[0]!r}")
+        for e in edges:
+            e.bandwidth = updates[e.name]
+        self._after_mutation("set_bandwidth", edge_names=tuple(updates))
 
     # -- deprecated per-call churn shims ------------------------------------
+    # (each is a one-entry Churn: the batch surface is the only delta
+    # plumbing left, so the shims cannot drift from apply_churn)
     def mark_dead(self, name: str) -> None:
         """.. deprecated:: batch churn through :meth:`apply_churn` (or
         ``SchedulerSession.churn``)."""
@@ -420,7 +445,7 @@ class HWGraph:
             "HWGraph.mark_dead is deprecated: apply churn as a delta batch "
             "via HWGraph.apply_churn(Churn(dead=[...])) or "
             "SchedulerSession.churn(...)", DeprecationWarning, stacklevel=2)
-        self._mark_dead(name)
+        self.apply_churn(Churn(dead=(name,)))
 
     def mark_alive(self, name: str) -> None:
         """.. deprecated:: batch churn through :meth:`apply_churn` (or
@@ -429,7 +454,7 @@ class HWGraph:
             "HWGraph.mark_alive is deprecated: apply churn as a delta batch "
             "via HWGraph.apply_churn(Churn(alive=[...])) or "
             "SchedulerSession.churn(...)", DeprecationWarning, stacklevel=2)
-        self._mark_alive(name)
+        self.apply_churn(Churn(alive=(name,)))
 
     def set_bandwidth(self, edge_name: str, bandwidth: float) -> None:
         """.. deprecated:: batch churn through :meth:`apply_churn` (or
@@ -439,9 +464,9 @@ class HWGraph:
             "batch via HWGraph.apply_churn(Churn(bandwidth=[(edge, bw)])) "
             "or SchedulerSession.churn(...)", DeprecationWarning,
             stacklevel=2)
-        self._set_bandwidth(edge_name, bandwidth)
+        self.apply_churn(Churn(bandwidth=((edge_name, bandwidth),)))
 
-    def _after_mutation(self, kind: str, names=(), edge_name=None) -> None:
+    def _after_mutation(self, kind: str, names=(), edge_names=()) -> None:
         """Invalidate object-layer caches, then delta-patch the compiled
         snapshot instead of dropping it (full rebuild only when the delta
         engine declines — see ``CompiledHWGraph.apply_delta``)."""
@@ -451,7 +476,7 @@ class HWGraph:
         if self._compiled is not None:
             try:
                 patched = self._compiled.apply_delta(kind, names=names,
-                                                     edge_name=edge_name)
+                                                     edge_names=edge_names)
             except Exception:
                 patched = None
             self._compiled = patched

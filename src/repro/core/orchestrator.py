@@ -1992,15 +1992,19 @@ class Orchestrator:
             need.update(int(j) for j in j_arr)
         comp.ensure_routes(need)
         vals = np.zeros(len(uniq))
+        # effective inverse bandwidth reads the layered route table's
+        # per-snapshot overlay (ibw_row/ibw_col), not the shared base —
+        # a bandwidth-churned snapshot prices links post-churn while the
+        # topology layer stays shared (docs/timeline.md)
         if ib > 0:
             for i in i_src:
-                leg = rt.lat[i, j_arr] + ib * rt.ibw[i, j_arr]
+                leg = rt.lat[i, j_arr] + ib * rt.ibw_row(i)[j_arr]
                 leg = np.where(j_arr == i, 0.0, leg)
                 if not np.isfinite(leg).all():
                     return False
                 np.maximum(vals, leg, out=vals)
         if ret:
-            leg = rt.lat[j_arr, j_org] + ret_bytes * rt.ibw[j_arr, j_org]
+            leg = rt.lat[j_arr, j_org] + ret_bytes * rt.ibw_col(j_arr, j_org)
             leg = np.where(j_arr == j_org, 0.0, leg)
             if not np.isfinite(leg).all():
                 return False

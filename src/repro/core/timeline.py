@@ -818,9 +818,11 @@ class TimelineEngine:
 
     def _intervene(self, fn) -> None:
         from .hwgraph import Churn
-        if isinstance(fn, Churn):
+        is_churn = isinstance(fn, Churn)
+        if is_churn:
             # declarative delta batch: apply through the consolidated
-            # churn surface instead of calling into user code
+            # churn surface instead of calling into user code (bandwidth
+            # entries coalesce into one snapshot overlay copy there)
             self.graph.apply_churn(fn)
         else:
             fn()
@@ -833,8 +835,19 @@ class TimelineEngine:
         for d, members in self.dev_members.items():
             if members:
                 self.dirty_devs.add(d)
-        for i, e in enumerate(self.edge_objs):
-            self.edge_bw[i] = e.bandwidth
+        if is_churn and not (fn.dead or fn.alive):
+            # bandwidth-only batch: the churn surface names exactly which
+            # links moved (the snapshot overlay's dirty-link set), so
+            # only those slots of the segment-min repricing input need a
+            # refresh — every other edge's bandwidth is unchanged by
+            # construction
+            changed = {name for name, _ in fn.bandwidth}
+            for i, e in enumerate(self.edge_objs):
+                if e.name in changed:
+                    self.edge_bw[i] = e.bandwidth
+        else:
+            for i, e in enumerate(self.edge_objs):
+                self.edge_bw[i] = e.bandwidth
         self._edge_bw_arr = None
         for e, xs in self.edge_xfers.items():
             if xs:

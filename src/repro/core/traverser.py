@@ -438,7 +438,12 @@ class Traverser:
                     data_arrived(uid)
                 elif kind == "intervene":
                     # churn boundary: apply the mutation, then reprice
-                    # every occupied device pool and active link set
+                    # every occupied device pool and active link set.
+                    # A Churn batch coalesces its bandwidth entries into
+                    # one snapshot delta (layered route table); the
+                    # repricing below reads live EdgeAttr bandwidths, so
+                    # the oracle loop and TimelineEngine see identical
+                    # post-churn link rates either way.
                     from .hwgraph import Churn
                     if isinstance(payload, Churn):
                         self.graph.apply_churn(payload)

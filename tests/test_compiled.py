@@ -245,3 +245,135 @@ def test_set_bandwidth_invalidates_transfer_matrices():
     t1 = after.transfer_time(e, s, 10e6)
     assert t1 > t0
     assert t1 == pytest.approx(g.transfer_time(e, s, 10e6), abs=TOL, rel=TOL)
+
+
+# ---------------------------------------------------------------------------
+# layered COW route tables: topology layer vs bandwidth overlay
+# ---------------------------------------------------------------------------
+def _route_parity(patched, fresh, names, nb=5e6, tol=TOL):
+    """Every routable pair must price identically on the delta-patched
+    snapshot and a fresh recompile (KeyError behaviour included)."""
+    for s in names:
+        for d in names:
+            try:
+                want = fresh.transfer_time(s, d, nb)
+            except KeyError:
+                with pytest.raises(KeyError):
+                    patched.transfer_time(s, d, nb)
+                continue
+            got = patched.transfer_time(s, d, nb)
+            assert got == pytest.approx(want, abs=tol, rel=tol), (s, d)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_layered_cow_random_interleaving_parity(seed):
+    """Property-style oracle: a random interleaving of bandwidth batches,
+    deaths and revivals over lazily part-built route rows — with every
+    intermediate snapshot kept alive as a sharer — must stay bit-identical
+    to a fresh recompile of the final graph."""
+    import random
+
+    from repro.core import Churn
+    from repro.core.compiled import CompiledHWGraph
+    rng = random.Random(seed)
+    tb = build_testbed(edge_counts={"orin_agx": 1, "xavier_agx": 1,
+                                    "orin_nano": 1},
+                       server_counts={"server1": 1, "server2": 1})
+    g = tb.graph
+    names = tb.edges + tb.servers
+    links = [f"link_{n}" for n in names]
+    nominal = {}
+    for adj in g._adj.values():
+        for _, e in adj:
+            if e.name in links:
+                nominal.setdefault(e.name, e.bandwidth)
+    sharers = [g.compiled()]                 # >= 2 sharers at every step
+    for _ in range(12):
+        comp = g.compiled()
+        # lazily build a few rows on the current snapshot
+        for s in rng.sample(names, 2):
+            try:
+                comp.transfer_time(s, rng.choice(names), 5e6)
+            except KeyError:
+                pass
+        op = rng.random()
+        if op < 0.55:
+            entries = tuple((ln, nominal[ln] * rng.uniform(0.05, 1.5))
+                            for ln in (rng.choice(links)
+                                       for _ in range(rng.randint(1, 3))))
+            g.apply_churn(Churn(bandwidth=entries))
+        elif op < 0.8:
+            alive = [n for n in names if g.nodes[n].alive]
+            if len(alive) > 2:
+                g.apply_churn(Churn(dead=(rng.choice(alive),)))
+        else:
+            dead = [n for n in names if not g.nodes[n].alive]
+            if dead:
+                g.apply_churn(Churn(alive=(rng.choice(dead),)))
+        sharers.append(g.compiled())
+    _route_parity(g.compiled(), CompiledHWGraph(g), names)
+
+
+def test_bandwidth_overlay_shares_topology_layer():
+    from repro.core import Churn
+    tb = build_testbed(edge_counts={"orin_agx": 2},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    e0, e1, s = tb.edges[0], tb.edges[1], tb.servers[0]
+    old = g.compiled()
+    t_before = old.transfer_time(e0, s, 10e6)     # lazy row build
+    h0, o0 = g.route_holder_copies, g.route_overlay_copies
+    g.apply_churn(Churn(bandwidth=((f"link_{e0}", 2e6),)))
+    new = g.compiled()
+    assert new is not old and new._rt is not old._rt
+    assert new._rt.topo is old._rt.topo           # topology layer shared
+    assert g.route_holder_copies == h0            # no O(D^2) copy
+    assert g.route_overlay_copies == o0 + 1
+    # the stale sharer keeps its pre-churn pricing on built rows; the
+    # patched snapshot prices the degraded uplink
+    assert old.transfer_time(e0, s, 10e6) == pytest.approx(
+        t_before, abs=TOL, rel=TOL)
+    assert new.transfer_time(e0, s, 10e6) > t_before
+    # a row built lazily on the stale sharer writes through to the shared
+    # topology layer: the patched snapshot resolves it without rebuilding
+    t_e1 = old.transfer_time(e1, s, 10e6)
+    assert new.transfer_time(e1, s, 10e6) == pytest.approx(
+        t_e1, abs=TOL, rel=TOL)
+
+
+def test_bandwidth_delta_on_unreferenced_links_shares_whole_table():
+    from repro.core import Churn
+    tb = build_testbed(edge_counts={"orin_agx": 2},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    comp = g.compiled()                           # no rows built yet
+    o0, h0 = g.route_overlay_copies, g.route_holder_copies
+    g.apply_churn(Churn(bandwidth=((f"link_{tb.edges[1]}", 5e6),)))
+    new = g.compiled()
+    assert new is not comp
+    assert new._rt is comp._rt                    # zero-copy share
+    assert (g.route_overlay_copies, g.route_holder_copies) == (o0, h0)
+    # rows built after the share price the post-churn bandwidths
+    from repro.core.compiled import CompiledHWGraph
+    _route_parity(new, CompiledHWGraph(g), tb.edges + tb.servers)
+
+
+def test_sharded_slices_share_topology_after_bandwidth_delta():
+    from repro.core import Churn
+    from repro.core.compiled import CompiledHWGraph, ShardedHWGraph
+    tb = build_testbed(edge_counts={"orin_agx": 2},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    e0, s = tb.edges[0], tb.servers[0]
+    comp = g.compiled()
+    comp.transfer_time(e0, s, 5e6)
+    sh = comp.sharded({"edge": list(tb.edges), "server": list(tb.servers)})
+    assert isinstance(sh, ShardedHWGraph)
+    assert sh.routes is comp._rt
+    g.apply_churn(Churn(bandwidth=((f"link_{e0}", 3e6),)))
+    comp2 = g.compiled()
+    # the sharded view and the patched snapshot still share one topology
+    # layer; only the bandwidth overlay diverged
+    assert comp2._rt.topo is sh.routes.topo
+    assert g.route_holder_copies == 0
+    _route_parity(comp2, CompiledHWGraph(g), tb.edges + tb.servers)

@@ -136,3 +136,60 @@ def test_tpu_fleet_topology():
     # cross-pod goes through the abstract DCN node
     hops = [n for n, _ in g.path("pod0.host0", "pod1.host0")]
     assert "dcn" in hops
+
+
+# ---------------------------------------------------------------------------
+# batched churn: bandwidth coalescing (last-writer-wins, one delta)
+# ---------------------------------------------------------------------------
+def test_apply_churn_coalesces_duplicate_bandwidth_entries():
+    from repro.core import Churn, build_testbed
+    tb = build_testbed()
+    g = tb.graph
+    e, s = tb.edges[0], tb.servers[0]
+    link = f"link_{e}"
+    comp = g.compiled()
+    comp.transfer_time(e, s, 1e6)        # build a row crossing the link
+    d0, o0 = g.delta_count, g.route_overlay_copies
+    # three writes to the same link in one batch: only the last survives,
+    # and the whole batch pays exactly one delta / one overlay copy
+    g.apply_churn(Churn(bandwidth=((link, 1e6), (link, 9e9), (link, 2e6))))
+    edge = next(a for adj in g._adj.values() for _, a in adj
+                if a.name == link)
+    assert edge.bandwidth == 2e6
+    assert g.delta_count == d0 + 1
+    assert g.route_overlay_copies == o0 + 1
+    assert g.route_holder_copies == 0    # bandwidth never copies topology
+    # the patched snapshot prices the final value, not an intermediate
+    after = g.compiled().transfer_time(e, s, 10e6)
+    assert after == pytest.approx(g.transfer_time(e, s, 10e6),
+                                  abs=1e-9, rel=1e-9)
+
+
+def test_apply_churn_bandwidth_batch_validates_all_names():
+    from repro.core import Churn, build_testbed
+    tb = build_testbed()
+    g = tb.graph
+    e = tb.edges[0]
+    link = f"link_{e}"
+    nominal = next(a.bandwidth for adj in g._adj.values() for _, a in adj
+                   if a.name == link)
+    with pytest.raises(KeyError):
+        g.apply_churn(Churn(bandwidth=((link, 1e6),
+                                       ("no_such_link", 1.0))))
+    # a bad batch must leave the authoring layer untouched
+    assert next(a.bandwidth for adj in g._adj.values() for _, a in adj
+                if a.name == link) == nominal
+
+
+def test_route_copy_counters_split_by_delta_kind():
+    from repro.core import Churn, build_testbed
+    tb = build_testbed()
+    g = tb.graph
+    e, s = tb.edges[0], tb.servers[0]
+    comp = g.compiled()
+    comp.transfer_time(e, s, 1e6)
+    assert g.route_holder_copies == 0 and g.route_overlay_copies == 0
+    g.apply_churn(Churn(bandwidth=((f"link_{e}", 5e6),)))
+    assert (g.route_holder_copies, g.route_overlay_copies) == (0, 1)
+    g.apply_churn(Churn(dead=(e,)))      # topology delta: holder copy
+    assert g.route_holder_copies >= 1
