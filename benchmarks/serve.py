@@ -24,11 +24,13 @@ import sys
 import time
 from pathlib import Path
 
+import os
+
 from repro.core import (DiurnalArrivals, PoissonArrivals, ServeLoop,
                         TenantSpec, build_orchestrators, build_testbed,
                         ground_truth_traverser, heye_traverser,
                         single_task_request)
-from repro.serve.admission import AdmissionController
+from repro.serve.admission import AdaptiveWindow, AdmissionController
 
 from .common import Table, check_gate, fail_gates, write_payload
 from .scaling import mining_counts
@@ -41,9 +43,13 @@ _JSON = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
 _MINING_RATE = 75.0
 _VISION_BASE, _VISION_PEAK = 20.0, 60.0
 _HORIZON = 10.0
+# absolute co-simulation throughput floor at the largest scale: the
+# session-resident walk state keeps steady-state serving O(changed
+# devices), worth >=3x the cold-walk baseline on the reference machine
+_X64_WALL_RPS_FLOOR = 200.0
 
 
-def _serve_once(mult: int):
+def _serve_once(mult: int, batch_window=0.0):
     ec, sc = mining_counts(mult)
     tb = build_testbed(edge_counts=ec, server_counts=sc)
     root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
@@ -65,6 +71,7 @@ def _serve_once(mult: int):
                      admission=AdmissionController(slack=4.0,
                                                    defer_delay=0.005,
                                                    max_defers=1),
+                     batch_window=batch_window,
                      horizon=horizon)
     stats = loop.run()
     if stats.engine_opens != 1:
@@ -74,9 +81,43 @@ def _serve_once(mult: int):
     counters = {
         "route_holder_copies": tb.graph.route_holder_copies,
         "route_overlay_copies": tb.graph.route_overlay_copies,
+        "route_overlay_compactions": tb.graph.route_overlay_compactions,
         "route_row_builds": tb.graph.route_row_builds,
     }
     return stats, counters
+
+
+def _assert_fastpath_parity(mult: int) -> None:
+    """Whole-run equivalence of the serving fast path against the cold
+    per-wave walk (``REPRO_SERVE_FASTPATH=0``): verdicts, reject reasons
+    and completion times must agree to 1e-9."""
+    fast, _ = _serve_once(mult)
+    old = os.environ.get("REPRO_SERVE_FASTPATH")
+    os.environ["REPRO_SERVE_FASTPATH"] = "0"
+    try:
+        cold, _ = _serve_once(mult)
+    finally:
+        if old is None:
+            del os.environ["REPRO_SERVE_FASTPATH"]
+        else:
+            os.environ["REPRO_SERVE_FASTPATH"] = old
+    if len(fast.requests) != len(cold.requests):
+        raise AssertionError(
+            f"fastpath parity x{mult}: {len(fast.requests)} requests vs "
+            f"{len(cold.requests)} on the oracle path")
+    import math
+    for a, b in zip(fast.requests, cold.requests):
+        if a.verdict != b.verdict or a.reject_reason != b.reject_reason:
+            raise AssertionError(
+                f"fastpath parity x{mult}: request {a.rid} "
+                f"{a.verdict}/{a.reject_reason!r} vs "
+                f"{b.verdict}/{b.reject_reason!r}")
+        if math.isnan(a.finish) and math.isnan(b.finish):
+            continue
+        if abs(a.finish - b.finish) > 1e-9:
+            raise AssertionError(
+                f"fastpath parity x{mult}: request {a.rid} finish "
+                f"{a.finish!r} vs {b.finish!r}")
 
 
 def run(smoke: bool = False, check: bool = False) -> Table:
@@ -85,9 +126,11 @@ def run(smoke: bool = False, check: bool = False) -> Table:
 
     mults = [2] if smoke else [8, 64]
     counters: dict = {}
+    last_stats = None
     for mult in mults:
         t0 = time.perf_counter()
         stats, counters = _serve_once(mult)
+        last_stats = stats
         s = stats.summary()
         t.add(f"x{mult}_requests", s["requests"], "req",
               accepted=s["accepted"], rejected=s["rejected"],
@@ -106,23 +149,57 @@ def run(smoke: bool = False, check: bool = False) -> Table:
               n_events=s["n_events"], mapped_tasks=s["mapped_tasks"],
               total_s=round(time.perf_counter() - t0, 2))
 
+    if smoke:
+        # CI parity drill: the small-wave fast path must be whole-run
+        # bit-equivalent to the cold per-wave walk
+        _assert_fastpath_parity(2)
+    else:
+        # overload-adaptive coalescing at the largest scale (reported,
+        # not gated: wave shapes are the point, wall varies with load)
+        stats, _ = _serve_once(64, batch_window=AdaptiveWindow(
+            max_window=0.002))
+        s = stats.summary()
+        hist = stats.wave_size_hist()
+        t.add("x64_adaptive_wall_rps", s["wall_rps"], "req/s",
+              wall_s=round(stats.wall_s, 3))
+        t.add("x64_adaptive_p99_ms", s["p99_ms"], "ms",
+              sla=round(s["sla_attainment"], 4))
+        t.add("x64_adaptive_max_wave", max(hist), "req",
+              waves=sum(hist.values()))
+
     gates = {f"x{mult}_{metric}": thr for mult in mults for metric, thr in (
         ("wall_rps", {"floor_ratio": 0.8}),
         ("p99_ms", {"ceil_ratio": 1.2}),
         ("sla_attainment", {"floor_delta": 0.02}),
     )}
-    # route-table copy/build counters of the largest run, surfaced in the
-    # payload meta so baseline diffs show COW-behaviour changes
-    write_payload(t, _JSON, smoke, gates,
-                  extra_meta={k: int(v) for k, v in counters.items()})
+    gates["x64_wall_rps_abs"] = {"floor_abs": _X64_WALL_RPS_FLOOR}
+    # route-table copy/build counters plus the per-phase wall breakdown
+    # and wave-size histogram of the largest gated run, surfaced in the
+    # payload meta so baseline diffs show COW/fast-path behaviour changes
+    extra_meta = {k: int(v) for k, v in counters.items()}
+    if last_stats is not None:
+        extra_meta["phase_wall"] = {
+            k: round(v, 3) for k, v in last_stats.phase_wall.items()}
+        extra_meta["wave_size_hist"] = {
+            str(k): v for k, v in sorted(last_stats.wave_size_hist().items())}
+    write_payload(t, _JSON, smoke, gates, extra_meta=extra_meta)
     if check and not smoke:
-        fail_gates(t, [msg for mult in mults for msg in (
+        msgs = [msg for mult in mults for msg in (
             check_gate(t, baseline, f"x{mult}_wall_rps", floor_ratio=0.8),
             check_gate(t, baseline, f"x{mult}_p99_ms", ceil_ratio=1.2,
                        note="seed-deterministic: the event order changed"),
             check_gate(t, baseline, f"x{mult}_sla_attainment",
                        floor_delta=0.02),
-        )])
+        )]
+        # absolute floor on the flagship metric: the serving fast path
+        # holds >=3x the PR 9 steady-state throughput regardless of
+        # which baseline file is checked in
+        rps = t.get("x64_wall_rps")
+        if rps < _X64_WALL_RPS_FLOOR:
+            msgs.append(
+                f"x64_wall_rps={rps:.1f} below the absolute floor "
+                f"{_X64_WALL_RPS_FLOOR} (serving fast path regressed)")
+        fail_gates(t, msgs)
     return t
 
 

@@ -11,6 +11,7 @@ Public surface:
   SchedulerSession                               — batch-first mapping API
   ServeLoop / ServeStats / TenantSpec            — online serving continuum
   PoissonArrivals / DiurnalArrivals              — open-loop traffic models
+  ClosedLoopClients                              — closed-loop population
   build_testbed / build_tpu_fleet                — topologies (Fig. 4, TPU)
   Runtime / policies                             — experiment harness (§5)
 """
@@ -20,8 +21,8 @@ from .hwgraph import (Churn, EdgeAttr, HWGraph, Node, NodeKind, Predictable,
 from .orchestrator import (ActiveLedger, MapResult, OrcConfig, Orchestrator,
                            ShardedLedger, build_orchestrators)
 from .predict import CallableModel, PerfModel, ProfiledModel, RooflineModel
-from .serving import (DiurnalArrivals, PoissonArrivals, ServeLoop,
-                      ServeRequest, ServeStats, TenantSpec,
+from .serving import (ClosedLoopClients, DiurnalArrivals, PoissonArrivals,
+                      ServeLoop, ServeRequest, ServeStats, TenantSpec,
                       single_task_request)
 from .session import RunStats, SchedulerSession, percentiles
 from .simulator import (AcePolicy, LatsPolicy, OrchestratorPolicy,

@@ -59,11 +59,16 @@ and ``tests/test_session.py`` (delta vs. fresh recompile under churn):
 from __future__ import annotations
 
 import threading
+import weakref
 from typing import Optional, Sequence
 
 import numpy as np
 
 from .hwgraph import EdgeAttr, HWGraph, NodeKind, ProcessingUnit
+
+# bandwidth-overlay compaction threshold: fold the overlay back into a
+# solely-owned topology layer once this many distinct links are dirty
+_OVERLAY_COMPACT_DIRTY = 64
 
 
 class _RouteTopo:
@@ -80,7 +85,8 @@ class _RouteTopo:
     (:class:`_RouteTable`), and ``_invalidate_row`` only ever runs after
     a private topology copy."""
 
-    __slots__ = ("lat", "ibw", "routes", "built", "edge_ids", "fast")
+    __slots__ = ("lat", "ibw", "routes", "built", "edge_ids", "fast",
+                 "owners")
 
     def __init__(self, D: int) -> None:
         self.lat = np.full((D, D), np.inf)
@@ -95,6 +101,10 @@ class _RouteTopo:
         # shortest-path tree crosses).  Their concrete EdgeAttr route
         # lists materialize per pair on first route_edges() access.
         self.fast: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        # the _RouteTables currently sharing this layer (weak: dead
+        # snapshots drop out) — overlay compaction is legal exactly when
+        # one table is the sole surviving sharer
+        self.owners: "weakref.WeakSet" = weakref.WeakSet()
 
     def copy(self) -> "_RouteTopo":
         c = object.__new__(_RouteTopo)
@@ -104,6 +114,7 @@ class _RouteTopo:
         c.built = self.built.copy()
         c.edge_ids = set(self.edge_ids)
         c.fast = dict(self.fast)
+        c.owners = weakref.WeakSet()
         return c
 
 
@@ -128,12 +139,13 @@ class _RouteTable:
     :meth:`ibw_col`; there is deliberately no ``.ibw`` attribute, so a
     consumer reading the base matrix without the overlay fails loudly."""
 
-    __slots__ = ("topo", "over", "dirty")
+    __slots__ = ("topo", "over", "dirty", "__weakref__")
 
     def __init__(self, D: int) -> None:
         self.topo = _RouteTopo(D)
         self.over: dict[int, np.ndarray] = {}
         self.dirty: set[str] = set()
+        self.topo.owners.add(self)
 
     # -- topology-layer views (shared; see _RouteTopo) -------------------
     @property
@@ -180,6 +192,7 @@ class _RouteTable:
         c.topo = self.topo
         c.over = dict(self.over)
         c.dirty = set(self.dirty)
+        self.topo.owners.add(c)
         return c
 
     def copy(self) -> "_RouteTable":
@@ -192,7 +205,21 @@ class _RouteTable:
             c.topo.ibw[i, :] = row
         c.over = {}
         c.dirty = set()
+        c.topo.owners.add(c)
         return c
+
+    def compact(self) -> None:
+        """Fold the bandwidth overlay back into the (solely owned)
+        topology layer: ``over`` rows become the base ``ibw`` rows and
+        both shadows clear.  Semantics-preserving for this table —
+        ``ibw_row``/``ibw_col`` read identical values before and after —
+        and ONLY legal when ``len(topo.owners) == 1`` (any other sharer
+        would see the fold).  Long bandwidth-churn-heavy serving runs
+        call this to keep ``dirty``/``over`` bounded."""
+        for i, row in self.over.items():
+            self.topo.ibw[i, :] = row
+        self.over = {}
+        self.dirty = set()
 
 
 def _have_scipy() -> bool:
@@ -718,6 +745,15 @@ class CompiledHWGraph:
         g = self.graph
         names = set(edge_names)
         rt = self._rt
+        # overlay compaction (bounded-shadow invariant for long serving
+        # runs): once the accumulated dirty-link set is large and no other
+        # snapshot shares the topology layer, fold the overlay into it —
+        # the successor then starts from an empty overlay instead of
+        # dragging every link ever repriced
+        if (len(rt.dirty) >= _OVERLAY_COMPACT_DIRTY
+                and len(rt.topo.owners) == 1):
+            rt.compact()
+            g.route_overlay_compactions += 1
         c = self._clone()
         changed_ids = {id(e) for adj in g._adj.values() for _, e in adj
                        if e.name in names}

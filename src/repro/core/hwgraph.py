@@ -191,6 +191,9 @@ class HWGraph:
         # overlay copies (one per coalesced bandwidth delta batch)
         self.route_holder_copies = 0
         self.route_overlay_copies = 0
+        # overlay folds into a solely-owned topology layer (bounds the
+        # overlay dict on long bandwidth-volatile serving runs)
+        self.route_overlay_compactions = 0
 
     # -- construction ------------------------------------------------------
     def add_node(self, node: Node) -> Node:

@@ -149,10 +149,15 @@ class ActiveLedger:
         self._pu_dev: dict[str, str] = {}          # pu name -> device name
         self._dev_rows: Optional[dict[str, list[int]]] = None
         self._live_view: Optional[tuple] = None    # (comp id, version, view)
-        # fine-grained invalidation: adds bump only their device's version,
-        # prune/remove bump the epoch (batch contexts key views on these)
+        # fine-grained invalidation: adds, device-attributed kills and
+        # ``touch`` bump only their device's version; unattributable
+        # mutations bump the epoch hammer (batch contexts key views on
+        # these).  ``mut_log`` journals the device name of every
+        # attributed mutation in order — persistent scan states refresh
+        # exactly the suffix they have not seen yet.
         self.dev_epoch = 0
         self.dev_version: dict[str, int] = {}
+        self.mut_log: list[str] = []
 
     # -- bookkeeping -------------------------------------------------------
     def __len__(self) -> int:
@@ -199,6 +204,7 @@ class ActiveLedger:
             self.dev_epoch += 1
         else:
             self.dev_version[dev] = self.dev_version.get(dev, 0) + 1
+            self.mut_log.append(dev)
         if self._dev_rows is not None:
             if dev is None:
                 self._dev_rows = None
@@ -207,16 +213,38 @@ class ActiveLedger:
         return ActiveEntry(task=task, pu=pu, est_finish=est, factor=pred.factor)
 
     def _kill(self, rows: np.ndarray) -> None:
+        # attribute each kill to its device where possible so persistent
+        # scan states only re-check those devices; fall back to the epoch
+        # hammer when any row's PU has no known device
+        devs: Optional[list[str]] = []
         for i in rows:
+            pu = self._pus[i]
+            dev = self._pu_dev.get(pu) if devs is not None else None
+            if devs is not None:
+                if dev is None:
+                    devs = None
+                else:
+                    devs.append(dev)
             self._live[i] = False
-            self._count[self._pus[i]] -= 1
-            if not self._count[self._pus[i]]:
-                del self._count[self._pus[i]]
+            self._count[pu] -= 1
+            if not self._count[pu]:
+                del self._count[pu]
             self._tasks[i] = None
             self._dead += 1
         self.version += 1
-        self.dev_epoch += 1
-        self._dev_rows = None
+        if devs is None:
+            self.dev_epoch += 1
+            self._dev_rows = None
+        else:
+            killed = set(rows.tolist())
+            for dev in set(devs):
+                self.dev_version[dev] = self.dev_version.get(dev, 0) + 1
+                self.mut_log.append(dev)
+                if self._dev_rows is not None:
+                    old = self._dev_rows.get(dev)
+                    if old is not None:
+                        self._dev_rows[dev] = [i for i in old
+                                               if i not in killed]
         if self._dead > 32 and self._dead * 2 > self._n:
             self._compact()
 
@@ -230,6 +258,32 @@ class ActiveLedger:
         self._live = np.ones(len(keep), dtype=bool)
         self._n = len(keep)
         self._dead = 0
+        # row numbers changed; per-device row lists must be rebuilt (values
+        # read through the compacted arrays stay correct, so no epoch bump)
+        self._dev_rows = None
+
+    def touch(self, dev: str) -> None:
+        """Record an out-of-band state change on device ``dev`` (e.g. the
+        session charging scheduling overhead into a resident task's
+        release_time) so cached views and persistent scan states refresh
+        that device's rows."""
+        self.version += 1
+        self.dev_version[dev] = self.dev_version.get(dev, 0) + 1
+        self.mut_log.append(dev)
+        self._live_view = None
+
+    def occupied_devices(self, comp) -> set:
+        """Device names with at least one live ledger row — the rows whose
+        tenancy-wait / l.15 terms depend on ``now`` and must be re-checked
+        when a persistent scan state is reused at a later wall-clock."""
+        out = set()
+        dev_of = self._pu_dev
+        for pu in self._count:
+            dev = dev_of.get(pu)
+            if dev is None:
+                dev = dev_of[pu] = comp.device_name(pu)
+            out.add(dev)
+        return out
 
     def prune(self, now: float) -> None:
         if not self._n:
@@ -447,6 +501,11 @@ class ShardedLedger:
         self._pu_dev.update(comp._pu_device_name)
         self._dev_versions = _ShardDevVersions(self)
         self._merged: Optional[tuple] = None
+        # one shared mutation journal across shards: attributed mutations
+        # must stay globally ordered for persistent scan-state refreshes
+        self.mut_log: list[str] = []
+        for led in self.shards:
+            led.mut_log = self.mut_log
 
     # -- shard dispatch ----------------------------------------------------
     def shard_for(self, dev: str) -> ActiveLedger:
@@ -507,6 +566,16 @@ class ShardedLedger:
 
     def count(self, pu: str) -> int:
         return self._shard_for_pu(pu).count(pu)
+
+    def touch(self, dev: str) -> None:
+        self.shard_for(dev).touch(dev)
+        self._merged = None
+
+    def occupied_devices(self, comp) -> set:
+        out: set = set()
+        for s in self.shards:
+            out |= s.occupied_devices(comp)
+        return out
 
     def _fill_pu_idx(self, comp) -> None:
         for s in self.shards:
@@ -625,13 +694,27 @@ class _ScanState:
     signatures sharing a core (same kind/size/usage/compute attrs) share
     one state and one set of kernel calls."""
 
-    __slots__ = ("ok", "sa", "f", "wait", "epoch", "stamps", "log_pos")
+    __slots__ = ("ok", "sa", "f", "wait", "epoch", "stamps", "log_pos",
+                 "now", "refresh_log", "expiry")
 
     def __init__(self, n: int) -> None:
         self.ok = np.zeros(n, dtype=bool)
         self.sa = np.full(n, np.inf)
         self.f = np.ones(n)
         self.wait = np.zeros(n)
+        # per-device valid-until instant of the last splice: an occupied
+        # device whose constraint outputs are provably constant until a
+        # known flip time skips clock-move re-splices entirely
+        self.expiry: dict = {}
+        # wall-clock the columns were checked at: occupied devices'
+        # tenancy-wait / l.15 terms are now-dependent, so a later-wave
+        # reuse re-splices exactly those devices (empty devices are
+        # now-independent — A==0 skips both blocks in the fused scorer)
+        self.now = None
+        # journal of device names this state re-spliced (per-signature
+        # effective layers patch the union of the commit-log suffix and
+        # this log's suffix they have not seen)
+        self.refresh_log: list[str] = []
 
 
 class _Walk:
@@ -681,13 +764,35 @@ class _BatchContext:
         # canonical-pattern cache of single-device core checks (splices):
         # (core sig, canonical device state) -> (ok, sa, f, wait) columns
         self.splice_cache: dict = {}
-        # device name of every phase-2 commit, in order; scan states refresh
-        # exactly the suffix committed since they last looked
-        self.commit_log: list[str] = []
+        # slowdown-factor cache of single-device checks, keyed by view
+        # *identity* instead of content: (core sig, dev) -> (view, static,
+        # factors).  Factors are now-independent, so a clock-moved
+        # re-splice of an unchanged device skips the kernel (and both
+        # canonical-key constructions) and re-runs only the constraint
+        # block at the new instant
+        self.factor_cache: dict = {}
+        # the ledger's attributed-mutation journal (commits, retires,
+        # touches), aliased so scan states refresh exactly the suffix of
+        # mutations — in-batch commits *and* cross-wave session traffic —
+        # they have not seen yet
+        self.commit_log: list[str] = ledger.mut_log
         # teach the ledger every PU's device up front so commits bump only
         # their device's version (not the global epoch) — the fine-grained
         # signal the tracked scan states key their splices on
         ledger._pu_dev.update(comp._pu_device_name)
+
+    def rebase(self, comp) -> None:
+        """Adopt a bandwidth-only successor snapshot without dropping the
+        persistent walk state.  Only the comm-bearing caches go (comm
+        times, per-signature static scores and effective layers); the
+        core scan states, canonical splices, views and static cores are
+        bandwidth-independent (the caller has verified ``pu_alive`` /
+        route topology / NCR identity)."""
+        self.comp = comp
+        self._comm = {}
+        self._static = {}
+        self.eff_cache = {}
+        self.factor_cache = {}
 
     def _model_key(self, task: Task) -> tuple:
         hit = self._mkeys.get(id(task))
@@ -769,21 +874,22 @@ class _BatchContext:
 
     def view(self, dev: str) -> _LedgerView:
         led = self.ledger.shard_for(dev)
-        key = (dev, led.dev_epoch, led.dev_version.get(dev, 0))
-        v = self._views.get(key)
+        epoch = led.dev_epoch
+        ver = led.dev_version.get(dev, 0)
+        hit = self._views.get(dev)
+        if hit is not None and hit[0] == epoch and hit[1] == ver:
+            return hit[2]
+        v = None
+        if hit is not None and hit[0] == epoch and hit[1] == ver - 1:
+            # a device-version bump within one epoch whose row count grew
+            # by one is exactly one ledger add: extend the previous view
+            # by that row instead of re-gathering every column (any other
+            # shape — a kill, a touch — re-gathers, which also re-reads
+            # release times charged by the session between waves)
+            v = self._extend_view(hit[2], dev)
         if v is None:
-            prev = self._views.get((dev, key[1], key[2] - 1))
-            if prev is not None:
-                # a device-version bump within one epoch is exactly one
-                # ledger add: extend the previous view by that row instead
-                # of re-gathering every column.  Release times are frozen
-                # within one map_batch (overhead is charged by the session
-                # after the batch returns), so the copied rel column stays
-                # live-accurate for this context's lifetime
-                v = self._extend_view(prev, dev)
-            if v is None:
-                v = led.device_view(self.comp, dev)
-            self._views[key] = v
+            v = led.device_view(self.comp, dev)
+        self._views[dev] = (epoch, ver, v)
         return v
 
     def _extend_view(self, prev: _LedgerView,
@@ -877,6 +983,9 @@ class Orchestrator:
         self._plan_cache: Optional[tuple] = None   # (comp, _ScanPlan)
         self._child_cache: Optional[tuple] = None  # (comp, _ChildPlan)
         self._sharded_hw: Optional["ShardedHWGraph"] = None  # root only
+        # session-resident batch context (the serving fast path): survives
+        # map_batch calls so steady-state waves pay only dirty-device work
+        self._resident_ctx: Optional["_BatchContext"] = None
 
     # -- hierarchy ----------------------------------------------------------
     def add_child(self, child: "Orchestrator") -> "Orchestrator":
@@ -888,6 +997,7 @@ class Orchestrator:
             node._subtree_pus_cache = None
             node._plan_cache = None
             node._child_cache = None
+            node._resident_ctx = None
             node = node.parent
         return child
 
@@ -991,8 +1101,6 @@ class Orchestrator:
         # drop the cross-batch global view so l.15 reads the charged values
         self.ledger._live_view = None
         comp = self.graph.compiled()
-        ctx = (_BatchContext(self.graph, comp, self.traverser, self.ledger)
-               if len(tasks) > 1 else None)
         sd = self.traverser.slowdown
         noisy = bool(getattr(sd, "_noisy", lambda: False)())
         # fused wave-batched walk: lowers Alg. 1's recursion to scan plans
@@ -1000,10 +1108,22 @@ class Orchestrator:
         # checks of each escalation depth into one multi-newcomer kernel
         # call.  Gated to the deterministic batch path: noisy models need
         # the scalar rng stream order and first_fit the early-return walk.
-        fast = (ctx is not None and not noisy
-                and self.config.objective != "first_fit"
-                and hasattr(sd, "factors_same_device_multi")
-                and os.environ.get("REPRO_FUSED_WALK", "1") != "0")
+        fusable = (not noisy and self.config.objective != "first_fit"
+                   and hasattr(sd, "factors_same_device_multi")
+                   and os.environ.get("REPRO_FUSED_WALK", "1") != "0")
+        if fusable and os.environ.get("REPRO_SERVE_FASTPATH", "1") != "0":
+            # serving fast path: a session-resident context keeps the
+            # prepared walk state across waves, and single-task waves run
+            # the fused walk too (only dirty devices are re-checked).
+            # REPRO_SERVE_FASTPATH=0 restores the per-batch cold context
+            # (and the object walk for single-task waves) as the parity
+            # oracle.
+            ctx = self._session_context(comp)
+        else:
+            ctx = (_BatchContext(self.graph, comp, self.traverser,
+                                 self.ledger)
+                   if len(tasks) > 1 else None)
+        fast = fusable and ctx is not None
         # phase 1: optimistic walks against the frozen ledger, deduped by
         # task signature (identical tasks walk once; commits are replayed
         # per task in phase 2)
@@ -1061,14 +1181,57 @@ class Orchestrator:
                 res = (orc._map_once_fast(t, now, ctx, None) if fast
                        else orc._map_once(t, now, ctx, set()))
             if res is not None and commit:
+                # ledger.add journals the commit's device into mut_log —
+                # the log every batch context aliases as its commit_log
                 self.ledger.add(t, res.pu, res.prediction, now)
                 t.assigned_pu = res.pu
-                dev = comp.device_name(res.pu)
-                dirty.add(dev)
-                if ctx is not None:
-                    ctx.commit_log.append(dev)
+                dirty.add(comp.device_name(res.pu))
             out.append(res)
         return out
+
+    def _session_context(self, comp) -> _BatchContext:
+        """The session-resident :class:`_BatchContext` for ``comp``,
+        reused across ``map_batch`` calls (the serving fast path).
+
+        Reuse rules: same graph and ledger, and either the same snapshot
+        or a bandwidth-only successor (``pu_alive``, route topology, PU
+        index and the NCR/memory arrays all identity-equal — then the
+        core scan states, canonical splices and ledger views stay valid
+        and only the comm-bearing caches are rebuilt).  Anything else —
+        device death/revival, NCR refresh, a swapped ledger — drops the
+        context and the next wave pays one cold build."""
+        ctx = self._resident_ctx
+        led = self.ledger
+        if ctx is not None and (ctx.ledger is not led
+                                or ctx.graph is not self.graph
+                                or len(led.mut_log) > 50_000):
+            ctx = None
+        if ctx is not None and ctx.comp is not comp:
+            old = ctx.comp
+            if (comp.pu_alive is old.pu_alive
+                    and getattr(comp, "_rt", None) is not None
+                    and getattr(old, "_rt", None) is not None
+                    and comp._rt.topo is old._rt.topo
+                    and comp.pu_index is old.pu_index
+                    and comp.ncr_rclass is old.ncr_rclass
+                    and comp.mem_cap is old.mem_cap):
+                ctx.rebase(comp)
+            else:
+                ctx = None
+        if ctx is None:
+            if len(led.mut_log) > 50_000 and self._resident_ctx is not None:
+                # no live context references the journal any more; reset
+                # it in place (shards alias the same list)
+                del led.mut_log[:]
+            ctx = _BatchContext(self.graph, comp, self.traverser, led)
+            self._resident_ctx = ctx
+        elif len(ctx._sigs) > 8192:
+            # id(task)-keyed memo caches accrete one entry per request
+            # over a serving session; they are pure memos, safe to drop
+            ctx._sigs = {}
+            ctx._cores = {}
+            ctx._mkeys = {}
+        return ctx
 
     # ``map_task`` was deprecated in PR 3 and removed in PR 8: map
     # one-element frontiers with ``map_batch([task], now)[0]`` or drive
@@ -1164,6 +1327,12 @@ class Orchestrator:
         cp.bounds = np.asarray(bounds, dtype=np.int64)
         cp.hc = np.asarray(hc)
         cp.hop_prefix = prefix
+        # persistent scan states key on id(plan.pus): when a snapshot swap
+        # rebuilds this plan with the same candidate list (the common case
+        # — bandwidth churn, ledger-only waves), keep the previous list
+        # object so those states and the per-list memo caches survive
+        if cache is not None and cache[1].pus == cp.pus:
+            cp.pus = cache[1].pus
         self._child_cache = (comp, cp)
         return cp
 
@@ -1184,39 +1353,70 @@ class Orchestrator:
         static = ctx.static_core(self, task, pu_names)
         cols = static.cols
         ck = None
+        fused = None
+        fkey = None
+        view = None
         if len(cols) and static.single_dev is not None:
             sd = self.traverser.slowdown
-            canon = getattr(sd, "_canon_key", None)
-            if canon is not None:
-                view = ctx.view(static.single_dev)
-                key, _ = canon(ctx.comp, task, static.cand_idx,
-                               static.cand_dev, view.P, view.upu, view.Ma,
-                               view.uid, view.astart, view.na)
-                if key is not None:
-                    ck = (ctx.core_sig(task), key, n, now,
-                          cols.tobytes(), static.sa.tobytes(),
-                          static.maxten.tobytes(), view.est.tobytes(),
-                          view.fac.tobytes(), view.dl.tobytes(),
-                          view.rel.tobytes())
-                    hit = ctx.splice_cache.get(ck)
-                    if hit is not None:
-                        return tuple(a.copy() for a in hit)
+            view = ctx.view(static.single_dev)
+            fkey = (ctx.core_sig(task), static.single_dev)
+            fent = ctx.factor_cache.get(fkey)
+            if fent is not None and fent[0] is view and fent[1] is static:
+                # identity hit: the device view object survives exactly
+                # while (epoch, version) are unchanged, so the factors —
+                # which never read the clock — are still exact.  Skip the
+                # kernel *and* both canonical-key constructions; only the
+                # constraint block below re-reads ``now``
+                fused = (fent[2], view)
+            else:
+                canon = getattr(sd, "_canon_key", None)
+                if canon is not None:
+                    key, _ = canon(ctx.comp, task, static.cand_idx,
+                                   static.cand_dev, view.P, view.upu,
+                                   view.Ma, view.uid, view.astart, view.na)
+                    if key is not None:
+                        ck = (ctx.core_sig(task), key, n, now,
+                              cols.tobytes(), static.sa.tobytes(),
+                              static.maxten.tobytes(), view.est.tobytes(),
+                              view.fac.tobytes(), view.dl.tobytes(),
+                              view.rel.tobytes())
+                        hit = ctx.splice_cache.get(ck)
+                        if hit is not None:
+                            return (hit[0].copy(), hit[1].copy(),
+                                    hit[2].copy(), hit[3].copy(), hit[4])
         ok = np.zeros(n, dtype=bool)
         sa = np.full(n, np.inf)
         f = np.ones(n)
         wait = np.zeros(n)
+        expiry = np.inf
         if len(cols):
-            o, s_, f_, w_ = self._score_fused_arrays(
+            if fused is None and fkey is not None:
+                sd = self.traverser.slowdown
+                fac = sd.factors_same_device(
+                    ctx.comp, task, static.cand_idx, static.cand_dev,
+                    view.P, view.upu, view.Ma, view.uid, view.Da,
+                    view.astart, view.na)
+                fcache = ctx.factor_cache
+                fcache[fkey] = (view, static, fac)
+                if len(fcache) > 4096:
+                    fcache.pop(next(iter(fcache)), None)
+                fused = (fac, view)
+            o, s_, f_, w_, expiry = self._score_fused_arrays(
                 task, static, now, with_constraints=True, ctx=ctx,
-                split_comm=True)
+                split_comm=True, fused=fused)
             ok[cols] = o
             sa[cols] = s_
             f[cols] = f_
             wait[cols] = w_
         if ck is not None:
-            ctx.splice_cache[ck] = (ok.copy(), sa.copy(), f.copy(),
-                                    wait.copy())
-        return ok, sa, f, wait
+            cache = ctx.splice_cache
+            cache[ck] = (ok.copy(), sa.copy(), f.copy(), wait.copy(), expiry)
+            if len(cache) > 512:
+                # keys embed the check instant, so a persistent serving
+                # context would otherwise accrete one generation of
+                # entries per wave — FIFO like eff_cache
+                cache.pop(next(iter(cache)), None)
+        return ok, sa, f, wait, expiry
 
     def _tracked_checks(self, task: Task, plan, now: float,
                         ctx: "_BatchContext") -> _ScanState:
@@ -1232,35 +1432,52 @@ class Orchestrator:
         led = self.ledger
         key = (ctx.core_sig(task), id(plan.pus))
         st = ctx.scan_states.get(key)
-        if st is not None and st.epoch != led.dev_epoch:
+        if st is not None and (st.epoch != led.dev_epoch
+                               or len(st.refresh_log) > 65536):
             st = None
         if st is None:
             st = _ScanState(len(plan.pus))
-            st.ok, st.sa, st.f, st.wait = self._check_arrays(
+            st.ok, st.sa, st.f, st.wait, _ = self._check_arrays(
                 task, plan.pus, now, ctx)
             st.epoch = led.dev_epoch
             st.stamps = {d: led.dev_version.get(d, 0) for d in plan.devs}
             st.log_pos = len(ctx.commit_log)
+            st.now = now
             ctx.scan_states[key] = st
             return st
         log = ctx.commit_log
+        refresh: set = set()
         if st.log_pos < len(log):
             for dev in set(log[st.log_pos:]):
-                rng = plan.dev_ranges.get(dev)
-                if rng is None:
-                    continue
-                v = led.dev_version.get(dev, 0)
-                if st.stamps.get(dev) == v:
-                    continue
-                lo, hi = rng
-                o, s_, f_, w_ = self._check_arrays(
-                    task, plan.dev_sublists[dev], now, ctx)
-                st.ok[lo:hi] = o
-                st.sa[lo:hi] = s_
-                st.f[lo:hi] = f_
-                st.wait[lo:hi] = w_
-                st.stamps[dev] = v
+                if dev in plan.dev_ranges \
+                        and st.stamps.get(dev) != led.dev_version.get(dev, 0):
+                    refresh.add(dev)
             st.log_pos = len(log)
+        if st.now != now:
+            # the clock moved since the columns were checked: occupied
+            # devices' tenancy-wait and l.15 terms read ``now``, so their
+            # segments must be re-spliced even with unchanged versions —
+            # unless the last splice proved its outputs constant until a
+            # known flip instant (``st.expiry``) that is still ahead
+            # (empty devices score now-independently and keep)
+            for dev in led.occupied_devices(ctx.comp):
+                if dev in plan.dev_ranges and dev not in refresh:
+                    e = st.expiry.get(dev)
+                    if e is None or e <= now:
+                        refresh.add(dev)
+            st.now = now
+        for dev in refresh:
+            lo, hi = plan.dev_ranges[dev]
+            o, s_, f_, w_, e = self._check_arrays(
+                task, plan.dev_sublists[dev], now, ctx)
+            st.ok[lo:hi] = o
+            st.sa[lo:hi] = s_
+            st.f[lo:hi] = f_
+            st.wait[lo:hi] = w_
+            st.stamps[dev] = led.dev_version.get(dev, 0)
+            st.expiry[dev] = e
+        if refresh:
+            st.refresh_log.extend(refresh)
         return st
 
     def _effective(self, task: Task, st: _ScanState, plan, now: float,
@@ -1280,12 +1497,16 @@ class Orchestrator:
         cols = static.cols
         dl = task.deadline
         log = ctx.commit_log
+        rlog = st.refresh_log
         ck = (ctx.task_sig(task), id(plan.pus))
         ent = ctx.eff_cache.get(ck)
         if ent is not None and ent[0] is st:
-            pos, ok, cm, key = ent[1], ent[2], ent[3], ent[4]
-            if pos < len(log):
-                for dev in set(log[pos:]):
+            pos, rpos, ok, cm, key = ent[1], ent[2], ent[3], ent[4], ent[5]
+            if pos < len(log) or rpos < len(rlog):
+                # union of the commit suffix and the scan state's own
+                # re-splice suffix (clock-moved occupied devices) — both
+                # change the wait/sa/f inputs this layer is derived from
+                for dev in set(log[pos:]).union(rlog[rpos:]):
                     rng = plan.dev_ranges.get(dev)
                     if rng is None:
                         continue
@@ -1301,6 +1522,7 @@ class Orchestrator:
                         o = o & ~(key[lo:hi] > dl)
                     ok[lo:hi] = o
                 ent[1] = len(log)
+                ent[2] = len(rlog)
             return ok, cm, key
         cm = np.zeros(len(plan.pus))
         if len(cols):
@@ -1311,7 +1533,7 @@ class Orchestrator:
         else:
             ok = st.ok.copy()          # the cache owns a mutable copy
         cache = ctx.eff_cache
-        cache[ck] = [st, len(log), ok, cm, key]
+        cache[ck] = [st, len(log), len(rlog), ok, cm, key]
         if len(cache) > 24:
             # pop-with-default: group threads of the sharded walk may race
             # on evicting the same oldest entry
@@ -1461,6 +1683,7 @@ class Orchestrator:
             st.epoch = led.dev_epoch
             st.stamps = {d: led.dev_version.get(d, 0) for d in plan.devs}
             st.log_pos = len(ctx.commit_log)
+            st.now = now
             ctx.scan_states[key] = st
             if not len(static.cols):
                 continue
@@ -1476,7 +1699,7 @@ class Orchestrator:
             return
         outs = sd.factors_same_device_multi(comp, items)
         for (orc, task, static, view, st), fused in zip(metas, outs):
-            o, s_, f_, w_ = orc._score_fused_arrays(
+            o, s_, f_, w_, e = orc._score_fused_arrays(
                 task, static, now, with_constraints=True, ctx=ctx,
                 fused=(fused, view), split_comm=True)
             cols = static.cols
@@ -1484,6 +1707,8 @@ class Orchestrator:
             st.sa[cols] = s_
             st.f[cols] = f_
             st.wait[cols] = w_
+            if static.single_dev is not None:
+                st.expiry[static.single_dev] = e
 
     def _dedup_walks(self, tasks: list, route: bool,
                      ) -> tuple[dict, list["_Walk"]]:
@@ -2069,6 +2294,7 @@ class Orchestrator:
         wait = None
         ok = np.ones(len(cols), dtype=bool)
         C = len(cand_idx)
+        expiry = np.inf
         if with_constraints and A and C:
             # tenancy cap: queueing wait behind the earliest finisher.
             # Count actives per *candidate position* (not per fleet PU):
@@ -2086,21 +2312,52 @@ class Orchestrator:
                 np.minimum.at(minest, cpos, view.est[on_cand])
                 wait = np.where(
                     waits, np.maximum(0.0, minest - now), 0.0)
+                if split_comm and bool((minest[waits] > now).any()):
+                    # a positive queueing wait decays with every clock
+                    # tick: this check is stale the instant ``now`` moves
+                    expiry = now
             # Alg. 1 l.15 over the same-device (candidate, active) pairs
             if len(ci):
-                rem = (np.maximum(0.0, view.est[ai] - now)
-                       / np.maximum(view.fac[ai], 1e-12))
+                est_a = view.est[ai]
+                fac_a = np.maximum(view.fac[ai], 1e-12)
+                rem = np.maximum(0.0, est_a - now) / fac_a
                 fin = now + rem * act_pf
-                viol = (np.isfinite(view.dl[ai])
-                        & (fin - view.rel[ai] > view.dl[ai] * (1 + 1e-9)))
+                dlp = view.dl[ai] * (1 + 1e-9)
+                viol = np.isfinite(dlp) & (fin - view.rel[ai] > dlp)
                 ok[ci[viol]] = False
+                if split_comm:
+                    # earliest future instant any pair's verdict can flip.
+                    # fin(t) is piecewise linear and continuous in t
+                    # (slope 1-r before est, slope 1 after, r = pf/fac),
+                    # so each pair's violation state changes only at a
+                    # root of fin(t) - rel - dl': t1 inside [now, est) or
+                    # t2 = rel + dl' inside [max(now, est), inf)
+                    fine = np.isfinite(dlp)
+                    r = act_pf / fac_a
+                    rel_a = view.rel[ai]
+                    with np.errstate(divide="ignore", invalid="ignore"):
+                        t1 = (rel_a + dlp - est_a * r) / (1.0 - r)
+                    flips = np.where(
+                        fine & (r != 1.0) & (t1 >= now) & (t1 < est_a),
+                        t1, np.inf)
+                    t2 = rel_a + dlp
+                    flips = np.minimum(flips, np.where(
+                        fine & (t2 >= now) & (t2 >= est_a), t2, np.inf))
+                    tmin = float(flips.min()) if len(flips) else np.inf
+                    if tmin < expiry:
+                        # pull a hair early: the analytic root and the
+                        # float-evaluated predicate may disagree by ulps,
+                        # and an early re-splice is merely redundant
+                        expiry = tmin - max(abs(tmin), 1.0) * 1e-9
         new_f = np.asarray(new_f, dtype=np.float64)
         if split_comm:
             # origin-independent core: the comm column is replaced by the
             # additive tenancy wait and the (comm-dependent) deadline mask
-            # is left to the per-signature layer (``_effective``)
+            # is left to the per-signature layer (``_effective``); the
+            # fifth column is the valid-until instant — outputs are exact
+            # for any check time in [now, expiry)
             return ok, static.sa, new_f, (wait if wait is not None
-                                          else np.zeros(len(cols)))
+                                          else np.zeros(len(cols))), expiry
         comm = static.comm if wait is None else static.comm + wait
         comm = (np.asarray(comm, dtype=np.float64)
                 if np.ndim(comm) else np.full(len(cols), float(comm)))

@@ -40,12 +40,13 @@ from __future__ import annotations
 
 import heapq
 import time as _time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence, Union
 
 import numpy as np
 
-from ..serve.admission import AdmissionController, Decision, Verdict
+from ..serve.admission import (AdaptiveWindow, AdmissionController, Decision,
+                               Verdict)
 from .hwgraph import HWGraph
 from .orchestrator import Orchestrator
 from .session import Policy, SchedulerSession, percentiles
@@ -133,7 +134,51 @@ class DiurnalArrivals:
         return arr[arr < horizon]
 
 
-ArrivalProcess = Union[PoissonArrivals, DiurnalArrivals]
+class ClosedLoopClients:
+    """Closed-loop population of ``clients`` users (ROADMAP 1's
+    closed-loop depth): each client issues one request, waits for its
+    completion (or terminal rejection), *thinks* for an exponential
+    ``think_mean`` interval, then issues the next — so offered load
+    self-regulates with system latency instead of piling up open-loop.
+
+    Deterministic per ``(clients, think_mean, seed)``: every client owns
+    its own ``default_rng([seed, k])`` substream, consumed in that
+    client's request order (which a seeded serving run fixes), and
+    :meth:`initial_arrivals` re-seeds all substreams — two loops over the
+    same spec replay byte-identically.
+    """
+
+    def __init__(self, clients: int, think_mean: float,
+                 seed: int = 0) -> None:
+        if clients <= 0:
+            raise ValueError(f"clients must be positive, got {clients}")
+        if think_mean <= 0:
+            raise ValueError(
+                f"think_mean must be positive, got {think_mean}")
+        self.clients = int(clients)
+        self.think_mean = float(think_mean)
+        self.seed = int(seed)
+        self._rngs: list = []
+
+    def initial_arrivals(self, horizon: float) -> list[tuple[float, int]]:
+        """``(t, client)`` first-request instants in ``[0, horizon)``, at
+        most one per client (an initial think delay desynchronizes the
+        population).  Resets every client substream."""
+        self._rngs = [np.random.default_rng([self.seed, k])
+                      for k in range(self.clients)]
+        out = []
+        for k, rng in enumerate(self._rngs):
+            t = float(rng.exponential(self.think_mean))
+            if t < horizon:
+                out.append((t, k))
+        return out
+
+    def think(self, client: int) -> float:
+        """Next think-time draw from ``client``'s substream."""
+        return float(self._rngs[client].exponential(self.think_mean))
+
+
+ArrivalProcess = Union[PoissonArrivals, DiurnalArrivals, ClosedLoopClients]
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +233,7 @@ class ServeRequest:
     reject_reason: str = ""
     remaining: int = 0             # unfinished tasks (accepted requests)
     finish: float = float("nan")
+    client: int = -1               # closed-loop client ordinal (-1: open)
 
     @property
     def latency(self) -> float:
@@ -214,6 +260,17 @@ class ServeStats:
     mapped_tasks: int = 0
     engine_opens: int = 0          # full TimelineEngine builds (target: 1)
     deferrals: int = 0
+    # wall seconds per loop phase (advance / sync / map / admit) and the
+    # admission-wave sizes, in wave order — where the serving wall went
+    phase_wall: dict[str, float] = field(default_factory=dict)
+    wave_sizes: list[int] = field(default_factory=list)
+
+    def wave_size_hist(self) -> dict[int, int]:
+        """Histogram of admission-wave sizes (size -> wave count)."""
+        out: dict[int, int] = {}
+        for n in self.wave_sizes:
+            out[n] = out.get(n, 0) + 1
+        return out
 
     # -- request partitions -------------------------------------------------
     @property
@@ -318,7 +375,12 @@ class ServeLoop:
     the whole run — ``stats.engine_opens == 1`` is the zero-rebuild
     guarantee the benchmark asserts.  ``batch_window > 0`` coalesces
     arrivals within that many seconds into one admission wave (larger
-    map_batch calls, slightly staler occupancy at admission).
+    map_batch calls, slightly staler occupancy at admission); an
+    :class:`~..serve.admission.AdaptiveWindow` widens that window with
+    queue depth / projected slowdown and collapses to per-arrival
+    admission when idle.  Closed-loop tenants
+    (:class:`ClosedLoopClients`) issue each client's next request on
+    completion; open- and closed-loop tenants mix freely.
     """
 
     def __init__(self, graph: HWGraph, policy: Policy,
@@ -327,14 +389,16 @@ class ServeLoop:
                  admission: Optional[AdmissionController] = None,
                  horizon: float = 1.0,
                  charge_overhead: bool = True,
-                 batch_window: float = 0.0,
+                 batch_window: Union[float, AdaptiveWindow] = 0.0,
                  interventions: Sequence[tuple[float, Callable[[], Any]]] = (),
                  ) -> None:
         self.tenants = list(tenants)
         self.admission = admission if admission is not None \
             else AdmissionController()
         self.horizon = float(horizon)
-        self.batch_window = float(batch_window)
+        self.batch_window = batch_window \
+            if isinstance(batch_window, AdaptiveWindow) \
+            else float(batch_window)
         self.session = SchedulerSession(graph, policy, truth=truth,
                                         charge_overhead=charge_overhead)
         self.engine = self.session.open_timeline(interventions)
@@ -342,6 +406,31 @@ class ServeLoop:
         self.deferrals = 0
         self._inflight: dict[str, int] = {}
         self._by_uid: dict[int, ServeRequest] = {}   # pending task -> req
+        self._events: list[tuple[float, int, int, Any]] = []
+        self._rid_next: list[int] = []     # per-tenant arrival counters
+        self._ti_of = {s.name: i for i, s in enumerate(self.tenants)}
+        self._last_proj = 0.0              # last wave's worst proj/deadline
+        self.phase_wall: dict[str, float] = {
+            "advance": 0.0, "sync": 0.0, "map": 0.0, "admit": 0.0}
+        self.wave_sizes: list[int] = []
+
+    def _push_arrival(self, ti: int, t: float, client: int) -> None:
+        """Mint the next rid for tenant ``ti`` and enqueue a kind-0
+        arrival at ``t`` (closed-loop follow-ups reuse the same path as
+        pre-generated open-loop arrivals)."""
+        rid = self._rid_next[ti] * len(self.tenants) + ti
+        self._rid_next[ti] += 1
+        heapq.heappush(self._events, (t, 0, rid, (ti, client)))
+
+    def _issue_next(self, req: ServeRequest, at: float) -> None:
+        """Closed-loop continuation: ``req``'s client thinks, then issues
+        its next request (dropped past the horizon)."""
+        if req.client < 0:
+            return
+        ti = self._ti_of[req.tenant]
+        t = at + self.tenants[ti].arrivals.think(req.client)
+        if t < self.horizon:
+            self._push_arrival(ti, t, req.client)
 
     # -- internals ----------------------------------------------------------
     def _sync_completions(self) -> None:
@@ -364,8 +453,10 @@ class ServeLoop:
                 req.finish = max(self.engine.finish_of(x.uid)
                                  for x in req.tasks)
                 self._inflight[req.tenant] -= 1
+                self._issue_next(req, req.finish)
 
-    def _refuse(self, req: ServeRequest, d: Decision, events: list) -> None:
+    def _refuse(self, req: ServeRequest, d: Decision, events: list,
+                now: float) -> None:
         if d.verdict is Verdict.DEFER:
             req.defers += 1
             self.deferrals += 1
@@ -375,6 +466,9 @@ class ServeLoop:
         else:
             req.verdict = "rejected"
             req.reject_reason = d.reason
+            # a terminal reject ends the closed-loop client's wait too —
+            # it thinks, then tries again with a fresh request
+            self._issue_next(req, now)
 
     def _admit_wave(self, now: float, wave: list[ServeRequest],
                     events: list) -> None:
@@ -385,50 +479,96 @@ class ServeLoop:
             if d is None:
                 live.append(req)
             else:
-                self._refuse(req, d, events)
+                self._refuse(req, d, events, now)
         if not live:
             return
         for req in live:
             self.session.submit(req.graph)
+        w0 = _time.perf_counter()
         results = self.session.map_pending(fallback=False)
+        self.phase_wall["map"] += _time.perf_counter() - w0
+        proj = 0.0
         for req in live:
-            d = adm.post_admit(req, [results.get(t.uid) for t in req.tasks],
-                               now)
+            rs = [results.get(t.uid) for t in req.tasks]
+            d = adm.post_admit(req, rs, now)
             if d.verdict is Verdict.ACCEPT:
                 req.verdict = "accepted"
                 req.remaining = len(req.tasks)
-                for t in req.tasks:
+                for t, r in zip(req.tasks, rs):
                     self._by_uid[t.uid] = req
+                    if t.deadline:
+                        proj = max(proj, r.prediction.total / t.deadline)
                 self._inflight[req.tenant] = \
                     self._inflight.get(req.tenant, 0) + 1
                 self.session.inject(req.tasks)
             else:
                 for t in req.tasks:
                     self.session.withdraw(t)
-                self._refuse(req, d, events)
+                self._refuse(req, d, events, now)
+        # the adaptive window's slowdown-pressure input: this wave's worst
+        # projected completion / deadline ratio (0.0 when nothing carried
+        # a deadline — depth pressure still applies)
+        self._last_proj = proj
 
     # -- the run ------------------------------------------------------------
     def run(self) -> ServeStats:
         wall0 = _time.perf_counter()
+        pw = self.phase_wall
         # event tuples: (t, kind, rid, payload) — kind 0 = fresh arrival
-        # (payload: tenant index), kind 1 = deferred retry (payload: the
-        # request).  (t, kind, rid) is unique per tenant-batch push below,
-        # so heap ordering never compares payloads.
-        events: list[tuple[float, int, int, Any]] = []
+        # (payload: (tenant index, client)), kind 1 = deferred retry
+        # (payload: the request).  (t, kind, rid) is unique per push, so
+        # heap ordering never compares payloads.
+        events = self._events
+        self._rid_next = [0] * len(self.tenants)
         for ti, spec in enumerate(self.tenants):
-            for k, t in enumerate(spec.arrivals.times(self.horizon).tolist()):
-                events.append((t, 0, k * len(self.tenants) + ti, ti))
+            arr = spec.arrivals
+            if hasattr(arr, "think"):          # closed-loop population
+                first = arr.initial_arrivals(self.horizon)
+                for k, (t, client) in enumerate(first):
+                    events.append((t, 0, k * len(self.tenants) + ti,
+                                   (ti, client)))
+                self._rid_next[ti] = len(first)
+            else:
+                times = arr.times(self.horizon).tolist()
+                for k, t in enumerate(times):
+                    events.append((t, 0, k * len(self.tenants) + ti,
+                                   (ti, -1)))
+                self._rid_next[ti] = len(times)
         heapq.heapify(events)
-        window = self.batch_window
-        while events:
+        bw = self.batch_window
+        adaptive = isinstance(bw, AdaptiveWindow)
+        while True:
+            target = (float(np.nextafter(events[0][0], -np.inf))
+                      if events else np.inf)
+            tn = self.engine.next_event_time()
+            if tn <= target and tn != np.inf:
+                # engine work due before the next admission instant:
+                # drain that batch and reconcile — a completion may spawn
+                # a closed-loop arrival ahead of the current heap head,
+                # so re-read the target each step.  (When nothing is due,
+                # the advance call — which would only park the clock —
+                # is skipped entirely: the idle fast path.)
+                w0 = _time.perf_counter()
+                self.engine.advance(tn)
+                w1 = _time.perf_counter()
+                self._sync_completions()
+                w2 = _time.perf_counter()
+                pw["advance"] += w1 - w0
+                pw["sync"] += w2 - w1
+                continue
+            if not events:
+                break
             t0 = events[0][0]
             now = t0
+            window = bw.window(sum(self._inflight.values()),
+                               self._last_proj) if adaptive else bw
             wave: list[ServeRequest] = []
             while events and events[0][0] <= t0 + window:
                 t, kind, rid, payload = heapq.heappop(events)
                 now = t
                 if kind == 0:
-                    spec = self.tenants[payload]
+                    ti, client = payload
+                    spec = self.tenants[ti]
                     g = spec.make_request(rid // len(self.tenants), t)
                     tasks = list(g)
                     for task in tasks:
@@ -437,25 +577,33 @@ class ServeLoop:
                     req = ServeRequest(tenant=spec.name, rid=rid,
                                        arrival=t, graph=g, tasks=tasks,
                                        sla=spec.sla,
-                                       max_inflight=spec.max_inflight)
+                                       max_inflight=spec.max_inflight,
+                                       client=client)
                     self.requests.append(req)
                 else:
                     req = payload
                 wave.append(req)
-            # admit at the arrival instant: the engine parks just *before*
-            # the wave's earliest arrival, so injected releases are in the
-            # heap when the clock reaches them — same event order as a
-            # one-shot run (with a window, occupancy is as of t0, slightly
-            # stale for the later arrivals it coalesced)
-            self.engine.advance(np.nextafter(t0, -np.inf))
+            # admit at the arrival instant: every engine event strictly
+            # before the wave's earliest arrival has drained above, so
+            # injected releases enter the heap ahead of the clock — same
+            # event order as a one-shot run (with a window, occupancy is
+            # as of t0, slightly stale for the later arrivals it
+            # coalesced)
+            w0 = _time.perf_counter()
             self._sync_completions()
+            w1 = _time.perf_counter()
+            m0 = pw["map"]
             self._admit_wave(now, wave, events)
-        self.engine.advance()
-        self._sync_completions()
+            w2 = _time.perf_counter()
+            pw["sync"] += w1 - w0
+            pw["admit"] += (w2 - w1) - (pw["map"] - m0)
+            self.wave_sizes.append(len(wave))
         wall = _time.perf_counter() - wall0
         return ServeStats(requests=list(self.requests),
                           horizon=self.horizon, wall_s=wall,
                           n_events=self.engine.n_events,
                           mapped_tasks=self.engine.n,
                           engine_opens=self.session.engine_opens,
-                          deferrals=self.deferrals)
+                          deferrals=self.deferrals,
+                          phase_wall=dict(pw),
+                          wave_sizes=list(self.wave_sizes))

@@ -185,6 +185,10 @@ class SchedulerSession:
             policy.prepare(graph.compiled())
         self._cfg = TaskGraph("session")
         self._mapped: set[int] = set()
+        # submitted-but-unmapped tasks: the wave loop scans this instead
+        # of the whole (ever-growing) session CFG, so a serving session's
+        # per-wave mapping cost tracks the wave size, not the history
+        self._pending: list[Task] = []
         self.results: dict[int, Optional[MapResult]] = {}
         self.mapping: dict[int, str] = {}
         self.unmapped: list[int] = []
@@ -202,9 +206,11 @@ class SchedulerSession:
                 self._cfg.tasks.append(t)
                 self._cfg._succ.setdefault(t.uid, []).extend(work.succs(t))
                 self._cfg._pred.setdefault(t.uid, []).extend(work.preds(t))
+                self._pending.append(t)
         else:
             for t in work:
                 self._cfg.add(t)
+                self._pending.append(t)
         return self
 
     @property
@@ -219,8 +225,9 @@ class SchedulerSession:
         release instant.  Sequential mode: singleton waves in strict
         (release, uid) order with no readiness gating (seed semantics).
         Release times are read before any overhead is charged."""
-        pending = sorted((t for t in self._cfg if t.uid not in self._mapped),
-                         key=lambda t: (t.release_time, t.uid))
+        still = [t for t in self._pending if t.uid not in self._mapped]
+        self._pending = still
+        pending = sorted(still, key=lambda t: (t.release_time, t.uid))
         if not self.frontier:
             for t in pending:
                 yield t.release_time, [t]
@@ -287,8 +294,15 @@ class SchedulerSession:
                 self.mapping[t.uid] = res.pu
                 out[t.uid] = res
                 self.results[t.uid] = res
-                if self.charge_overhead:
+                if self.charge_overhead and res.overhead:
+                    # a release-time change on a ledger-resident row: tell
+                    # the ledger so persistent walk state re-reads it
                     t.release_time += res.overhead
+                    pol = self.policy
+                    if isinstance(pol, Orchestrator):
+                        touch = getattr(pol.ledger, "touch", None)
+                        if touch is not None:
+                            touch(comp.device_name(res.pu))
         return out
 
     def withdraw(self, task: Task) -> None:
@@ -303,6 +317,7 @@ class SchedulerSession:
         res = self.results.pop(task.uid, None)
         self.mapping.pop(task.uid, None)
         self._mapped.discard(task.uid)
+        self._pending = [t for t in self._pending if t.uid != task.uid]
         if task.uid in self.unmapped:
             self.unmapped.remove(task.uid)
         if res is not None:

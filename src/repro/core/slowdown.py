@@ -233,11 +233,32 @@ class DecoupledSlowdown:
         return min(u, cap) if cap is not None else u
 
     # -- per-snapshot model tables ----------------------------------------
+    @staticmethod
+    def _factor_state(comp) -> tuple:
+        """The snapshot columns the factor model actually reads.  Two
+        snapshots whose columns are the *same objects* (a bandwidth-only
+        ``apply_delta`` clone shares everything but the route table) are
+        kin: cached tables and canonical factors carry over verbatim."""
+        return (comp.rclass_names, comp.pu_class_kind,
+                getattr(comp, "ncr_rclass", None),
+                getattr(comp, "mem_cap", None),
+                getattr(comp, "pu_index", None))
+
+    @classmethod
+    def _factor_kin(cls, a, b) -> bool:
+        return all(x is y for x, y in
+                   zip(cls._factor_state(a), cls._factor_state(b)))
+
     def _tables(self, comp) -> tuple[np.ndarray, np.ndarray]:
         """(beta per compiled rclass, mt-beta per compiled PU); cached per
         snapshot identity, so a topology mutation (new snapshot) rebuilds
-        them and stale coefficients can never leak across versions."""
+        them and stale coefficients can never leak across versions.
+        Bandwidth-only delta clones are rebased, not rebuilt."""
         cached = self._tables_cache
+        if cached is not None and cached[0] is not comp \
+                and self._factor_kin(cached[0], comp):
+            cached = (comp, cached[1])
+            self._tables_cache = cached
         if cached is None or cached[0] is not comp:
             p = self.params
             beta_vec = np.array([p.beta.get(rc, _DEFAULT_BETA)
@@ -709,6 +730,13 @@ class DecoupledSlowdown:
 
     def _canon_cache_dict(self, comp) -> dict:
         cached = self._canon_cache
+        if cached is not None and cached[0] is not comp \
+                and self._factor_kin(cached[0], comp):
+            # bandwidth-only delta clone: the canonical keys hash every
+            # value the kernel math reads, none of which changed — keep
+            # the warm factors instead of recomputing the whole fleet
+            cached = (comp, cached[1])
+            self._canon_cache = cached
         if cached is None or cached[0] is not comp:
             cached = (comp, {})
             self._canon_cache = cached

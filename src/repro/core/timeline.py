@@ -1008,6 +1008,17 @@ class TimelineEngine:
         """Compute jobs currently occupying a PU."""
         return int(sum(self.pu_running))
 
+    def next_event_time(self) -> float:
+        """Timestamp of the earliest pending event (compute finish,
+        transfer finish, or heap entry), ``inf`` at quiescence — the same
+        minimum :meth:`advance` computes before draining, so
+        ``next_event_time() > until`` means ``advance(until)`` would only
+        park the clock (serving loops use this to skip the call)."""
+        em = float(self.eta.min()) if len(self.eta) else np.inf
+        xm = float(self.xeta[:self.xn].min()) if self.xlive else np.inf
+        t_next = self.heap[0][0] if self.heap else np.inf
+        return min(em, xm, t_next)
+
     # -- main loop ----------------------------------------------------------
     def advance(self, until: float = np.inf) -> "TimelineEngine":
         """Drain every event with timestamp <= ``until``, then park the

@@ -116,6 +116,53 @@ class AdmissionController:
         return Decision.accept()
 
 
+@dataclass
+class AdaptiveWindow:
+    """Overload-adaptive admission coalescing for ``ServeLoop``.
+
+    Replaces a fixed ``batch_window`` with one that tracks *pressure*:
+    when the loop is idle every arrival is admitted on its own instant
+    (``min_window``, zero by default — no added queueing delay), and as
+    either the in-flight queue depth or the last wave's worst projected
+    slowdown rises toward its high-water mark the window widens linearly
+    toward ``max_window`` — waves grow exactly when batch amortization
+    pays and requests are waiting anyway.
+
+    ``window(depth, proj)`` is a pure function of its inputs, so wave
+    boundaries stay deterministic for a seeded arrival process.
+
+    Knobs:
+
+    ``max_window``
+        Widest coalescing window (seconds), reached at/beyond a
+        high-water mark.
+    ``depth_hi``
+        In-flight request count at which depth pressure alone saturates
+        the window.
+    ``proj_hi``
+        Projected completion/deadline ratio at which slowdown pressure
+        alone saturates the window (pressure starts at ratio 1.0 — a
+        projection at its deadline).
+    ``min_window``
+        Window when idle (default 0.0 — per-arrival admission).
+    """
+
+    max_window: float
+    depth_hi: int = 16
+    proj_hi: float = 2.0
+    min_window: float = 0.0
+
+    def window(self, depth: int, proj: float) -> float:
+        p_d = depth / self.depth_hi if self.depth_hi > 0 else 0.0
+        p_s = ((proj - 1.0) / (self.proj_hi - 1.0)
+               if self.proj_hi > 1.0 else 0.0)
+        press = max(p_d, p_s, 0.0)
+        if press <= 0.0:
+            return self.min_window
+        return self.min_window + (self.max_window - self.min_window) \
+            * min(1.0, press)
+
+
 def admit_all() -> AdmissionController:
     """Feasibility-only controller: admit everything the orchestrator can
     place at all, regardless of projected SLA."""

@@ -377,3 +377,35 @@ def test_sharded_slices_share_topology_after_bandwidth_delta():
     assert comp2._rt.topo is sh.routes.topo
     assert g.route_holder_copies == 0
     _route_parity(comp2, CompiledHWGraph(g), tb.edges + tb.servers)
+
+
+def test_overlay_compaction_bounds_dirty_on_long_runs():
+    """A long bandwidth-volatile run keeps the overlay bounded: once the
+    dirty-link set reaches the compaction threshold and no other snapshot
+    shares the topology layer, the overlay folds into it (counter bumps),
+    and pricing stays bit-identical to a fresh recompile."""
+    import gc
+
+    from repro.core import Churn
+    from repro.core.compiled import _OVERLAY_COMPACT_DIRTY, CompiledHWGraph
+    tb = build_testbed(edge_counts={"orin_agx": 40, "xavier_agx": 30},
+                       server_counts={"server1": 1})
+    g = tb.graph
+    s = tb.servers[0]
+    links = [f"link_{e}" for e in tb.edges]
+    assert len(links) > _OVERLAY_COMPACT_DIRTY
+    # materialize one route per edge so every uplink's link is crossed by
+    # a built row (deltas must overlay-copy, not zero-copy share)
+    for e in tb.edges:
+        g.compiled().transfer_time(e, s, 5e6)
+    c0 = g.route_overlay_compactions
+    peak = 0
+    for k, ln in enumerate(links):
+        gc.collect()      # drop dead sharers so sole ownership is exact
+        g.apply_churn(Churn(bandwidth=((ln, 4e6 + 1e3 * k),)))
+        peak = max(peak, len(g.compiled()._rt.dirty))
+    assert g.route_overlay_compactions > c0
+    assert peak <= _OVERLAY_COMPACT_DIRTY          # bounded, not monotone
+    assert len(g.compiled()._rt.dirty) < len(links)
+    _route_parity(g.compiled(), CompiledHWGraph(g),
+                  tb.edges[:6] + [tb.edges[-1], s])

@@ -450,3 +450,82 @@ def test_sharded_hwgraph_slicing():
             comp.sharded(bad2)
     with pytest.raises(ValueError):
         comp.sharded({"g1": [e], "g2": [e, *tb.servers]})
+
+
+# ---------------------------------------------------------------------------
+# Serving fast path (``REPRO_SERVE_FASTPATH``, default on): waves reuse one
+# session-resident batch context — persistent scan states, canonical factor
+# splices and incremental ledger views — instead of a cold per-wave rebuild,
+# and single-task waves take the fused walk too.  The contract is the same
+# bit-identical-decision parity as the fused walk itself, now across calls.
+
+
+def test_resident_context_matches_cold_walk(monkeypatch):
+    """Steady-state serving shape — a stream of single-task waves at
+    advancing release instants — mapped through one resident context
+    matches the cold per-wave object walk exactly."""
+    kinds = ["svm", "mlp", "svm", "dnn", "svm", "mlp", "render", "svm"]
+
+    def wl(tb):
+        return [[make_task(k, origin=tb.edges[i % len(tb.edges)],
+                           deadline=0.5, release_time=0.004 * i)]
+                for i, k in enumerate(kinds)]
+
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "1")
+    fast = _run_mode(monkeypatch, "fused", wl)
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "0")
+    cold = _run_mode(monkeypatch, "fused", wl)
+    _assert_parity(fast, cold)
+
+
+def test_resident_context_parity_across_bandwidth_churn(monkeypatch):
+    """A bandwidth-only delta between waves rebases the resident context
+    (comm caches drop, core scan state survives); a kill between waves
+    dirties the device.  Decisions still match the cold walk."""
+
+    def wl(tb):
+        return [[make_task("svm", origin=tb.edges[0], deadline=0.5,
+                           release_time=0.01 * i),
+                 make_task("mlp", origin=tb.edges[1], deadline=0.5,
+                           release_time=0.01 * i)]
+                for i in range(4)]
+
+    def churn(tb, i):
+        tb.graph.set_bandwidth(f"link_{tb.edges[1]}", 3e6 + 1e6 * i)
+
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "1")
+    fast = _run_mode(monkeypatch, "fused", wl, churn=churn)
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "0")
+    cold = _run_mode(monkeypatch, "fused", wl, churn=churn)
+    _assert_parity(fast, cold)
+
+
+def test_resident_context_identity_and_oracle_off(monkeypatch):
+    """The root orchestrator keeps one ``_BatchContext`` across
+    ``map_batch`` calls; ``REPRO_SERVE_FASTPATH=0`` restores the per-batch
+    cold behaviour (no resident state is retained at all)."""
+    monkeypatch.setenv("REPRO_FUSED_WALK", "1")
+    monkeypatch.setenv("REPRO_SHARDED_WALK", "0")
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "1")
+    tb = build_testbed(edge_counts={"orin_agx": 1, "orin_nano": 1},
+                       server_counts={"server1": 1})
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    root.map_batch([make_task("svm", origin=tb.edges[0], deadline=0.5)],
+                   now=0.0, route=True)
+    ctx = root._resident_ctx
+    assert ctx is not None
+    root.map_batch([make_task("mlp", origin=tb.edges[1], deadline=0.5)],
+                   now=0.01, route=True)
+    assert root._resident_ctx is ctx       # reused, not rebuilt
+    # bandwidth-only churn rebases the same context onto the new snapshot
+    tb.graph.set_bandwidth(f"link_{tb.edges[0]}", 5e6)
+    root.map_batch([make_task("svm", origin=tb.edges[0], deadline=0.5)],
+                   now=0.02, route=True)
+    assert root._resident_ctx is ctx
+    assert ctx.comp is tb.graph.compiled()
+    # the oracle switch disables residency entirely
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "0")
+    root2 = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    root2.map_batch([make_task("svm", origin=tb.edges[0], deadline=0.5)],
+                    now=0.0, route=True)
+    assert root2._resident_ctx is None

@@ -8,15 +8,15 @@ import numpy as np
 import pytest
 
 import repro.core.task as task_mod
-from repro.core import (DiurnalArrivals, PoissonArrivals, SchedulerSession,
-                        ServeLoop, TaskGraph, TenantSpec,
+from repro.core import (ClosedLoopClients, DiurnalArrivals, PoissonArrivals,
+                        SchedulerSession, ServeLoop, TaskGraph, TenantSpec,
                         build_orchestrators, build_testbed,
                         ground_truth_traverser, heye_traverser,
                         mining_workload, single_task_request, vr_workload)
 from repro.core.timeline import TimelineEngine
 from repro.core.topology import make_task
-from repro.serve.admission import (AdmissionController, Decision, Verdict,
-                                   admit_all)
+from repro.serve.admission import (AdaptiveWindow, AdmissionController,
+                                   Decision, Verdict, admit_all)
 
 TOL = 1e-9
 
@@ -528,3 +528,160 @@ def test_taskgraph_remove_drops_edges():
     assert len(g) == 1 and g.preds(b) == []
     g.remove(b)
     assert len(g) == 0
+
+
+# ---------------------------------------------------------------------------
+# small-wave serving fast path: whole-run oracle parity
+# ---------------------------------------------------------------------------
+def _serve_run(seed_uid, interventions=None, slack=4.0, horizon=0.3,
+               batch_window=0.0):
+    task_mod._task_counter = itertools.count(seed_uid)
+    tb = _testbed()
+    root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+    tenants = [
+        TenantSpec("mining", PoissonArrivals(rate=250, seed=21),
+                   single_task_request("svm", origin=tb.edges[0], sla=0.1),
+                   sla=0.1),
+        TenantSpec("vision", DiurnalArrivals(base_rate=60, peak_rate=180,
+                                             period=horizon, seed=22),
+                   single_task_request("mlp", origin=tb.edges[1], sla=0.15),
+                   sla=0.15),
+    ]
+    iv = []
+    if interventions is not None:
+        iv = [(t, fn(tb)) for t, fn in interventions]
+    loop = ServeLoop(tb.graph, root, tenants,
+                     truth=ground_truth_traverser(tb.graph, 0),
+                     admission=AdmissionController(slack=slack,
+                                                   defer_delay=0.005,
+                                                   max_defers=1),
+                     batch_window=batch_window,
+                     horizon=horizon, interventions=iv)
+    return loop.run()
+
+
+def _assert_request_parity(fast, cold, tol=TOL):
+    assert len(fast.requests) == len(cold.requests)
+    for a, b in zip(fast.requests, cold.requests):
+        assert a.verdict == b.verdict, a.rid
+        assert a.reject_reason == b.reject_reason, a.rid
+        if np.isnan(a.finish) and np.isnan(b.finish):
+            continue
+        assert a.finish == pytest.approx(b.finish, abs=tol, rel=tol), a.rid
+
+
+@pytest.mark.parametrize("slack", [4.0, 0.35])
+def test_serve_fastpath_oracle_parity(monkeypatch, slack):
+    """The session-resident fast path reproduces the cold per-wave walk
+    request for request — verdicts, reject reasons and finish times to
+    1e-9 — for both an all-accept mix and a tight-slack mix that
+    exercises refusal and withdraw."""
+    fast = _serve_run(730_000, slack=slack)
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "0")
+    cold = _serve_run(730_000, slack=slack)
+    assert fast.requests and fast.engine_opens == 1
+    if slack == 0.35:      # the tight mix must actually refuse something
+        assert any(r.verdict == "rejected" for r in fast.requests)
+    _assert_request_parity(fast, cold)
+
+
+def test_serve_fastpath_parity_with_churn(monkeypatch):
+    """Mid-run churn (death + revival under live traffic) invalidates
+    exactly the persistent state it must: the fast path still matches
+    the oracle walk whole-run."""
+    iv = [(0.08, lambda tb: (lambda e=tb.edges[1]:
+                             tb.graph.mark_dead(e))),
+          (0.18, lambda tb: (lambda e=tb.edges[1]:
+                             tb.graph.mark_alive(e)))]
+    fast = _serve_run(740_000, interventions=iv)
+    monkeypatch.setenv("REPRO_SERVE_FASTPATH", "0")
+    cold = _serve_run(740_000, interventions=iv)
+    assert fast.engine_opens == 1
+    _assert_request_parity(fast, cold)
+
+
+# ---------------------------------------------------------------------------
+# overload-adaptive admission coalescing
+# ---------------------------------------------------------------------------
+def test_adaptive_window_math():
+    w = AdaptiveWindow(max_window=0.01, depth_hi=10, proj_hi=2.0)
+    assert w.window(0, 0.0) == 0.0                 # idle -> per-arrival
+    assert w.window(0, 1.0) == 0.0                 # at-deadline: no pressure
+    assert w.window(5, 0.0) == pytest.approx(0.005)
+    assert w.window(10, 0.0) == pytest.approx(0.01)
+    assert w.window(40, 0.0) == pytest.approx(0.01)    # capped
+    assert w.window(0, 1.5) == pytest.approx(0.005)    # slowdown pressure
+    assert w.window(0, 3.0) == pytest.approx(0.01)
+    # max of the two pressures, not the sum
+    assert w.window(5, 1.5) == pytest.approx(0.005)
+    lo = AdaptiveWindow(max_window=0.01, min_window=0.002)
+    assert lo.window(0, 0.0) == 0.002
+
+
+def test_adaptive_window_loop_deterministic():
+    """Adaptive coalescing keeps the loop deterministic: same seeds give
+    identical wave boundaries and outcomes, and pressure actually widens
+    waves beyond one request under load."""
+    bw = AdaptiveWindow(max_window=0.01, depth_hi=4)
+    a = _serve_run(750_000, batch_window=bw, slack=float("inf"))
+    b = _serve_run(750_000, batch_window=bw, slack=float("inf"))
+    assert a.wave_sizes == b.wave_sizes
+    assert [r.verdict for r in a.requests] == \
+        [r.verdict for r in b.requests]
+    assert [r.finish for r in a.accepted] == [r.finish for r in b.accepted]
+    assert max(a.wave_sizes) > 1           # pressure coalesced something
+    # every arrival pops in exactly one wave; each deferral re-pops once
+    assert sum(a.wave_sizes) == len(a.requests) + a.deferrals
+
+
+# ---------------------------------------------------------------------------
+# closed-loop clients
+# ---------------------------------------------------------------------------
+def test_closed_loop_clients_validation_and_streams():
+    with pytest.raises(ValueError):
+        ClosedLoopClients(clients=0, think_mean=0.1)
+    with pytest.raises(ValueError):
+        ClosedLoopClients(clients=2, think_mean=0.0)
+    c = ClosedLoopClients(clients=8, think_mean=0.05, seed=3)
+    first = c.initial_arrivals(10.0)
+    assert len(first) == 8 and all(t >= 0.0 for t, _ in first)
+    d1 = c.think(0)
+    # re-seeding restores every substream: same first arrivals, same draws
+    again = c.initial_arrivals(10.0)
+    assert again == first
+    assert c.think(0) == d1
+
+
+def test_closed_loop_serving_deterministic_and_self_clocked():
+    """A closed-loop population issues its next request only after the
+    previous one completes (or is refused): two runs replay identically
+    and per-client request streams never overlap in time."""
+    def once():
+        task_mod._task_counter = itertools.count(760_000)
+        tb = _testbed()
+        root = build_orchestrators(tb.graph, heye_traverser(tb.graph))
+        tenants = [TenantSpec(
+            "cl", ClosedLoopClients(clients=6, think_mean=0.02, seed=7),
+            single_task_request("svm", origin=tb.edges[0], sla=0.2),
+            sla=0.2)]
+        loop = ServeLoop(tb.graph, root, tenants,
+                         truth=ground_truth_traverser(tb.graph, 0),
+                         admission=admit_all(), horizon=0.4)
+        return loop.run()
+    a = once()
+    b = once()
+    assert len(a.requests) > 6              # completions spawned new ones
+    assert a.engine_opens == 1
+    assert [r.verdict for r in a.requests] == \
+        [r.verdict for r in b.requests]
+    assert [(r.client, r.arrival, r.finish) for r in a.requests] == \
+        [(r.client, r.arrival, r.finish) for r in b.requests]
+    # per client: next arrival only after the previous request resolved
+    by_client: dict = {}
+    for r in sorted(a.requests, key=lambda r: r.arrival):
+        by_client.setdefault(r.client, []).append(r)
+    for reqs in by_client.values():
+        for prev, nxt in zip(reqs, reqs[1:]):
+            bound = prev.finish if prev.finish == prev.finish \
+                else prev.arrival
+            assert nxt.arrival >= bound - TOL

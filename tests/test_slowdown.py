@@ -164,3 +164,31 @@ def test_small_pool_crossover_bit_equal(tb):
             want = sd._factor_batch_arrays(comp, P, U, M, uid, distinct=True)
             assert got.tolist() == want.tolist()
             assert np.all(got >= 1.0)
+
+
+def test_factor_caches_rebase_across_bandwidth_delta():
+    """A bandwidth-only ``apply_churn`` yields a kin snapshot (all factor
+    columns shared by identity): the per-snapshot beta tables and the
+    canonical factor cache carry over verbatim instead of rebuilding.  A
+    fresh full compile (new columns, no kinship) still rebuilds both."""
+    from repro.core import Churn
+    from repro.core.compiled import CompiledHWGraph
+    tbx = build_testbed(edge_counts={"orin_agx": 1},
+                        server_counts={"server1": 1})
+    g = tbx.graph
+    sd = DecoupledSlowdown(g, heye_params())
+    comp = g.compiled()
+    tables = sd._tables(comp)
+    canon = sd._canon_cache_dict(comp)
+    canon["probe"] = 1.0
+    g.apply_churn(Churn(bandwidth=((f"link_{tbx.edges[0]}", 2e6),)))
+    comp2 = g.compiled()
+    assert comp2 is not comp                 # delta clone: a new snapshot
+    assert sd._factor_kin(comp, comp2)       # ...sharing every factor column
+    assert sd._tables(comp2) is tables       # rebased, not rebuilt
+    d2 = sd._canon_cache_dict(comp2)
+    assert d2 is canon and d2["probe"] == 1.0
+    fresh = CompiledHWGraph(g)               # full rebuild: no kinship
+    assert not sd._factor_kin(comp2, fresh)
+    assert sd._tables(fresh) is not tables
+    assert "probe" not in sd._canon_cache_dict(fresh)
